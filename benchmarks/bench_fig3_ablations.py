@@ -1,0 +1,62 @@
+"""Figure 3 analogue: per-optimization ablations.
+
+For each paper optimization (§4.1.2-4.1.6 are hardware-independent and ported
+verbatim; §4.1.1/4.1.9's TPU analogues are the ELL widths / kernel path), run
+the alternatives over the graph suite and report geometric-mean relative
+runtime and arithmetic-mean relative modularity — the paper's exact protocol
+(5 runs, geomean runtime / mean modularity, expressed vs the default)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit_csv, geomean, graph_suite, time_fn
+from repro.core.louvain import LouvainConfig, louvain, louvain_modularity
+
+ABLATIONS = {
+    # paper default                        alternative(s)
+    "max_iterations": [("20 (paper)", {"max_iterations": 20}),
+                       ("100", {"max_iterations": 100})],
+    "tolerance_drop": [("10 (paper)", {"tolerance_drop": 10.0}),
+                       ("1 (disabled)", {"tolerance_drop": 1.0})],
+    "initial_tolerance": [("0.01 (paper)", {"initial_tolerance": 0.01}),
+                          ("1e-6", {"initial_tolerance": 1e-6})],
+    "aggregation_tolerance": [("0.8 (paper)", {"aggregation_tolerance": 0.8}),
+                              ("1.0 (disabled)",
+                               {"aggregation_tolerance": 1.0})],
+    "vertex_pruning": [("on (paper)", {"use_pruning": True}),
+                       ("off", {"use_pruning": False})],
+    "scan_path": [("sort-reduce", {"use_ell_kernel": False}),
+                  ("ELL kernel (Far-KV analogue)", {"use_ell_kernel": True})],
+}
+
+
+def run(small: bool = True, repeats: int = 2):
+    graphs = graph_suite(small=small)
+    rows = []
+    for opt_name, variants in ABLATIONS.items():
+        base_times, base_qs = None, None
+        for label, overrides in variants:
+            cfg = LouvainConfig(**overrides)
+            times, qs = [], []
+            for gname, g in graphs.items():
+                dt, res = time_fn(louvain, g, cfg, repeats=repeats)
+                times.append(dt)
+                qs.append(louvain_modularity(g, res))
+            if base_times is None:
+                base_times, base_qs = times, qs
+            rel_t = geomean(t / b for t, b in zip(times, base_times))
+            rel_q = float(np.mean([q / max(b, 1e-9)
+                                   for q, b in zip(qs, base_qs)]))
+            rows.append({"optimization": opt_name, "variant": label,
+                         "rel_runtime": round(rel_t, 3),
+                         "rel_modularity": round(rel_q, 4)})
+    emit_csv(rows, ["optimization", "variant", "rel_runtime",
+                    "rel_modularity"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(small=False, repeats=3)

@@ -1,0 +1,62 @@
+"""Figure 5 analogue: runtime, speedup, and modularity vs baselines.
+
+Baselines available offline: networkx louvain_communities (the NetworKit
+stand-in: sequential asynchronous Louvain) and a pure-Python sequential
+reference.  Reports runtime (s), speedup of GVE-JAX over each baseline,
+edges/s throughput, and modularity of all implementations."""
+
+from __future__ import annotations
+
+import time
+
+import networkx as nx
+import numpy as np
+
+from benchmarks.common import emit_csv, graph_suite, time_fn
+from repro.core.graph import CSRGraph
+from repro.core.louvain import LouvainConfig, louvain, louvain_modularity
+
+
+def _to_networkx(g: CSRGraph) -> "nx.Graph":
+    src = np.asarray(g.src)
+    dst = np.asarray(g.indices)
+    w = np.asarray(g.weights)
+    live = (src < g.n_cap) & (src <= dst)
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(int(g.n_valid)))
+    nxg.add_weighted_edges_from(
+        zip(src[live].tolist(), dst[live].tolist(), w[live].tolist()))
+    return nxg
+
+
+def run(small: bool = True, repeats: int = 2):
+    graphs = graph_suite(small=small)
+    rows = []
+    for gname, g in graphs.items():
+        nxg = _to_networkx(g)
+        n_e = int(g.e_valid)
+
+        t_ours, res = time_fn(louvain, g, LouvainConfig(), repeats=repeats)
+        q_ours = louvain_modularity(g, res)
+
+        t_nx, com = time_fn(
+            nx.algorithms.community.louvain_communities, nxg, seed=0,
+            repeats=repeats)
+        q_nx = nx.algorithms.community.modularity(nxg, com)
+
+        rows.append({
+            "graph": gname, "V": int(g.n_valid), "E": n_e,
+            "t_gve_jax_s": round(t_ours, 4),
+            "t_networkx_s": round(t_nx, 4),
+            "speedup_vs_networkx": round(t_nx / t_ours, 2),
+            "edges_per_s": int(n_e / t_ours),
+            "Q_gve_jax": round(q_ours, 4), "Q_networkx": round(q_nx, 4),
+        })
+    emit_csv(rows, ["graph", "V", "E", "t_gve_jax_s", "t_networkx_s",
+                    "speedup_vs_networkx", "edges_per_s", "Q_gve_jax",
+                    "Q_networkx"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(small=False, repeats=3)

@@ -1,0 +1,34 @@
+"""Figure 6 analogue: phase split (local-moving / aggregation / others) and
+pass split (first pass vs rest) per graph."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit_csv, graph_suite
+from repro.core.louvain import LouvainConfig, louvain
+
+
+def run(small: bool = True):
+    graphs = graph_suite(small=small)
+    rows = []
+    for gname, g in graphs.items():
+        res = louvain(g, LouvainConfig())
+        lm = sum(p.phase_seconds["local_move"] for p in res.passes)
+        ag = sum(p.phase_seconds["aggregate"] for p in res.passes)
+        ot = sum(p.phase_seconds["other"] for p in res.passes)
+        tot = max(lm + ag + ot, 1e-12)
+        first = res.passes[0].seconds
+        all_p = max(sum(p.seconds for p in res.passes), 1e-12)
+        rows.append({
+            "graph": gname, "passes": res.n_passes,
+            "local_move_frac": round(lm / tot, 3),
+            "aggregate_frac": round(ag / tot, 3),
+            "other_frac": round(ot / tot, 3),
+            "first_pass_frac": round(first / all_p, 3),
+        })
+    emit_csv(rows, ["graph", "passes", "local_move_frac", "aggregate_frac",
+                    "other_frac", "first_pass_frac"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(small=False)

@@ -1,0 +1,25 @@
+"""Figure 7 analogue: runtime / |E| factor per graph (the paper's observation:
+low-degree and poorly-clustered graphs cost more per edge)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit_csv, graph_suite, time_fn
+from repro.core.louvain import LouvainConfig, louvain
+
+
+def run(small: bool = True, repeats: int = 2):
+    graphs = graph_suite(small=small)
+    rows = []
+    for gname, g in graphs.items():
+        dt, res = time_fn(louvain, g, LouvainConfig(), repeats=repeats)
+        e = int(g.e_valid)
+        deg = e / max(int(g.n_valid), 1)
+        rows.append({"graph": gname, "E": e, "avg_degree": round(deg, 2),
+                     "runtime_s": round(dt, 4),
+                     "ns_per_edge": round(1e9 * dt / e, 1)})
+    emit_csv(rows, ["graph", "E", "avg_degree", "runtime_s", "ns_per_edge"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(small=False, repeats=3)

@@ -1,0 +1,62 @@
+"""Shared benchmark infrastructure: the graph suite (the paper's dataset
+*families* at laptop scale — SuiteSparse itself is not available offline),
+timing helpers, and CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.data import powerlaw_cluster, rmat_graph, sbm_graph
+
+
+def graph_suite(small: bool = False) -> Dict[str, CSRGraph]:
+    """Five graphs mirroring Table 1's families: web (R-MAT power-law),
+    social (powerlaw-cluster), community-structured (SBM), road (2D grid),
+    k-mer (low-degree chains)."""
+    import networkx as nx
+    from repro.core.graph import from_networkx
+
+    scale = 9 if small else 11
+    n_grid = 24 if small else 48
+    n_sbm = (8, 24) if small else (16, 48)
+
+    web = rmat_graph(scale, edge_factor=8, seed=0)
+    social, _ = powerlaw_cluster(300 if small else 1500, 6, 0.5, seed=1)
+    sbm, _ = sbm_graph(*n_sbm, p_in=0.25, p_out=0.004, seed=2)
+    road = from_networkx(nx.grid_2d_graph(n_grid, n_grid))
+    # k-mer-like: union of long paths (avg degree ~2)
+    kmer_nx = nx.Graph()
+    rng = np.random.default_rng(3)
+    base = 0
+    for _ in range(20 if small else 60):
+        ln = int(rng.integers(20, 60))
+        kmer_nx.add_edges_from((base + i, base + i + 1) for i in range(ln))
+        base += ln + 1
+    kmer = from_networkx(kmer_nx)
+    return {"rmat_web": web, "powerlaw_social": social, "sbm": sbm,
+            "grid_road": road, "kmer_paths": kmer}
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, **kw):
+    """(best_seconds, last_result) — best-of-N like the paper's 5-run mean."""
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def emit_csv(rows: List[dict], header: List[str]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=float)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))

@@ -1,0 +1,61 @@
+"""§Roofline table builder: reads the dry-run JSONs from results/dryrun and
+emits the per-(arch x shape) roofline terms as CSV + markdown."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import emit_csv
+
+
+def load_records(out_dir: str = "results/dryrun",
+                 mesh: str = "16x16") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*_{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(out_dir: str = "results/dryrun", mesh: str = "16x16",
+        markdown: bool = False):
+    rows = []
+    for rec in load_records(out_dir, mesh):
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "bottleneck": "FAILED: " + rec.get("error", "?")})
+            continue
+        r = rec["roofline"]
+        mf = rec.get("model_flops") or 0
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "t_compute_s": f"{r['t_compute_s']:.3e}",
+            "t_memory_s": f"{r['t_memory_s']:.3e}",
+            "t_collective_s": f"{r['t_collective_s']:.3e}",
+            "bottleneck": r["bottleneck"],
+            "model_flops": f"{mf:.3e}" if mf else "",
+            "useful_ratio": (f"{rec['useful_flops_ratio']:.3f}"
+                             if rec.get("useful_flops_ratio") else ""),
+            "hbm_per_chip_gb": (
+                f"{rec['memory'].get('temp_size_in_bytes', 0) / 1e9:.2f}"
+                if rec.get("memory") else ""),
+        })
+    header = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+              "bottleneck", "model_flops", "useful_ratio", "hbm_per_chip_gb"]
+    if markdown:
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+        for r in rows:
+            print("| " + " | ".join(str(r.get(h, "")) for h in header) + " |")
+    else:
+        emit_csv(rows, header)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(markdown="--md" in sys.argv,
+        mesh="2x16x16" if "--multipod" in sys.argv else "16x16")

@@ -1,0 +1,78 @@
+"""Benchmark driver — one section per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run           # small suite (CI)
+    PYTHONPATH=src python -m benchmarks.run --full    # paper-scale suite
+
+Sections:
+    fig3  optimization ablations (rel. runtime / rel. modularity)
+    fig5  runtime + speedup + modularity vs networkx Louvain
+    fig6  phase split / pass split
+    fig7  runtime per edge
+    fig8  strong scaling (device-count structural scaling)
+    roofline  per-(arch x shape) table from the dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale graphs + 3 repeats (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig3,fig5,fig6,fig7,fig8,"
+                         "roofline")
+    args = ap.parse_args()
+    small = not args.full
+    repeats = 3 if args.full else 2
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    t0 = time.perf_counter()
+    if want("fig3"):
+        print("== fig3: optimization ablations "
+              "(relative to the paper's defaults) ==")
+        from benchmarks import bench_fig3_ablations
+        bench_fig3_ablations.run(small=small, repeats=repeats)
+        print()
+    if want("fig5"):
+        print("== fig5: runtime / speedup / modularity vs networkx ==")
+        from benchmarks import bench_fig5_runtime
+        bench_fig5_runtime.run(small=small, repeats=repeats)
+        print()
+    if want("fig6"):
+        print("== fig6: phase and pass split ==")
+        from benchmarks import bench_fig6_phase_split
+        bench_fig6_phase_split.run(small=small)
+        print()
+    if want("fig7"):
+        print("== fig7: runtime per edge ==")
+        from benchmarks import bench_fig7_edge_factor
+        bench_fig7_edge_factor.run(small=small, repeats=repeats)
+        print()
+    if want("fig8"):
+        print("== fig8: strong scaling (structural, 1..8 host devices) ==")
+        from benchmarks import bench_fig8_scaling
+        bench_fig8_scaling.run(max_devices=8)
+        print()
+    if want("roofline"):
+        print("== roofline: dry-run artifacts (single-pod) ==")
+        import os
+        if os.path.isdir("results/dryrun"):
+            from benchmarks import roofline
+            roofline.run()
+        else:
+            print("(results/dryrun not found — run "
+                  "`python -m repro.launch.dryrun --all` first)")
+        print()
+    print(f"benchmarks done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

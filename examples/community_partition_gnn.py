@@ -1,0 +1,82 @@
+"""The paper's technique as a framework feature: Louvain-driven graph
+partitioning for distributed GNN training.
+
+Detects communities on a modular graph, packs them onto N devices
+(community-balanced bin packing), and compares the edge-cut — the proxy for
+cross-device gather traffic in full-graph GNN training — against random
+placement.  Then trains a GIN on the reordered graph for a few steps.
+
+    PYTHONPATH=src python examples/community_partition_gnn.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+
+from repro.core.graph import from_networkx
+from repro.core.partition import louvain_partition, random_partition
+from repro.models.gnn import gin
+from repro.models.gnn.common import GraphBatch
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+N_DEVICES = 8
+
+# A social-like modular graph.
+nxg = nx.connected_caveman_graph(24, 12)
+graph = from_networkx(nxg)
+n = int(graph.n_valid)
+print(f"graph: {n} vertices, {int(graph.e_valid)} directed edges")
+
+# --- partition quality: Louvain vs random ----------------------------------
+t0 = time.perf_counter()
+lp = louvain_partition(graph, N_DEVICES)
+t_louvain = time.perf_counter() - t0
+rp = random_partition(graph, N_DEVICES)
+print(f"louvain partition : cut {lp.cut_edges}/{lp.total_edges} "
+      f"({100 * lp.cut_fraction:.1f}%), balance {lp.balance:.2f}, "
+      f"{t_louvain * 1e3:.0f} ms")
+print(f"random partition  : cut {rp.cut_edges}/{rp.total_edges} "
+      f"({100 * rp.cut_fraction:.1f}%), balance {rp.balance:.2f}")
+print(f"gather-traffic reduction: "
+      f"{rp.cut_fraction / max(lp.cut_fraction, 1e-9):.1f}x")
+
+# --- train a GIN node classifier on the community-reordered graph ----------
+# Labels: the communities themselves (self-supervised sanity task).
+perm = lp.order                       # community-contiguous vertex order
+inv = np.argsort(perm)
+src = inv[np.asarray(graph.src)[: int(graph.e_valid)]]
+dst = inv[np.asarray(graph.indices)[: int(graph.e_valid)]]
+labels = lp.assignment[perm]
+
+cfg = gin.GINConfig(n_layers=3, d_hidden=32, d_feat=8,
+                    n_classes=N_DEVICES)
+key = jax.random.PRNGKey(0)
+batch = GraphBatch(
+    node_feat=jax.random.normal(key, (n, 8)),
+    edge_src=jnp.asarray(src, jnp.int32),
+    edge_dst=jnp.asarray(dst, jnp.int32),
+    n_nodes=jnp.int32(n),
+    labels=jnp.asarray(labels, jnp.int32),
+    graph_id=jnp.zeros((n,), jnp.int32), n_graphs=jnp.int32(1))
+
+params = gin.init_params(cfg, key)
+opt = adamw_init(params)
+ocfg = AdamWConfig(lr=5e-3)
+
+
+@jax.jit
+def step(p, o):
+    loss, g = jax.value_and_grad(
+        lambda q: gin.loss_fn(cfg, q, batch))(p)
+    p, o, _ = adamw_update(ocfg, p, g, o)
+    return p, o, loss
+
+
+print("\ntraining GIN on the partitioned graph:")
+for s in range(60):
+    params, opt, loss = step(params, opt)
+    if s % 10 == 0 or s == 59:
+        print(f"  step {s:3d}  loss {float(loss):.4f}")

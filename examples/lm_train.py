@@ -1,0 +1,74 @@
+"""End-to-end LM training driver: a ~100M-param qwen2-style model for a few
+hundred steps on synthetic data, through the fault-tolerant training loop
+(checkpoint/resume + straggler detection + optional gradient compression).
+
+    PYTHONPATH=src python examples/lm_train.py [--steps 200] [--params 100]
+"""
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.data.tokens import synthetic_token_batches
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, CompressionConfig
+from repro.train.loop import TrainLoopConfig, train
+
+
+def make_config(target_m_params: int) -> tf.TransformerConfig:
+    """A qwen2-shaped config scaled to ~target_m_params million params."""
+    if target_m_params >= 100:
+        d, L, v = 640, 10, 48000           # ~92M (+biases/norms ~ 100M tier)
+    elif target_m_params >= 20:
+        d, L, v = 256, 6, 16000
+    else:
+        d, L, v = 128, 4, 2000
+    return tf.TransformerConfig(
+        name=f"lm-{target_m_params}m", n_layers=L, d_model=d,
+        n_heads=max(d // 64, 2), n_kv_heads=max(d // 128, 1), d_head=64,
+        d_ff=d * 4, vocab=v, qkv_bias=True, tie_embeddings=True,
+        dtype="float32", remat=False)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--params", type=int, default=100,
+                    help="target size in millions (100 -> ~100M)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "int8"])
+    args = ap.parse_args()
+
+    cfg = make_config(args.params)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  {n_params / 1e6:.1f}M params "
+          f"(L={cfg.n_layers} d={cfg.d_model} v={cfg.vocab})")
+
+    batches = synthetic_token_batches(cfg.vocab, args.batch, args.seq)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        params, metrics = train(
+            lambda p, b: tf.loss_fn(cfg, p, b), params, iter(batches),
+            AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps),
+            TrainLoopConfig(total_steps=args.steps,
+                            log_every=max(args.steps // 20, 1),
+                            ckpt_every=max(args.steps // 4, 1),
+                            ckpt_dir=ckpt_dir),
+            comp_cfg=CompressionConfig(scheme=args.compression))
+
+    hist = metrics["history"]
+    print(f"\nloss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {args.steps} steps  "
+          f"(stragglers flagged: {metrics['n_stragglers']})")
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"{h['sec'] * 1e3:6.0f} ms/step")
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print("OK: loss decreased.")
+
+
+if __name__ == "__main__":
+    main()

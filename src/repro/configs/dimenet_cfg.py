@@ -1,0 +1,74 @@
+"""dimenet [gnn]: 6 blocks, d_hidden=128, n_bilinear=8, n_spherical=7,
+n_radial=6 — directional message passing over triplets.  [arXiv:2003.03123]
+
+Graph-level regression everywhere (DimeNet's native task).  Non-geometric
+shapes use stub positions; triplet lists are capacity-capped on the web-scale
+shapes (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gnn_common import GNNArch, GNNShape
+from repro.models.gnn import dimenet
+from repro.models.gnn.common import GraphBatch
+
+
+def _config(sh: GNNShape, smoke: bool) -> dimenet.DimeNetConfig:
+    if smoke:
+        return dimenet.DimeNetConfig(
+            name="dimenet-smoke", n_blocks=2, d_hidden=16, n_bilinear=4,
+            n_spherical=3, n_radial=4, d_feat=sh.d_feat)
+    return dimenet.DimeNetConfig(
+        name="dimenet", n_blocks=6, d_hidden=128, n_bilinear=8,
+        n_spherical=7, n_radial=6, d_feat=sh.d_feat)
+
+
+def _loss(cfg: dimenet.DimeNetConfig, sh: GNNShape, shape_name: str):
+    if sh.kind == "full":
+        def loss(params, batch):
+            n_pad = batch["node_feat"].shape[0]
+            g = GraphBatch(
+                node_feat=batch["node_feat"], edge_src=batch["edge_src"],
+                edge_dst=batch["edge_dst"], n_nodes=jnp.int32(sh.n_nodes),
+                labels=batch["labels"],
+                graph_id=jnp.zeros((n_pad,), jnp.int32),
+                n_graphs=jnp.int32(1), positions=batch["positions"])
+            pred = dimenet.forward(cfg, params, g, batch["t_kj"],
+                                   batch["t_ji"])        # (n_pad, 1)
+            return jnp.mean(jnp.square(pred[0, 0] - batch["labels"][0]))
+        return loss
+
+    def one(params, nf, es, ed, pos, tkj, tji):
+        g = GraphBatch(node_feat=nf, edge_src=es, edge_dst=ed,
+                       n_nodes=jnp.int32(sh.n_nodes),
+                       labels=jnp.zeros((sh.n_nodes,), jnp.float32),
+                       graph_id=jnp.zeros((sh.n_nodes,), jnp.int32),
+                       n_graphs=jnp.int32(1), positions=pos)
+        return dimenet.forward(cfg, params, g, tkj, tji)[0, 0]
+
+    def loss(params, batch):
+        pred = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+            params, batch["node_feat"], batch["edge_src"],
+            batch["edge_dst"], batch["positions"], batch["t_kj"],
+            batch["t_ji"])                                # (B,)
+        return jnp.mean(jnp.square(pred - batch["labels"]))
+    return loss
+
+
+ARCH = GNNArch(
+    arch_id="dimenet",
+    needs_positions=True,
+    needs_triplets=True,
+    label_kind="graph",
+    make_config=_config,
+    make_loss=_loss,
+    make_params=lambda cfg, key: dimenet.init_params(cfg, key),
+    make_param_specs=lambda cfg: jax.eval_shape(
+        functools.partial(dimenet.init_params, cfg), jax.random.PRNGKey(0)),
+    skip_notes={},
+)

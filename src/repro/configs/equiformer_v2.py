@@ -1,0 +1,95 @@
+"""equiformer-v2 [gnn]: 12 layers, d_hidden=128 sphere channels, l_max=6,
+m_max=2, 8 heads — SO(2)-eSCN equivariant graph attention.
+[arXiv:2306.12059; unverified]
+
+Node classification on full/sampled shapes (node head over the l=0 channel),
+energy regression on `molecule`.  Positions are required (stubbed for the
+non-geometric shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gnn_common import GNNArch, GNNShape
+from repro.models.gnn import equiformer
+from repro.models.gnn.common import GraphBatch, node_ce_loss
+
+
+def _config(sh: GNNShape, smoke: bool) -> equiformer.EquiformerConfig:
+    node_level = sh.kind != "molecule"
+    out = sh.n_classes if node_level else 1
+    if smoke:
+        return equiformer.EquiformerConfig(
+            name="equiformer-v2-smoke", n_layers=2, d_hidden=16, l_max=2,
+            m_max=1, n_heads=2, d_feat=sh.d_feat, out_dim=out,
+            node_level=node_level)
+    return equiformer.EquiformerConfig(
+        name="equiformer-v2", n_layers=12, d_hidden=128, l_max=6, m_max=2,
+        n_heads=8, d_feat=sh.d_feat, out_dim=out, node_level=node_level)
+
+
+def _loss(cfg: equiformer.EquiformerConfig, sh: GNNShape, shape_name: str):
+    if sh.kind == "full":
+        def loss(params, batch):
+            n_pad = batch["node_feat"].shape[0]
+            g = GraphBatch(
+                node_feat=batch["node_feat"], edge_src=batch["edge_src"],
+                edge_dst=batch["edge_dst"], n_nodes=jnp.int32(sh.n_nodes),
+                labels=batch["labels"],
+                graph_id=jnp.zeros((n_pad,), jnp.int32),
+                n_graphs=jnp.int32(1), positions=batch["positions"])
+            logits = equiformer.forward(cfg, params, g)
+            mask = (jnp.arange(n_pad) < sh.n_nodes).astype(jnp.float32)
+            return node_ce_loss(logits, batch["labels"], mask)
+        return loss
+
+    if sh.kind == "blocks":
+        def one(params, nf, es, ed, pos, lab):
+            g = GraphBatch(node_feat=nf, edge_src=es, edge_dst=ed,
+                           n_nodes=jnp.int32(sh.n_nodes), labels=lab,
+                           graph_id=jnp.zeros((sh.n_nodes,), jnp.int32),
+                           n_graphs=jnp.int32(1), positions=pos)
+            logits = equiformer.forward(cfg, params, g)
+            mask = (jnp.arange(sh.n_nodes) < sh.n_seeds).astype(jnp.float32)
+            return node_ce_loss(logits, lab, mask)
+
+        def loss(params, batch):
+            per = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0))(
+                params, batch["node_feat"], batch["edge_src"],
+                batch["edge_dst"], batch["positions"], batch["labels"])
+            return jnp.mean(per)
+        return loss
+
+    # molecule: per-graph energy regression.
+    def one_g(params, nf, es, ed, pos):
+        g = GraphBatch(node_feat=nf, edge_src=es, edge_dst=ed,
+                       n_nodes=jnp.int32(sh.n_nodes),
+                       labels=jnp.zeros((sh.n_nodes,), jnp.float32),
+                       graph_id=jnp.zeros((sh.n_nodes,), jnp.int32),
+                       n_graphs=jnp.int32(1), positions=pos)
+        return equiformer.forward(cfg, params, g)[0, 0]
+
+    def loss(params, batch):
+        pred = jax.vmap(one_g, in_axes=(None, 0, 0, 0, 0))(
+            params, batch["node_feat"], batch["edge_src"],
+            batch["edge_dst"], batch["positions"])
+        return jnp.mean(jnp.square(pred - batch["labels"]))
+    return loss
+
+
+ARCH = GNNArch(
+    arch_id="equiformer-v2",
+    needs_positions=True,
+    needs_triplets=False,
+    label_kind="node",
+    label_kind_overrides={"molecule": "graph"},
+    make_config=_config,
+    make_loss=_loss,
+    make_params=lambda cfg, key: equiformer.init_params(cfg, key),
+    make_param_specs=lambda cfg: jax.eval_shape(
+        functools.partial(equiformer.init_params, cfg), jax.random.PRNGKey(0)),
+)

@@ -1,0 +1,154 @@
+"""fm [recsys]: factorization machine, 39 sparse fields, embed_dim=10,
+pairwise interactions via the O(nk) sum-square trick.  [ICDM'10 (Rendle)]
+
+Shapes: train_batch (B=65,536 training), serve_p99 (B=512 online),
+serve_bulk (B=262,144 offline scoring), retrieval_cand (1 query vs 10^6
+candidates, single batched matvec).
+
+Embedding tables (~33M rows x 10) are row-sharded over the `model` mesh axis;
+the batch is data-parallel over the dp axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import recsys
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.adamw import AdamWState
+from repro.sharding.rules import dp_axes, fm_param_pspecs
+
+I32, F32 = jnp.int32, jnp.float32
+
+# (batch, kind); retrieval_cand carries n_candidates.
+FM_SHAPES: Dict[str, Tuple[int, str]] = {
+    "train_batch": (65536, "train"),
+    "serve_p99": (512, "serve"),
+    "serve_bulk": (262144, "serve"),
+    "retrieval_cand": (1, "retrieval"),
+}
+N_CANDIDATES = 1_000_000
+# Candidate array padded to divide every mesh flattening (valid prefix = 1M).
+N_CANDIDATES_PAD = -(-N_CANDIDATES // 512) * 512
+
+SMOKE_VOCABS = tuple([64, 48, 32, 24, 16, 12, 8, 8] + [4] * 31)  # 39 fields
+
+
+def full_config() -> recsys.FMConfig:
+    return recsys.FMConfig(name="fm", n_fields=39, embed_dim=10)
+
+
+def smoke_config() -> recsys.FMConfig:
+    return recsys.FMConfig(name="fm-smoke", n_fields=39, embed_dim=10,
+                           vocab_sizes=SMOKE_VOCABS)
+
+
+def fm_input_specs(cfg: recsys.FMConfig, shape: str,
+                   smoke: bool = False) -> dict:
+    batch, kind = FM_SHAPES[shape]
+    if smoke:
+        batch = min(batch, 32)
+    S = jax.ShapeDtypeStruct
+    if kind == "train":
+        return {"field_ids": S((batch, cfg.n_fields), I32),
+                "labels": S((batch,), I32)}
+    if kind == "serve":
+        return {"field_ids": S((batch, cfg.n_fields), I32)}
+    n_cand = 1024 if smoke else N_CANDIDATES_PAD
+    return {"user_fields": S((1, cfg.n_fields), I32),
+            "cand_rows": S((n_cand,), I32)}
+
+
+def _opt_specs(param_specs_tree) -> AdamWState:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree.map(f32, param_specs_tree),
+                      nu=jax.tree.map(f32, param_specs_tree))
+
+
+def build_fm_step(cfg: recsys.FMConfig, shape: str, mesh: Mesh,
+                  opt_cfg: AdamWConfig = AdamWConfig(),
+                  smoke: bool = False):
+    """Returns (fn, arg_specs, in_shardings) for jit(...).lower()."""
+    batch, kind = FM_SHAPES[shape]
+    p_shapes = recsys.param_shapes(cfg)
+    p_specs = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, F32), p_shapes,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    p_pspecs = fm_param_pspecs(mesh)
+    ns = lambda tree: jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    dp = dp_axes(mesh)
+    in_specs = fm_input_specs(cfg, shape, smoke=smoke)
+
+    if kind == "train":
+        o_specs = _opt_specs(p_specs)
+        o_pspecs = AdamWState(step=P(),
+                              mu=jax.tree.map(lambda p: p, p_pspecs),
+                              nu=jax.tree.map(lambda p: p, p_pspecs))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: recsys.loss_fn(cfg, p, batch))(params)
+            params, opt_state, _ = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+            return params, opt_state, loss
+
+        args = (p_specs, o_specs, in_specs)
+        shardings = (ns(p_pspecs), ns(o_pspecs),
+                     {"field_ids": NamedSharding(mesh, P(dp, None)),
+                      "labels": NamedSharding(mesh, P(dp))})
+        return train_step, args, shardings
+
+    if kind == "serve":
+        def serve_step(params, batch):
+            return recsys.forward(cfg, params, batch["field_ids"])
+
+        args = (p_specs, in_specs)
+        shardings = (ns(p_pspecs),
+                     {"field_ids": NamedSharding(mesh, P(dp, None))})
+        return serve_step, args, shardings
+
+    # retrieval: one user scored against every candidate — candidates are
+    # sharded over the full mesh, the query is replicated.
+    allax = tuple(mesh.axis_names)
+
+    def retrieval_step(params, batch):
+        return recsys.retrieval_scores(cfg, params, batch["user_fields"],
+                                       batch["cand_rows"])
+
+    args = (p_specs, in_specs)
+    shardings = (ns(p_pspecs),
+                 {"user_fields": NamedSharding(mesh, P(None, None)),
+                  "cand_rows": NamedSharding(mesh, P(allax))})
+    return retrieval_step, args, shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class FMArch:
+    arch_id: str = "fm"
+    family: str = "recsys"
+    shapes: Tuple[str, ...] = tuple(FM_SHAPES)
+    skip_notes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def full_config(self) -> recsys.FMConfig:
+        return full_config()
+
+    def smoke_config(self) -> recsys.FMConfig:
+        return smoke_config()
+
+    def input_specs(self, shape: str, smoke: bool = False) -> dict:
+        cfg = smoke_config() if smoke else full_config()
+        return fm_input_specs(cfg, shape, smoke=smoke)
+
+    def build_step(self, shape: str, mesh: Mesh, smoke: bool = False):
+        cfg = smoke_config() if smoke else full_config()
+        return build_fm_step(cfg, shape, mesh, smoke=smoke)
+
+
+ARCH = FMArch()

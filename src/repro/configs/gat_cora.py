@@ -1,0 +1,76 @@
+"""gat-cora [gnn]: 2 layers, d_hidden=8 per head, 8 heads, attention
+aggregator.  [arXiv:1710.10903; paper]
+
+Node classification on every shape (GAT is a node classifier; the `molecule`
+shape runs node-level targets over the batched graphs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gnn_common import GNNArch, GNNShape
+from repro.models.gnn import gat
+from repro.models.gnn.common import GraphBatch, node_ce_loss
+
+
+def _config(sh: GNNShape, smoke: bool) -> gat.GATConfig:
+    if smoke:
+        return gat.GATConfig(name="gat-cora-smoke", n_layers=2, d_hidden=4,
+                             n_heads=2, d_feat=sh.d_feat,
+                             n_classes=sh.n_classes)
+    return gat.GATConfig(name="gat-cora", n_layers=2, d_hidden=8, n_heads=8,
+                         d_feat=sh.d_feat, n_classes=sh.n_classes)
+
+
+def _loss(cfg: gat.GATConfig, sh: GNNShape, shape_name: str):
+    if sh.kind == "full":
+        def loss(params, batch):
+            n_pad = batch["node_feat"].shape[0]
+            g = GraphBatch(
+                node_feat=batch["node_feat"], edge_src=batch["edge_src"],
+                edge_dst=batch["edge_dst"], n_nodes=jnp.int32(sh.n_nodes),
+                labels=batch["labels"],
+                graph_id=jnp.zeros((n_pad,), jnp.int32),
+                n_graphs=jnp.int32(1))
+            logits = gat.forward(cfg, params, g)
+            mask = (jnp.arange(n_pad) < sh.n_nodes).astype(jnp.float32)
+            return node_ce_loss(logits, batch["labels"], mask)
+        return loss
+
+    seed_masked = sh.kind == "blocks"
+
+    def one(params, nf, es, ed, lab):
+        g = GraphBatch(node_feat=nf, edge_src=es, edge_dst=ed,
+                       n_nodes=jnp.int32(sh.n_nodes), labels=lab,
+                       graph_id=jnp.zeros((sh.n_nodes,), jnp.int32),
+                       n_graphs=jnp.int32(1))
+        logits = gat.forward(cfg, params, g)
+        if seed_masked:
+            mask = (jnp.arange(sh.n_nodes) < sh.n_seeds).astype(jnp.float32)
+        else:
+            mask = jnp.ones((sh.n_nodes,), jnp.float32)
+        return node_ce_loss(logits, lab, mask)
+
+    def loss(params, batch):
+        per = jax.vmap(one, in_axes=(None, 0, 0, 0, 0))(
+            params, batch["node_feat"], batch["edge_src"],
+            batch["edge_dst"], batch["labels"])
+        return jnp.mean(per)
+    return loss
+
+
+ARCH = GNNArch(
+    arch_id="gat-cora",
+    needs_positions=False,
+    needs_triplets=False,
+    label_kind="node",
+    make_config=_config,
+    make_loss=_loss,
+    make_params=lambda cfg, key: gat.init_params(cfg, key),
+    make_param_specs=lambda cfg: jax.eval_shape(
+        functools.partial(gat.init_params, cfg), jax.random.PRNGKey(0)),
+)

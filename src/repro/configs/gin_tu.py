@@ -1,0 +1,94 @@
+"""gin-tu [gnn]: 5 layers, d_hidden=64, sum aggregator, learnable eps.
+[arXiv:1810.00826; paper]
+
+Node classification on the full-graph / sampled shapes; TU-style graph
+classification on the `molecule` shape (its native benchmark setting).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gnn_common import GNNArch, GNNShape
+from repro.models.gnn import gin
+from repro.models.gnn.common import GraphBatch, node_ce_loss
+
+
+def _config(sh: GNNShape, smoke: bool) -> gin.GINConfig:
+    if smoke:
+        return gin.GINConfig(name="gin-tu-smoke", n_layers=2, d_hidden=16,
+                             d_feat=sh.d_feat, n_classes=sh.n_classes)
+    return gin.GINConfig(name="gin-tu", n_layers=5, d_hidden=64,
+                         d_feat=sh.d_feat, n_classes=sh.n_classes)
+
+
+def _graph_of(batch: dict, n_valid: int) -> GraphBatch:
+    n_pad = batch["node_feat"].shape[0]
+    return GraphBatch(
+        node_feat=batch["node_feat"], edge_src=batch["edge_src"],
+        edge_dst=batch["edge_dst"], n_nodes=jnp.int32(n_valid),
+        labels=batch["labels"], graph_id=jnp.zeros((n_pad,), jnp.int32),
+        n_graphs=jnp.int32(1), positions=batch.get("positions"))
+
+
+def _loss(cfg: gin.GINConfig, sh: GNNShape, shape_name: str):
+    if sh.kind == "full":
+        def loss(params, batch):
+            g = _graph_of(batch, sh.n_nodes)
+            logits = gin.forward(cfg, params, g)
+            n_pad = logits.shape[0]
+            mask = (jnp.arange(n_pad) < sh.n_nodes).astype(jnp.float32)
+            return node_ce_loss(logits, batch["labels"], mask)
+        return loss
+
+    if sh.kind == "blocks":
+        def one(params, nf, es, ed, lab):
+            g = GraphBatch(node_feat=nf, edge_src=es, edge_dst=ed,
+                           n_nodes=jnp.int32(sh.n_nodes), labels=lab,
+                           graph_id=jnp.zeros((sh.n_nodes,), jnp.int32),
+                           n_graphs=jnp.int32(1))
+            logits = gin.forward(cfg, params, g)
+            mask = (jnp.arange(sh.n_nodes) < sh.n_seeds).astype(jnp.float32)
+            return node_ce_loss(logits, lab, mask)
+
+        def loss(params, batch):
+            per = jax.vmap(one, in_axes=(None, 0, 0, 0, 0))(
+                params, batch["node_feat"], batch["edge_src"],
+                batch["edge_dst"], batch["labels"])
+            return jnp.mean(per)
+        return loss
+
+    # molecule: graph classification (graph_level readout, label per graph).
+    def one_g(params, nf, es, ed):
+        g = GraphBatch(node_feat=nf, edge_src=es, edge_dst=ed,
+                       n_nodes=jnp.int32(sh.n_nodes),
+                       labels=jnp.zeros((sh.n_nodes,), jnp.int32),
+                       graph_id=jnp.zeros((sh.n_nodes,), jnp.int32),
+                       n_graphs=jnp.int32(1))
+        cfg_g = gin.GINConfig(**{**cfg.__dict__, "graph_level": True})
+        return gin.forward(cfg_g, params, g)[0]          # (n_classes,)
+
+    def loss(params, batch):
+        logits = jax.vmap(one_g, in_axes=(None, 0, 0, 0))(
+            params, batch["node_feat"], batch["edge_src"],
+            batch["edge_dst"])                            # (B, n_classes)
+        mask = jnp.ones((sh.batch,), jnp.float32)
+        return node_ce_loss(logits, batch["labels"], mask)
+    return loss
+
+
+ARCH = GNNArch(
+    arch_id="gin-tu",
+    needs_positions=False,
+    needs_triplets=False,
+    label_kind="node",
+    label_kind_overrides={"molecule": "graph_class"},
+    make_config=_config,
+    make_loss=_loss,
+    make_params=lambda cfg, key: gin.init_params(cfg, key),
+    make_param_specs=lambda cfg: jax.eval_shape(
+        functools.partial(gin.init_params, cfg), jax.random.PRNGKey(0)),
+)

@@ -1,0 +1,289 @@
+"""Shared plumbing for the four GNN architectures: the assigned shape set,
+input specs, and train-step builders with production shardings.
+
+The four assigned GNN shapes all exercise *training*:
+
+  full_graph_sm   Cora-scale full-batch        (N=2,708   E=10,556   F=1,433)
+  minibatch_lg    Reddit-scale sampled blocks  (N=232,965 E=114.6M, 1,024 seeds,
+                                                fanout 15-10)
+  ogb_products    products-scale full-batch    (N=2,449,029 E=61.9M  F=100)
+  molecule        batched small graphs         (30 nodes, 64 edges, batch 128)
+
+Layouts (see DESIGN.md):
+  - full graphs: node/edge arrays sharded over EVERY mesh axis flattened
+    (graph parallelism; the paper's Louvain partitioner produces the
+    device-local orderings used at runtime).
+  - minibatch: a leading batch of 32 sampled blocks (32 seeds x fanout 15-10
+    each = 1,024 global seeds), data-parallel over the dp axes, model vmapped
+    over blocks.
+  - molecule: a leading batch of 128 padded molecules, data-parallel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.adamw import AdamWState
+from repro.sharding.rules import dp_axes
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNShape:
+    kind: str                 # "full" | "blocks" | "molecule"
+    n_nodes: int
+    n_edges: int              # directed edge slots
+    d_feat: int
+    n_classes: int
+    # blocks / molecule:
+    batch: int = 1            # leading batch (blocks or molecules)
+    n_seeds: int = 0          # seeds per block (blocks kind)
+    # graph-level targets (dimenet / equiformer energy heads):
+    note: str = ""
+
+
+# block capacity for 32 seeds, fanout (15, 10):  nodes 32*(1+15+150)=5312,
+# edges 32*(15+150)=5280 — 32 blocks x 32 seeds = 1,024 global seed nodes.
+_BLOCK_SEEDS = 32
+_BLOCK_N = _BLOCK_SEEDS * (1 + 15 + 15 * 10)
+_BLOCK_E = _BLOCK_SEEDS * (15 + 15 * 10)
+
+GNN_SHAPES: Dict[str, GNNShape] = {
+    "full_graph_sm": GNNShape("full", 2708, 10556, 1433, 7,
+                              note="Cora full-batch"),
+    "minibatch_lg": GNNShape("blocks", _BLOCK_N, _BLOCK_E, 602, 41,
+                             batch=32, n_seeds=_BLOCK_SEEDS,
+                             note="Reddit-scale sampled; global graph "
+                                  "N=232,965 E=114,615,892 lives host-side"),
+    "ogb_products": GNNShape("full", 2449029, 61859140, 100, 47,
+                             note="ogbn-products full-batch"),
+    "molecule": GNNShape("molecule", 30, 64, 16, 8, batch=128,
+                         note="batched small graphs"),
+}
+
+# Reduced shapes for smoke tests (same kinds, tiny sizes).
+GNN_SMOKE_SHAPES: Dict[str, GNNShape] = {
+    "full_graph_sm": GNNShape("full", 64, 256, 16, 4),
+    "minibatch_lg": GNNShape("blocks", 2 * (1 + 3 + 6), 2 * (3 + 6), 16, 4,
+                             batch=2, n_seeds=2),
+    "ogb_products": GNNShape("full", 96, 384, 12, 5),
+    "molecule": GNNShape("molecule", 10, 20, 8, 3, batch=4),
+}
+
+
+def pad512(x: int) -> int:
+    """Pad a sharded-dim capacity to a multiple of 512 (= lcm of every mesh
+    flattening: 256 single-pod, 512 multi-pod, 16/32 dp groups).  The valid
+    prefix keeps the exact assigned size; pad slots carry sentinels — the
+    same padded-buffer convention as the Louvain core."""
+    return -(-x // 512) * 512
+
+
+def triplet_cap(shape_name: str, shape: GNNShape) -> int:
+    """Static triplet capacity for DimeNet per shape (k->j->i wedges).
+
+    Molecular graphs get a comfortable 4x edges; the non-geometric stress
+    shapes are capacity-capped (DimeNet's wedge count grows with sum(deg^2),
+    which is unbounded on power-law graphs — noted in DESIGN.md).
+    """
+    if shape.kind == "full" and shape.n_edges > 1_000_000:
+        return pad512(2 * shape.n_edges)
+    if shape.kind == "full":
+        return pad512(16 * shape.n_edges)
+    return 4 * shape.n_edges
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+def gnn_input_specs(shape_name: str, *, needs_positions: bool,
+                    needs_triplets: bool, label_kind: str,
+                    smoke: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) batch.
+
+    label_kind: "node" (int class per node), "graph" (float target per graph).
+    """
+    sh = (GNN_SMOKE_SHAPES if smoke else GNN_SHAPES)[shape_name]
+    S = jax.ShapeDtypeStruct
+    if sh.kind == "full":
+        n_pad, e_pad = pad512(sh.n_nodes), pad512(sh.n_edges)
+        specs = {
+            "node_feat": S((n_pad, sh.d_feat), F32),
+            "edge_src": S((e_pad,), I32),
+            "edge_dst": S((e_pad,), I32),
+        }
+        specs["labels"] = (S((n_pad,), I32) if label_kind == "node"
+                           else S((1,), F32))
+        if needs_positions:
+            specs["positions"] = S((n_pad, 3), F32)
+        if needs_triplets:
+            t = triplet_cap(shape_name, sh)
+            specs["t_kj"] = S((t,), I32)
+            specs["t_ji"] = S((t,), I32)
+        return specs
+    # blocks / molecule: leading batch dim.
+    b, n, e = sh.batch, sh.n_nodes, sh.n_edges
+    specs = {
+        "node_feat": S((b, n, sh.d_feat), F32),
+        "edge_src": S((b, e), I32),
+        "edge_dst": S((b, e), I32),
+    }
+    specs["labels"] = {"node": S((b, n), I32),
+                       "graph": S((b,), F32),
+                       "graph_class": S((b,), I32)}[label_kind]
+    if needs_positions:
+        specs["positions"] = S((b, n, 3), F32)
+    if needs_triplets:
+        t = triplet_cap(shape_name, sh)
+        specs["t_kj"] = S((b, t), I32)
+        specs["t_ji"] = S((b, t), I32)
+    return specs
+
+
+def gnn_batch_pspecs(shape_name: str, mesh: Mesh, specs: dict) -> dict:
+    """PartitionSpecs matching gnn_input_specs: full graphs shard dim 0 over
+    every mesh axis; batched kinds shard the leading dim over the dp axes."""
+    sh = GNN_SHAPES.get(shape_name) or GNN_SMOKE_SHAPES[shape_name]
+    if sh.kind == "full":
+        allax = tuple(mesh.axis_names)
+        out = {}
+        for k, s in specs.items():
+            if k == "labels" and s.shape == (1,):
+                out[k] = P(None)
+            else:
+                out[k] = P(*((allax,) + (None,) * (len(s.shape) - 1)))
+        return out
+    dp = dp_axes(mesh)
+    return {k: P(*((dp,) + (None,) * (len(s.shape) - 1)))
+            for k, s in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Step builder
+# ---------------------------------------------------------------------------
+
+def _opt_specs(param_specs_tree) -> AdamWState:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree.map(f32, param_specs_tree),
+                      nu=jax.tree.map(f32, param_specs_tree))
+
+
+def build_gnn_step(
+    *,
+    shape_name: str,
+    mesh: Mesh,
+    param_specs: dict,
+    loss_of_batch: Callable,     # (params, batch_dict) -> scalar loss
+    input_specs: dict,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+):
+    """Returns (train_step, arg_specs, in_shardings) for jit(...).lower().
+
+    GNN params are small relative to activations — replicated everywhere;
+    gradients are implicitly all-reduced by GSPMD over the sharded batch.
+    """
+    o_specs = _opt_specs(param_specs)
+    rep = lambda tree: jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    b_pspecs = gnn_batch_pspecs(shape_name, mesh, input_specs)
+    b_shard = {k: NamedSharding(mesh, p) for k, p in b_pspecs.items()}
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_of_batch(p, batch))(params)
+        params, opt_state, _ = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    args = (param_specs, o_specs, input_specs)
+    shardings = (rep(param_specs), rep(o_specs), b_shard)
+    return train_step, args, shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNArch:
+    """One assigned GNN architecture: configs + batch semantics per shape."""
+
+    arch_id: str
+    needs_positions: bool
+    needs_triplets: bool
+    label_kind: str                               # "node" | "graph" | "graph_class"
+    make_config: Callable[[GNNShape, bool], object]   # (shape, smoke) -> cfg
+    make_loss: Callable[[object, GNNShape, str], Callable]  # -> loss(params, batch)
+    make_params: Callable[[object, jax.Array], dict]
+    make_param_specs: Callable[[object], dict]
+    shapes: Tuple[str, ...] = tuple(GNN_SHAPES)
+    family: str = "gnn"
+    skip_notes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # Per-shape-kind override, e.g. GIN classifies graphs on `molecule`.
+    label_kind_overrides: Dict[str, str] = dataclasses.field(
+        default_factory=dict)
+
+    def label_kind_for(self, shape: str) -> str:
+        sh = GNN_SHAPES.get(shape) or GNN_SMOKE_SHAPES[shape]
+        return self.label_kind_overrides.get(sh.kind, self.label_kind)
+
+    def input_specs(self, shape: str, smoke: bool = False) -> dict:
+        return gnn_input_specs(
+            shape, needs_positions=self.needs_positions,
+            needs_triplets=self.needs_triplets,
+            label_kind=self.label_kind_for(shape), smoke=smoke)
+
+    def build_step(self, shape: str, mesh: Mesh, smoke: bool = False,
+                   variant: Tuple[str, ...] = ()):
+        """variant "halo": the Louvain-partitioned halo-exchange layout
+        (full-graph shapes of gin-tu / equiformer-v2) — see core/gnn_halo."""
+        sh = (GNN_SMOKE_SHAPES if smoke else GNN_SHAPES)[shape]
+        cfg = self.make_config(sh, smoke)
+        if ("halo" in variant and sh.kind == "full"
+                and self.arch_id in ("gin-tu", "equiformer-v2")):
+            from repro.core.gnn_halo import build_halo_step
+            return build_halo_step(
+                self.arch_id, shape, mesh, n_valid=sh.n_nodes, cfg=cfg,
+                param_specs=self.make_param_specs(cfg),
+                m_truncate="no_mtrunc" not in variant,
+                bf16_msgs="bf16_msgs" in variant,
+                needs_positions=self.needs_positions)
+        loss = self.make_loss(cfg, sh, shape)
+        return build_gnn_step(
+            shape_name=shape, mesh=mesh,
+            param_specs=self.make_param_specs(cfg),
+            loss_of_batch=loss,
+            input_specs=self.input_specs(shape, smoke=smoke))
+
+    def init_params(self, shape: str, key, smoke: bool = False) -> dict:
+        sh = (GNN_SMOKE_SHAPES if smoke else GNN_SHAPES)[shape]
+        return self.make_params(self.make_config(sh, smoke), key)
+
+    def make_batch(self, shape: str, key, smoke: bool = False) -> dict:
+        """Random concrete batch matching input_specs (for smoke tests)."""
+        specs = self.input_specs(shape, smoke=smoke)
+        sh = (GNN_SMOKE_SHAPES if smoke else GNN_SHAPES)[shape]
+        rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+        out = {}
+        for k, s in specs.items():
+            if k in ("edge_src", "edge_dst"):
+                out[k] = jnp.asarray(
+                    rng.integers(0, sh.n_nodes, s.shape), I32)
+            elif k in ("t_kj", "t_ji"):
+                out[k] = jnp.asarray(rng.integers(0, sh.n_edges, s.shape), I32)
+            elif k == "labels":
+                if s.dtype == I32:
+                    out[k] = jnp.asarray(
+                        rng.integers(0, sh.n_classes, s.shape), I32)
+                else:
+                    out[k] = jnp.asarray(rng.standard_normal(s.shape), F32)
+            else:
+                out[k] = jnp.asarray(rng.standard_normal(s.shape), F32)
+        return out

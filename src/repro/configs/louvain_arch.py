@@ -1,0 +1,334 @@
+"""The paper's own workload as dry-run cells: distributed GVE-Louvain
+phases lowered at SuiteSparse scale on the production meshes.
+
+Shapes (mirroring Table 1's largest graphs; |E| counts directed slots):
+    web_3.8B_move        sk-2005 scale   one local-move round
+    web_3.8B_aggregate   sk-2005 scale   aggregation phase
+    road_108M_move       europe_osm scale
+
+Variants:
+    "a2a"  — aggregation routes partial coarse edges to their owner shard
+             with a capacity-bounded all_to_all instead of the gather-based
+             baseline (which materializes the FULL edge list per chip —
+             45.6 GB at sk-2005 scale, infeasible on v5e; the all_to_all
+             variant is the §Perf fix for the paper's own bottleneck phase).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.distributed import (ShardedGraphSpec, _best_moves_shard,
+                                    _round_body, _shard_index)
+
+F32, I32 = jnp.float32, jnp.int32
+
+# name -> (|V|, |E| directed slots, phase)
+LOUVAIN_SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "web_3.8B_move": (50_636_154, 3_800_000_000, "move"),
+    "web_3.8B_aggregate": (50_636_154, 3_800_000_000, "aggregate"),
+    "road_108M_move": (50_912_018, 108_109_320, "move"),
+    "road_108M_aggregate": (50_912_018, 108_109_320, "aggregate"),
+}
+
+
+def _spec_for(mesh: Mesh, n: int, e: int) -> ShardedGraphSpec:
+    n_shards = int(mesh.devices.size)
+    v_per = -(-n // n_shards)
+    e_per = -(-e // n_shards)
+    return ShardedGraphSpec(n_shards, v_per, e_per, v_per * n_shards)
+
+
+def _move_round_delta(axes, spec: ShardedGraphSpec, move_cap_frac: int,
+                      src_l, dst_l, w_l, comm, sigma, comm_sizes, k, m):
+    """One local-move round with DELTA-ENCODED state exchange.
+
+    The baseline round all_gathers the full membership C (n_pad int32),
+    psums the dense Σ (n_pad f32) and psums the dense community sizes —
+    3 x O(n_pad) collectives per round.  Here only the (vertex, new_comm)
+    pairs of vertices that actually MOVED are gathered (static cap =
+    v_per / move_cap_frac per shard); every shard then reconstructs Σ,
+    community sizes and the frontier locally from the replicated k and the
+    gathered deltas — redundant O(moved) recompute in place of O(n_pad)
+    collectives.  Returns (comm', sigma', sizes', frontier_l, dq, overflow).
+    """
+    v_per, sent = spec.v_per_shard, spec.sentinel
+    frontier_l = jnp.ones((v_per,), bool)
+    best_c, best_dq, v0 = _best_moves_shard(
+        axes, spec, src_l, dst_l, w_l, comm, sigma, k, frontier_l, m)
+    own_comm_l = jax.lax.dynamic_slice_in_dim(comm, v0, v_per)
+    k_l = jax.lax.dynamic_slice_in_dim(k, v0, v_per)
+    gidx = v0 + jnp.arange(v_per)
+
+    # round-0 gate + singleton guard from the REPLICATED sizes input.
+    gate = jnp.abs((gidx.astype(I32) * jnp.int32(-1640531535)) >> 13) % 2 == 0
+    own_single = comm_sizes[own_comm_l] == 1
+    tgt_single = comm_sizes[jnp.minimum(best_c, sent)] == 1
+    swap_blocked = own_single & tgt_single & (best_c > own_comm_l)
+    do_move = ((best_dq > 0.0) & (best_c != own_comm_l) & (best_c < sent)
+               & gate & ~swap_blocked)
+    dq_round = jax.lax.psum(jnp.sum(jnp.where(do_move, best_dq, 0.0)), axes)
+
+    # --- delta encoding: (global vertex id, new community) of movers -------
+    cap = max(v_per // move_cap_frac, 1)
+    rank = jnp.cumsum(do_move.astype(I32)) - 1
+    keep = do_move & (rank < cap)
+    slot = jnp.where(keep, rank, cap)
+    idx_buf = jnp.full((cap + 1,), sent, I32).at[slot].set(
+        jnp.where(keep, gidx, sent))[:cap]
+    val_buf = jnp.full((cap + 1,), sent, I32).at[slot].set(
+        jnp.where(keep, best_c, sent))[:cap]
+    overflow = jax.lax.pmax(jnp.sum(do_move.astype(I32)) - cap, axes)
+
+    g_idx = jax.lax.all_gather(idx_buf, axes, tiled=True)   # (S*cap,)
+    g_val = jax.lax.all_gather(val_buf, axes, tiled=True)
+
+    # --- replicated reconstruction from the deltas --------------------------
+    g_live = g_idx < sent
+    comm_new = comm.at[jnp.minimum(g_idx, sent)].set(
+        jnp.where(g_live, g_val, comm[jnp.minimum(g_idx, sent)]))
+    k_moved = jnp.where(g_live, k[jnp.minimum(g_idx, sent)], 0.0)
+    old_c = comm[jnp.minimum(g_idx, sent)]
+    sigma_new = (sigma
+                 .at[jnp.where(g_live, g_val, sent)].add(k_moved)
+                 .at[jnp.where(g_live, old_c, sent)].add(-k_moved))
+    ones_m = jnp.where(g_live, 1, 0)
+    sizes_new = (comm_sizes
+                 .at[jnp.where(g_live, g_val, sent)].add(ones_m)
+                 .at[jnp.where(g_live, old_c, sent)].add(-ones_m))
+
+    # frontier: neighbors of movers, from the reconstructed moved mask.
+    moved_mask = jnp.zeros((sent + 1,), bool).at[
+        jnp.minimum(g_idx, sent)].set(g_live)
+    src_loc = jnp.where(src_l >= sent, v_per, src_l - v0)
+    marked = jax.ops.segment_max(
+        moved_mask[dst_l].astype(I32), src_loc, num_segments=v_per + 1)[:v_per]
+    frontier_new = (marked > 0) & (gidx < spec.n_pad)
+    return comm_new, sigma_new, sizes_new, frontier_new, dq_round, overflow
+
+
+def _aggregate_a2a_body(axes, spec: ShardedGraphSpec, cap_factor: int,
+                        src_l, dst_l, w_l, comm):
+    """Owner-routed aggregation: local sort-reduce partials, all_to_all the
+    partial coarse edges to the shard owning their source community, local
+    re-reduce.  Per-chip traffic = 3 arrays x P x cap x 4B ~ cap_factor x e_l
+    x 12B, vs the gather baseline's n_shards x e_l x 12B."""
+    v_per, sent = spec.v_per_shard, spec.sentinel
+    n_shards = spec.n_shards
+    e_l = src_l.shape[0]
+    ci = comm[src_l]
+    cj = comm[dst_l]
+
+    # local partial reduce (identical to the baseline first stage)
+    order = jnp.lexsort((cj, ci))
+    s_ci, s_cj, s_w = ci[order], cj[order], w_l[order]
+    prev_i = jnp.concatenate([jnp.full((1,), -1, I32), s_ci[:-1]])
+    prev_j = jnp.concatenate([jnp.full((1,), -1, I32), s_cj[:-1]])
+    new_group = (s_ci != prev_i) | (s_cj != prev_j)
+    gid = jnp.cumsum(new_group.astype(I32)) - 1
+    gw = jax.ops.segment_sum(s_w, gid, num_segments=e_l)[gid]
+    live = new_group & (s_ci != sent)
+
+    # route each live partial to owner shard = ci // v_per, with a static
+    # per-destination capacity (cap_factor x fair share).
+    cap = cap_factor * (e_l // n_shards)
+    dest = jnp.where(live, s_ci // v_per, n_shards)
+    d_order = jnp.argsort(dest)
+    d_sorted = dest[d_order]
+    ranks = jnp.arange(e_l) - jnp.searchsorted(d_sorted, d_sorted,
+                                               side="left")
+    keep = (d_sorted < n_shards) & (ranks < cap)
+    slot = jnp.where(keep, d_sorted * cap + ranks, n_shards * cap)
+
+    def scatter(vals, fill):
+        buf = jnp.full((n_shards * cap + 1,), fill, vals.dtype)
+        return buf.at[slot].set(jnp.where(keep, vals[d_order], fill))[:-1]
+
+    b_ci = scatter(s_ci, jnp.int32(sent)).reshape(n_shards, cap)
+    b_cj = scatter(s_cj, jnp.int32(sent)).reshape(n_shards, cap)
+    b_w = scatter(gw, jnp.float32(0)).reshape(n_shards, cap)
+
+    r_ci = jax.lax.all_to_all(b_ci, axes, 0, 0, tiled=True).reshape(-1)
+    r_cj = jax.lax.all_to_all(b_cj, axes, 0, 0, tiled=True).reshape(-1)
+    r_w = jax.lax.all_to_all(b_w, axes, 0, 0, tiled=True).reshape(-1)
+
+    # local re-reduce of everything this shard owns
+    order2 = jnp.lexsort((r_cj, r_ci))
+    t_ci, t_cj, t_w = r_ci[order2], r_cj[order2], r_w[order2]
+    prev_i = jnp.concatenate([jnp.full((1,), -1, I32), t_ci[:-1]])
+    prev_j = jnp.concatenate([jnp.full((1,), -1, I32), t_cj[:-1]])
+    ng2 = (t_ci != prev_i) | (t_cj != prev_j)
+    gid2 = jnp.cumsum(ng2.astype(I32)) - 1
+    gw2 = jax.ops.segment_sum(t_w, gid2, num_segments=t_w.shape[0])[gid2]
+    live2 = ng2 & (t_ci != sent)
+    n_out = t_w.shape[0]
+    pos2 = jnp.where(live2, gid2, n_out)
+    o_ci = jnp.full((n_out + 1,), sent, I32).at[pos2].set(t_ci)[:n_out]
+    o_cj = jnp.full((n_out + 1,), sent, I32).at[pos2].set(t_cj)[:n_out]
+    o_w = jnp.zeros((n_out + 1,), F32).at[pos2].set(
+        jnp.where(live2, gw2, 0.0))[:n_out]
+    e_valid = jax.lax.psum(jnp.sum(jnp.where(live2, 1, 0)), axes)
+    # capacity diagnostic: partials dropped by the per-destination cap
+    dropped = jax.lax.psum(
+        jnp.sum(jnp.where(live, 1, 0)) - jnp.sum(jnp.where(keep, 1, 0)),
+        axes)
+    return o_ci, o_cj, o_w, e_valid, dropped
+
+
+def _aggregate_gather_body(axes, spec: ShardedGraphSpec,
+                           src_l, dst_l, w_l, comm):
+    """Baseline (core.distributed.make_distributed_aggregate inner body)."""
+    from repro.core import distributed as dmod
+    # Reuse the library body by constructing it the same way.
+    v_per, sent = spec.v_per_shard, spec.sentinel
+    e_l = src_l.shape[0]
+    ci = comm[src_l]
+    cj = comm[dst_l]
+    order = jnp.lexsort((cj, ci))
+    s_ci, s_cj, s_w = ci[order], cj[order], w_l[order]
+    prev_i = jnp.concatenate([jnp.full((1,), -1, I32), s_ci[:-1]])
+    prev_j = jnp.concatenate([jnp.full((1,), -1, I32), s_cj[:-1]])
+    new_group = (s_ci != prev_i) | (s_cj != prev_j)
+    gidl = jnp.cumsum(new_group.astype(I32)) - 1
+    gw = jax.ops.segment_sum(s_w, gidl, num_segments=e_l)[gidl]
+    live = new_group & (s_ci != sent)
+    pos = jnp.where(live, gidl, e_l)
+    p_ci = jnp.full((e_l + 1,), sent, I32).at[pos].set(s_ci)[:e_l]
+    p_cj = jnp.full((e_l + 1,), sent, I32).at[pos].set(s_cj)[:e_l]
+    p_w = jnp.zeros((e_l + 1,), F32).at[pos].set(gw)[:e_l]
+
+    g_ci = jax.lax.all_gather(p_ci, axes, tiled=True)
+    g_cj = jax.lax.all_gather(p_cj, axes, tiled=True)
+    g_w = jax.lax.all_gather(p_w, axes, tiled=True)
+
+    shard_ix = jax.lax.axis_index(axes[0])
+    for ax in axes[1:]:
+        shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    v0 = shard_ix * v_per
+    mine = (g_ci >= v0) & (g_ci < v0 + v_per)
+    m_ci = jnp.where(mine, g_ci, sent)
+    m_cj = jnp.where(mine, g_cj, sent)
+    m_w = jnp.where(mine, g_w, 0.0)
+    order2 = jnp.lexsort((m_cj, m_ci))
+    t_ci, t_cj, t_w = m_ci[order2], m_cj[order2], m_w[order2]
+    prev_i = jnp.concatenate([jnp.full((1,), -1, I32), t_ci[:-1]])
+    prev_j = jnp.concatenate([jnp.full((1,), -1, I32), t_cj[:-1]])
+    ng2 = (t_ci != prev_i) | (t_cj != prev_j)
+    gid2 = jnp.cumsum(ng2.astype(I32)) - 1
+    gw2 = jax.ops.segment_sum(t_w, gid2, num_segments=t_w.shape[0])[gid2]
+    live2 = ng2 & (t_ci != sent)
+    pos2 = jnp.where(live2, gid2, e_l)
+    o_ci = jnp.full((e_l + 1,), sent, I32).at[pos2].set(
+        jnp.where(live2, t_ci, sent))[:e_l]
+    o_cj = jnp.full((e_l + 1,), sent, I32).at[pos2].set(
+        jnp.where(live2, t_cj, sent))[:e_l]
+    o_w = jnp.zeros((e_l + 1,), F32).at[pos2].set(
+        jnp.where(live2, gw2, 0.0))[:e_l]
+    e_valid = jax.lax.psum(jnp.sum(jnp.where(live2, 1, 0)), axes)
+    # overflow diagnostic (see core.distributed.make_distributed_aggregate)
+    owned_max = jax.lax.pmax(jnp.sum(jnp.where(live2, 1, 0)), axes)
+    return o_ci, o_cj, o_w, e_valid, owned_max
+
+
+@dataclasses.dataclass(frozen=True)
+class LouvainArch:
+    """Dry-run protocol wrapper for the paper's own distributed phases."""
+
+    arch_id: str = "louvain"
+    family: str = "louvain"
+    shapes: Tuple[str, ...] = tuple(LOUVAIN_SHAPES)
+    skip_notes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def input_specs(self, shape: str, smoke: bool = False) -> dict:
+        n, e, phase = LOUVAIN_SHAPES[shape]
+        if smoke:
+            n, e = 4096, 32768
+        S = jax.ShapeDtypeStruct
+        # edge arrays are padded to shard-divisible lengths at build time
+        return {"src": S((e,), I32), "dst": S((e,), I32),
+                "w": S((e,), F32), "comm": S((n + 1,), I32),
+                "sigma": S((n + 1,), F32), "k": S((n + 1,), F32),
+                "m": S((), F32)}
+
+    def build_step(self, shape: str, mesh: Mesh, smoke: bool = False,
+                   variant: Tuple[str, ...] = ()):
+        n, e, phase = LOUVAIN_SHAPES[shape]
+        if smoke:
+            n, e = 4096, 32768
+        spec = _spec_for(mesh, n, e)
+        axes = tuple(mesh.axis_names)
+        n_pad, e_pad = spec.n_pad, spec.e_per_shard * spec.n_shards
+        S = jax.ShapeDtypeStruct
+        arg_specs = ({"src": S((e_pad,), I32), "dst": S((e_pad,), I32),
+                      "w": S((e_pad,), F32), "comm": S((n_pad + 1,), I32),
+                      "sigma": S((n_pad + 1,), F32),
+                      "k": S((n_pad + 1,), F32), "m": S((), F32)},)
+        edge = P(axes)
+        rep = P()
+        shardings = ({"src": NamedSharding(mesh, edge),
+                      "dst": NamedSharding(mesh, edge),
+                      "w": NamedSharding(mesh, edge),
+                      "comm": NamedSharding(mesh, rep),
+                      "sigma": NamedSharding(mesh, rep),
+                      "k": NamedSharding(mesh, rep),
+                      "m": NamedSharding(mesh, rep)},)
+
+        if phase == "move" and "delta_c" in variant:
+            arg_specs[0]["comm_sizes"] = S((n_pad + 1,), I32)
+            shardings[0]["comm_sizes"] = NamedSharding(mesh, rep)
+            body = functools.partial(_move_round_delta, axes, spec, 4)
+            fn_s = shard_map(
+                body, mesh=mesh,
+                in_specs=(edge, edge, edge, rep, rep, rep, rep, rep),
+                out_specs=(rep, rep, rep, edge, rep, rep),
+                check_rep=False)
+
+            def step(batch):
+                return fn_s(batch["src"], batch["dst"], batch["w"],
+                            batch["comm"], batch["sigma"],
+                            batch["comm_sizes"], batch["k"], batch["m"])
+            return step, arg_specs, shardings
+
+        if phase == "move":
+            def round_shard(src_l, dst_l, w_l, comm, sigma, k, m):
+                frontier = jnp.ones((spec.v_per_shard,), bool)
+                return _round_body(axes, spec, src_l, dst_l, w_l, comm,
+                                   sigma, k, frontier, jnp.int32(0), 2, m)
+
+            fn_s = shard_map(round_shard, mesh=mesh,
+                             in_specs=(edge, edge, edge, rep, rep, rep, rep),
+                             out_specs=(rep, rep, edge, rep),
+                             check_rep=False)
+        else:
+            if "a2a" in variant:
+                body = functools.partial(_aggregate_a2a_body, axes, spec, 4)
+            else:
+                body = functools.partial(_aggregate_gather_body, axes, spec)
+            outs = (edge, edge, edge, rep, rep)
+
+            fn_s = shard_map(body, mesh=mesh,
+                             in_specs=(edge, edge, edge, rep),
+                             out_specs=outs,
+                             check_rep=False)
+
+        if phase == "move":
+            def step(batch):
+                return fn_s(batch["src"], batch["dst"], batch["w"],
+                            batch["comm"], batch["sigma"], batch["k"],
+                            batch["m"])
+        else:
+            def step(batch):
+                return fn_s(batch["src"], batch["dst"], batch["w"],
+                            batch["comm"])
+        return step, arg_specs, shardings
+
+
+ARCH = LouvainArch()

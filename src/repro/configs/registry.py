@@ -1,0 +1,56 @@
+"""Registry of the ten assigned architectures (plus the paper's own Louvain
+graph configs live in repro.core / benchmarks).
+
+Every entry exposes the uniform arch protocol:
+    .arch_id  .family  .shapes  .skip_notes
+    .input_specs(shape, smoke=False) -> pytree of ShapeDtypeStruct
+    .build_step(shape, mesh, smoke=False) -> (fn, arg_specs, in_shardings)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs import (deepseek_v2_236b, dimenet_cfg, equiformer_v2, fm,
+                           gat_cora, gemma3_12b, gin_tu, internlm2_20b,
+                           mixtral_8x22b, qwen2_1p5b)
+
+ALL_ARCHS = {
+    a.ARCH.arch_id: a.ARCH
+    for a in (gemma3_12b, qwen2_1p5b, internlm2_20b, mixtral_8x22b,
+              deepseek_v2_236b, equiformer_v2, gin_tu, gat_cora, dimenet_cfg,
+              fm)
+}
+
+# The paper's own distributed phases as dry-run targets (not part of the 40
+# assigned cells; --arch louvain in launch/dryrun.py).
+from repro.configs import louvain_arch  # noqa: E402
+
+EXTRA_ARCHS = {louvain_arch.ARCH.arch_id: louvain_arch.ARCH}
+
+
+def get_arch(arch_id: str):
+    if arch_id in ALL_ARCHS:
+        return ALL_ARCHS[arch_id]
+    if arch_id in EXTRA_ARCHS:
+        return EXTRA_ARCHS[arch_id]
+    raise KeyError(f"unknown arch {arch_id!r}; have "
+                   f"{sorted(ALL_ARCHS) + sorted(EXTRA_ARCHS)}")
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """Every assigned (arch, shape) cell — 40 total."""
+    cells = []
+    for aid, arch in ALL_ARCHS.items():
+        for shape in arch.shapes:
+            cells.append((aid, shape))
+    return cells
+
+
+def skipped_cells() -> Dict[Tuple[str, str], str]:
+    """Cells skipped per assignment rules (with the reason)."""
+    out = {}
+    for aid, arch in ALL_ARCHS.items():
+        for shape, why in arch.skip_notes.items():
+            out[(aid, shape)] = why
+    return out

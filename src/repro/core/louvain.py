@@ -1,0 +1,179 @@
+"""GVE-Louvain main loop (Algorithm 1) — passes of local-moving + aggregation.
+
+The pass loop runs on the host (graph capacities are static, so every phase is
+jit-compiled exactly once and reused across passes — the JAX realization of
+the paper's preallocated ping-pong buffers).  All paper parameters are exposed
+with the paper's defaults:
+
+    MAX_PASSES=10, MAX_ITERATIONS=20, initial tolerance 0.01,
+    TOLERANCE_DROP=10, aggregation tolerance 0.8, vertex pruning on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import aggregate_graph, renumber_communities
+from repro.core.graph import CSRGraph
+from repro.core.local_move import louvain_move
+from repro.core.modularity import community_weights, modularity
+
+
+@dataclasses.dataclass(frozen=True)
+class LouvainConfig:
+    """Paper §4.1 parameter set (defaults = paper's chosen values)."""
+
+    max_passes: int = 10
+    max_iterations: int = 20          # opt. 4.1.2
+    initial_tolerance: float = 0.01   # opt. 4.1.4
+    tolerance_drop: float = 10.0      # opt. 4.1.3 (threshold scaling)
+    aggregation_tolerance: float = 0.8  # opt. 4.1.5
+    use_pruning: bool = True          # opt. 4.1.6
+    gate_fraction: int = 2            # stochastic round gating (see local_move)
+    use_ell_kernel: bool = False      # Pallas scan kernel for the move phase
+    ell_widths: tuple = (16, 64, 256)
+    track_modularity: bool = False    # record Q after every pass (debugging)
+
+
+@dataclasses.dataclass
+class PassStats:
+    iterations: int
+    n_communities: int
+    n_vertices: int
+    dq_sum: float
+    seconds: float
+    phase_seconds: dict
+    modularity: Optional[float] = None
+
+
+@dataclasses.dataclass
+class LouvainResult:
+    membership: np.ndarray       # (n,) community id per original vertex
+    n_communities: int
+    passes: List[PassStats]
+    total_seconds: float
+
+    @property
+    def n_passes(self) -> int:
+        return len(self.passes)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iterations", "use_pruning",
+                                             "gate_fraction"))
+def _move_phase(graph: CSRGraph, tolerance, *, max_iterations: int,
+                use_pruning: bool, gate_fraction: int = 2):
+    """One local-moving phase from a fresh singleton assignment."""
+    n_cap = graph.n_cap
+    k = graph.vertex_weights()
+    m = graph.total_weight()
+    comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
+    sigma0 = k  # every vertex its own community
+    st = louvain_move(
+        graph, comm0, sigma0, k, m,
+        tolerance=tolerance, max_iterations=max_iterations,
+        use_pruning=use_pruning, gate_fraction=gate_fraction,
+    )
+    return st.comm, st.iters, st.dq_sum
+
+
+@jax.jit
+def _renumber_and_fold(comm, n_valid, n_cap_arr, global_comm):
+    """Renumber pass-level communities and fold into the dendrogram lookup."""
+    n_cap = global_comm.shape[0]  # == original n_cap (static via shape)
+    del n_cap_arr
+    comm_new, n_comms = renumber_communities(comm, n_valid, comm.shape[0] - 1)
+    folded = comm_new[global_comm]
+    return comm_new, n_comms, folded
+
+
+@jax.jit
+def _aggregate_phase(graph: CSRGraph, comm_renumbered, n_comms):
+    return aggregate_graph(graph, comm_renumbered, n_comms)
+
+
+def louvain(graph: CSRGraph, config: LouvainConfig = LouvainConfig()) -> LouvainResult:
+    """Run GVE-Louvain; returns the flat membership for the original vertices."""
+    t_start = time.perf_counter()
+    n_cap = graph.n_cap
+    n = int(graph.n_valid)
+    global_comm = jnp.arange(n_cap, dtype=jnp.int32)
+
+    g = graph
+    tol = float(config.initial_tolerance)
+    passes: List[PassStats] = []
+    n_comms_final = n
+
+    if config.use_ell_kernel:
+        from repro.core import ell_move  # lazy: pulls in Pallas
+
+    for p in range(config.max_passes):
+        t0 = time.perf_counter()
+        if config.use_ell_kernel:
+            comm, iters, dq_sum = ell_move.move_phase_ell(
+                g, jnp.float32(tol), max_iterations=config.max_iterations,
+                use_pruning=config.use_pruning, widths=config.ell_widths)
+        else:
+            comm, iters, dq_sum = _move_phase(
+                g, jnp.float32(tol), max_iterations=config.max_iterations,
+                use_pruning=config.use_pruning,
+                gate_fraction=config.gate_fraction)
+        iters = int(iters)
+        t1 = time.perf_counter()
+
+        comm_ren, n_comms, folded = _renumber_and_fold(
+            comm, g.n_valid, jnp.int32(g.n_cap), global_comm)
+        global_comm = folded
+        n_comms_i = int(n_comms)
+        n_verts_i = int(g.n_valid)
+        t2 = time.perf_counter()
+
+        q_now = float(modularity(graph, jnp.concatenate(
+            [global_comm, jnp.asarray([n_cap], jnp.int32)]))) \
+            if config.track_modularity else None
+
+        converged = iters <= 1                       # Alg. 1 line 7
+        low_shrink = n_comms_i / max(n_verts_i, 1) > config.aggregation_tolerance  # line 9
+
+        if not (converged or low_shrink or p == config.max_passes - 1):
+            g = _aggregate_phase(g, comm_ren, n_comms)
+            t3 = time.perf_counter()
+            agg_s = t3 - t2
+        else:
+            agg_s = 0.0
+
+        passes.append(PassStats(
+            iterations=iters, n_communities=n_comms_i, n_vertices=n_verts_i,
+            dq_sum=float(dq_sum), seconds=time.perf_counter() - t0,
+            phase_seconds={"local_move": t1 - t0, "other": t2 - t1,
+                           "aggregate": agg_s},
+            modularity=q_now,
+        ))
+        n_comms_final = n_comms_i
+        if converged or low_shrink:
+            break
+        tol = tol / config.tolerance_drop            # line 13 threshold scaling
+
+    membership = np.asarray(global_comm[:n])
+    return LouvainResult(
+        membership=membership,
+        n_communities=int(len(np.unique(membership))),
+        passes=passes,
+        total_seconds=time.perf_counter() - t_start,
+    )
+
+
+def louvain_modularity(graph: CSRGraph, result: LouvainResult) -> float:
+    """Q of a result on the original graph."""
+    comm = jnp.concatenate([
+        jnp.asarray(result.membership, jnp.int32),
+        jnp.full((graph.n_cap + 1 - len(result.membership),), graph.n_cap,
+                 jnp.int32),
+    ])
+    return float(modularity(graph, comm))

@@ -1,0 +1,56 @@
+"""Modularity (Eq. 1) and delta-modularity (Eq. 2) of GVE-Louvain.
+
+All functions are jit-friendly and operate on the padded containers from
+``graph.py``.  Community arrays have shape (n_cap + 1,) with the trailing
+sentinel slot pointing at itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import CSRGraph
+
+
+def community_weights(graph: CSRGraph, comm: jax.Array) -> jax.Array:
+    """Sigma_c: (n_cap + 1,) total weighted degree of each community.
+
+    Community ids index into the same (n_cap + 1) space as vertices; the
+    sentinel community accumulates only padding (= 0 weight).
+    """
+    k = graph.vertex_weights()  # (n_cap + 1,)
+    return jax.ops.segment_sum(k[: graph.n_cap], comm[: graph.n_cap],
+                               num_segments=graph.n_cap + 1)
+
+
+def modularity(graph: CSRGraph, comm: jax.Array) -> jax.Array:
+    """Q (Eq. 1) = sum_c [ sigma_c / 2m  - (Sigma_c / 2m)^2 ].
+
+    ``sigma_c`` counts directed slots with both endpoints in c (undirected
+    internal edges twice, self-loop slots once) — consistent with m = sum(w)/2.
+    """
+    m = graph.total_weight()
+    c_src = comm[graph.src]
+    c_dst = comm[graph.indices]
+    internal = jnp.sum(jnp.where(c_src == c_dst, graph.weights, 0.0))
+    sig = community_weights(graph, comm)
+    q = internal / (2.0 * m) - jnp.sum((sig / (2.0 * m)) ** 2)
+    return q
+
+
+def delta_modularity(
+    k_i_to_c: jax.Array,
+    k_i_to_d: jax.Array,
+    k_i: jax.Array,
+    sigma_c: jax.Array,
+    sigma_d: jax.Array,
+    m: jax.Array,
+) -> jax.Array:
+    """Eq. 2: dQ of moving vertex i from its community d to community c.
+
+    ``sigma_d`` is the total weight of d *with i still inside*; ``sigma_c`` is
+    the target community total *without* i.  ``k_i_to_*`` exclude self-loops.
+    Broadcasts over any leading shape.
+    """
+    return (k_i_to_c - k_i_to_d) / m - k_i * (k_i + sigma_c - sigma_d) / (2.0 * m * m)

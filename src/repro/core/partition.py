@@ -1,0 +1,87 @@
+"""Louvain-driven graph partitioning — the paper technique as a framework
+feature for distributed GNN training.
+
+Communities from GVE-Louvain are packed onto devices with a greedy
+bin-packing, keeping each community's vertices device-local.  Compared to
+random/hashed vertex assignment this minimizes cut edges, i.e. the cross-
+device gathers a full-graph GNN layer must all-to-all.  Also provides the
+community-contiguous reordering (locality for segment ops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core.louvain import LouvainConfig, louvain
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    assignment: np.ndarray       # (n,) device id per vertex
+    order: np.ndarray            # (n,) community-contiguous permutation
+    cut_edges: int
+    total_edges: int
+    balance: float               # max device load / mean load
+
+    @property
+    def cut_fraction(self) -> float:
+        return self.cut_edges / max(self.total_edges, 1)
+
+
+def edge_cut(graph: CSRGraph, assignment: np.ndarray) -> int:
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.indices)
+    live = src < graph.n_cap
+    return int(np.sum(assignment[src[live]] != assignment[dst[live]]))
+
+
+def louvain_partition(
+    graph: CSRGraph,
+    n_devices: int,
+    config: LouvainConfig = LouvainConfig(),
+) -> PartitionResult:
+    """Detect communities, then greedily pack them onto devices (LPT)."""
+    n = int(graph.n_valid)
+    res = louvain(graph, config)
+    membership = res.membership
+
+    # Community sizes -> largest-first bin packing onto devices.
+    comms, counts = np.unique(membership, return_counts=True)
+    order_c = np.argsort(-counts)
+    loads = np.zeros(n_devices, np.int64)
+    comm_dev = np.zeros(comms.max() + 1, np.int32)
+    for cix in order_c:
+        d = int(np.argmin(loads))
+        comm_dev[comms[cix]] = d
+        loads[d] += counts[cix]
+
+    assignment = comm_dev[membership]
+    order = np.argsort(assignment * (membership.max() + 1) + membership,
+                       kind="stable").astype(np.int32)
+    cut = edge_cut(graph, assignment)
+    src = np.asarray(graph.src)
+    total = int((src < graph.n_cap).sum())
+    return PartitionResult(
+        assignment=assignment.astype(np.int32), order=order,
+        cut_edges=cut, total_edges=total,
+        balance=float(loads.max() / max(loads.mean(), 1e-9)))
+
+
+def random_partition(graph: CSRGraph, n_devices: int,
+                     seed: int = 0) -> PartitionResult:
+    """Baseline: hashed assignment (what you get without the technique)."""
+    n = int(graph.n_valid)
+    rng = np.random.default_rng(seed)
+    assignment = rng.integers(0, n_devices, n).astype(np.int32)
+    cut = edge_cut(graph, assignment)
+    src = np.asarray(graph.src)
+    total = int((src < graph.n_cap).sum())
+    loads = np.bincount(assignment, minlength=n_devices)
+    return PartitionResult(
+        assignment=assignment, order=np.argsort(assignment).astype(np.int32),
+        cut_edges=cut, total_edges=total,
+        balance=float(loads.max() / max(loads.mean(), 1e-9)))

@@ -1,0 +1,83 @@
+"""Synthetic graph generators (the paper's datasets — SuiteSparse web/social/
+road/k-mer graphs — are not available offline; these generators match the
+paper's graph *families*): R-MAT (web-like power-law), SBM (planted
+communities), LFR (community benchmark), powerlaw-cluster (social-like)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import CSRGraph, build_csr
+
+
+def rmat_graph(scale: int, edge_factor: int = 8,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19,
+               seed: int = 0, n_cap: int | None = None,
+               e_cap: int | None = None) -> CSRGraph:
+    """R-MAT generator (Graph500-style): 2^scale vertices, power-law degrees."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        go_right = (r > a + b) & (r <= a + b + c)
+        go_down = r > a + b + c
+        pick_b = (r > a) & (r <= a + b)
+        src += ((go_right | go_down).astype(np.int64)) << bit
+        dst += ((pick_b | go_down).astype(np.int64)) << bit
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = np.ones(len(src), np.float32)
+    return build_csr(src, dst, w, n, symmetrize=True, dedup=True,
+                     n_cap=n_cap, e_cap=e_cap)
+
+
+def sbm_graph(n_communities: int, size: int, p_in: float, p_out: float,
+              seed: int = 0) -> Tuple[CSRGraph, np.ndarray]:
+    """Stochastic block model; returns (graph, true_membership)."""
+    rng = np.random.default_rng(seed)
+    n = n_communities * size
+    labels = np.repeat(np.arange(n_communities), size)
+    src_l, dst_l = [], []
+    # Within-community edges.
+    for cix in range(n_communities):
+        base = cix * size
+        tri = rng.random((size, size)) < p_in
+        iu = np.triu_indices(size, 1)
+        sel = tri[iu]
+        src_l.append(base + iu[0][sel])
+        dst_l.append(base + iu[1][sel])
+    # Cross edges (sparse sampling).
+    n_cross = rng.binomial(n * (n - 1) // 2, p_out)
+    cs = rng.integers(0, n, n_cross)
+    cd = rng.integers(0, n, n_cross)
+    off = (labels[cs] != labels[cd]) & (cs != cd)
+    src_l.append(cs[off])
+    dst_l.append(cd[off])
+    src = np.concatenate(src_l)
+    dst = np.concatenate(dst_l)
+    w = np.ones(len(src), np.float32)
+    return build_csr(src, dst, w, n, symmetrize=True, dedup=True), labels
+
+
+def lfr_graph(n: int = 1000, seed: int = 42):
+    """LFR benchmark via networkx; returns (CSRGraph, networkx graph)."""
+    import networkx as nx
+    from repro.core.graph import from_networkx
+    g = nx.LFR_benchmark_graph(
+        n, 3, 1.5, 0.1, average_degree=10, max_degree=max(50, n // 20),
+        min_community=20, seed=seed)
+    g = nx.Graph(g)
+    g.remove_edges_from(nx.selfloop_edges(g))
+    return from_networkx(g), g
+
+
+def powerlaw_cluster(n: int, m: int = 10, p: float = 0.3, seed: int = 7):
+    import networkx as nx
+    from repro.core.graph import from_networkx
+    g = nx.powerlaw_cluster_graph(n, m, p, seed=seed)
+    return from_networkx(g), g

@@ -1,0 +1,21 @@
+"""Synthetic Criteo-like click batches for the FM architecture."""
+
+from __future__ import annotations
+
+from typing import Iterator, Sequence
+
+import numpy as np
+
+
+def synthetic_click_batches(vocab_sizes: Sequence[int], batch: int,
+                            seed: int = 0) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    vs = np.asarray(vocab_sizes)
+    # Hidden linear model over a few hash features -> learnable CTR signal.
+    w_true = rng.normal(size=len(vs)) * 0.5
+    while True:
+        ids = (rng.pareto(1.2, size=(batch, len(vs))) * vs / 20).astype(np.int64)
+        ids = np.minimum(ids, vs - 1).astype(np.int32)
+        logit = ((ids % 7 - 3) * w_true).sum(1) * 0.3
+        y = (rng.random(batch) < 1 / (1 + np.exp(-logit))).astype(np.int32)
+        yield {"field_ids": ids, "labels": y}

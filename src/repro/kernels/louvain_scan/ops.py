@@ -1,0 +1,79 @@
+"""Jit'd public wrapper for the Louvain ELL scan kernel.
+
+`louvain_scan` dispatches to the Pallas kernel (TPU target; interpret=True on
+CPU) or the pure-jnp reference, choosing VMEM-safe block shapes per ELL width.
+`prepare_ell_inputs` builds the pre-gathered per-slot arrays from graph state
+(the gathers are XLA's job — Pallas TPU kernels keep to dense tiles).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import ELLBlock
+from repro.kernels.louvain_scan.louvain_scan import louvain_scan_pallas
+from repro.kernels.louvain_scan.ref import louvain_scan_ref
+
+# width -> rows per program, keeping the (B, D, D) compare tile + operands
+# comfortably inside ~4 MB of VMEM (paper-analogue of Far-KV sizing).
+_BLOCK_ROWS = {16: 256, 64: 64, 256: 8, 1024: 1}
+
+
+def block_rows_for_width(width: int) -> int:
+    best = 8
+    for w_key, rows in _BLOCK_ROWS.items():
+        if width <= w_key:
+            return rows
+    return 1
+
+
+def prepare_ell_inputs(
+    block: ELLBlock,
+    comm: jax.Array,       # (n_cap + 1,) int32
+    sigma: jax.Array,      # (n_cap + 1,) f32
+    k: jax.Array,          # (n_cap + 1,) f32
+    n_cap: int,
+) -> Tuple[jax.Array, ...]:
+    """Gather per-slot community state for one ELL block (outside the kernel)."""
+    rows, cols, w = block.rows, block.cols, block.w
+    dead = (cols == n_cap) | (cols == rows[:, None])   # padding or self-loop
+    c_nbr = jnp.where(dead, -1, comm[cols])
+    w_nbr = jnp.where(dead, 0.0, w).astype(jnp.float32)
+    sigma_nbr = jnp.where(dead, 0.0, sigma[jnp.maximum(c_nbr, 0)]).astype(jnp.float32)
+    k_i = k[rows][:, None].astype(jnp.float32)
+    c_own = comm[rows][:, None]
+    sigma_own = sigma[c_own[:, 0]][:, None].astype(jnp.float32)
+    return c_nbr, w_nbr, sigma_nbr, k_i, c_own, sigma_own
+
+
+def louvain_scan(
+    c_nbr: jax.Array,
+    w_nbr: jax.Array,
+    sigma_nbr: jax.Array,
+    k_i: jax.Array,
+    c_own: jax.Array,
+    sigma_own: jax.Array,
+    m: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    block_rows: int | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Best (community, dQ) per ELL row.  See ref.py for exact semantics."""
+    if not use_pallas:
+        return louvain_scan_ref(c_nbr, w_nbr, sigma_nbr, k_i, c_own, sigma_own, m)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r, d = c_nbr.shape
+    rows = block_rows or block_rows_for_width(d)
+    rows = max(1, min(rows, r))
+    while r % rows:  # shrink to a divisor of R (rows are align-padded anyway)
+        rows -= 1
+    out_c, out_dq = louvain_scan_pallas(
+        c_nbr, w_nbr, sigma_nbr, k_i, c_own, sigma_own, m,
+        block_rows=rows, interpret=interpret,
+    )
+    return out_c[:, 0], out_dq[:, 0]

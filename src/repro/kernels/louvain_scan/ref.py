@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the Louvain ELL best-community scan.
+
+Semantics (per ELL row r = one vertex i):
+  K_{i->c_d} = sum_e w[r,e] * [c[r,e] == c[r,d]]           (collision-free scan)
+  K_{i->own} = sum_e w[r,e] * [c[r,e] == c_own[r]]
+  dQ_d       = (K_d - K_own)/m - k_i*(k_i + Sigma_{c_d} - Sigma_own)/(2 m^2)
+  best slot  = argmax_d dQ_d over valid slots (c_d >= 0, c_d != c_own),
+               ties broken to the smallest community id.
+Outputs per row: (best_c int32 — or -1 if no valid slot, best_dq f32).
+
+Inputs are pre-masked: padding/self-loop slots carry w == 0 and c == -1.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def louvain_scan_ref(
+    c_nbr: jnp.ndarray,      # (R, D) int32, -1 for dead slots
+    w_nbr: jnp.ndarray,      # (R, D) float, 0 for dead slots
+    sigma_nbr: jnp.ndarray,  # (R, D) float — Sigma[c_nbr], any value at dead slots
+    k_i: jnp.ndarray,        # (R, 1) float — vertex weighted degree
+    c_own: jnp.ndarray,      # (R, 1) int32 — current community
+    sigma_own: jnp.ndarray,  # (R, 1) float — Sigma[c_own]
+    m: jnp.ndarray,          # () float — total graph weight
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    w = w_nbr.astype(jnp.float32)
+    eq = (c_nbr[:, :, None] == c_nbr[:, None, :]) & (c_nbr[:, None, :] >= 0)
+    k_to = jnp.einsum("rde,re->rd", eq.astype(jnp.float32), w)  # (R, D)
+    k_own = jnp.sum(jnp.where(c_nbr == c_own, w, 0.0), axis=1, keepdims=True)
+
+    k_i = k_i.astype(jnp.float32)
+    dq = (k_to - k_own) / m - k_i * (
+        k_i + sigma_nbr.astype(jnp.float32) - sigma_own.astype(jnp.float32)
+    ) / (2.0 * m * m)
+
+    valid = (c_nbr >= 0) & (c_nbr != c_own)
+    dq = jnp.where(valid, dq, -jnp.inf)
+    best_dq = jnp.max(dq, axis=1)
+    is_best = (dq == best_dq[:, None]) & valid
+    big = jnp.iinfo(jnp.int32).max
+    best_c = jnp.min(jnp.where(is_best, c_nbr, big), axis=1)
+    best_c = jnp.where(jnp.isfinite(best_dq), best_c, -1)
+    best_dq = jnp.where(jnp.isfinite(best_dq), best_dq, -jnp.inf)
+    return best_c.astype(jnp.int32), best_dq.astype(jnp.float32)

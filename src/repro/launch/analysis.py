@@ -1,0 +1,201 @@
+"""Roofline bookkeeping over compiled dry-run artifacts.
+
+Terms (per §Roofline; TPU v5e constants):
+    compute    = HLO_FLOPs_per_chip   / peak_FLOP/s
+    memory     = HLO_bytes_per_chip   / HBM_bw
+    collective = coll_bytes_per_chip  / link_bw
+
+``compiled.cost_analysis()`` reports per-chip (post-SPMD-partition) flops and
+bytes.  Collective bytes are NOT in cost_analysis — we parse the optimized
+HLO text and sum the output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async ``-start`` forms
+counted once, ``-done`` skipped).  Post-SPMD shapes are per-chip, so the sums
+are already per-chip quantities; the global volume is x n_chips, which cancels
+in the roofline ratio — equivalent to the global formula in the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# One HLO shape literal: dtype[d0,d1,...] — dims may be empty (scalar).
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of collective ops in optimized HLO, by kind."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # `%op.N = <shape or tuple> collective-kind(...)`
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s+([a-z\-]+)\(", line)
+        if not m:
+            continue
+        shapes_part, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        total = sum(_shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(shapes_part))
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: Dict[str, int]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def cost_dict(compiled) -> dict:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def roofline_from_compiled(compiled) -> Roofline:
+    ca = cost_dict(compiled)
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops_per_chip=flops, bytes_per_chip=byts,
+                    coll_bytes_per_chip=float(sum(coll.values())),
+                    coll_by_kind=coll)
+
+
+def memory_stats(compiled) -> dict:
+    """Per-chip memory analysis (argument/output/temp/peak), best-effort."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (the "useful work" numerator for the waste ratio).
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(cfg, shape_name: str, n_tokens: int, kind: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference steps."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * n_tokens
+
+
+def model_flops(arch, shape: str, smoke: bool = False) -> Optional[float]:
+    """Best-effort analytic useful-FLOPs per step for any registered arch."""
+    fam = getattr(arch, "family", "lm")
+    if fam == "lm":
+        from repro.configs.lm_common import LM_SHAPES
+        seq, batch, kind = LM_SHAPES[shape]
+        cfg = arch.smoke_config() if smoke else arch.full_config()
+        n_tok = batch * (1 if kind == "decode" else seq)
+        return lm_model_flops(cfg, shape, n_tok, kind)
+    if fam == "recsys":
+        from repro.configs.fm import FM_SHAPES, N_CANDIDATES
+        batch, kind = FM_SHAPES[shape]
+        cfg = arch.smoke_config() if smoke else arch.full_config()
+        k, f = cfg.embed_dim, cfg.n_fields
+        if kind == "retrieval":
+            n_cand = 1024 if smoke else N_CANDIDATES
+            return 2.0 * n_cand * k
+        fwd = 4.0 * batch * f * k          # sum-square trick: 2 passes over (B,F,k)
+        return (3.0 * fwd) if kind == "train" else fwd
+    if fam == "gnn":
+        from repro.configs.gnn_common import GNN_SHAPES, GNN_SMOKE_SHAPES
+        sh = (GNN_SMOKE_SHAPES if smoke else GNN_SHAPES)[shape]
+        cfg = arch.make_config(sh, smoke)
+        b = sh.batch if sh.kind != "full" else 1
+        n, e, d = sh.n_nodes, sh.n_edges, getattr(cfg, "d_hidden", 64)
+        L = (getattr(cfg, "n_layers", None) or getattr(cfg, "n_blocks", 4))
+        # per layer: node transform 2·N·d_in·d_out + edge gather/scatter ~ e·d
+        node_flops = 2.0 * n * (sh.d_feat * d + (L - 1) * d * d) / max(L, 1)
+        per_layer = node_flops + 2.0 * e * d
+        if arch.arch_id == "dimenet":
+            from repro.configs.gnn_common import triplet_cap
+            t = triplet_cap(shape, sh)
+            per_layer += 2.0 * t * cfg.n_bilinear * d * 2   # bilinear einsum
+        if arch.arch_id == "equiformer-v2":
+            n_coef = (cfg.l_max + 1) ** 2
+            per_layer += 2.0 * e * n_coef * d * 4           # rotate+conv+rotate
+        return 3.0 * b * L * per_layer                       # train: fwd+bwd
+    return None

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape) on the
+production meshes, dump memory/cost/roofline artifacts.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  Smoke tests and benchmarks do NOT import this module —
+they see the real single CPU device.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+    python -m repro.launch.dryrun --arch fm --shape retrieval_cand --multipod
+    python -m repro.launch.dryrun --all [--multipod] [--out results/dryrun]
+
+Per cell, emits JSON with: lower/compile seconds, per-chip HLO flops/bytes,
+collective bytes by kind (parsed from optimized HLO), memory analysis, the
+three roofline terms, and MODEL_FLOPS (analytic useful work).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def _compile_and_cost(arch, shape, mesh, *, n_repeats=None,
+                      scan_layers=True, variant=()):
+    """(compiled, costs-dict) for one lower+compile."""
+    import jax
+    from repro.launch import analysis
+
+    kw = {} if n_repeats is None else {"n_repeats": n_repeats,
+                                       "scan_layers": scan_layers}
+    if variant:
+        kw["variant"] = tuple(variant)
+    fn, arg_specs, in_shardings = arch.build_step(shape, mesh, **kw)
+    donate = getattr(fn, "donate_argnums", ())
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_shardings,
+                          donate_argnums=donate).lower(*arg_specs)
+        compiled = lowered.compile()
+    roof = analysis.roofline_from_compiled(compiled)
+    ca = analysis.cost_dict(compiled)
+    return compiled, {
+        "flops": roof.flops_per_chip,
+        "bytes": roof.bytes_per_chip,
+        "coll": roof.coll_by_kind,
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def run_cell(arch_id: str, shape: str, *, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True,
+             with_cost: bool = True, variant: tuple = ()) -> dict:
+    import jax
+    from repro.configs.registry import get_arch
+    from repro.launch import analysis
+    from repro.launch.mesh import make_production_mesh
+
+    arch = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch_id, "shape": shape, "mesh": mesh_name,
+           "n_devices": int(mesh.devices.size), "ok": False,
+           "variant": list(variant)}
+    vkw = {"variant": tuple(variant)} if variant else {}
+    t0 = time.perf_counter()
+    try:
+        fn, arg_specs, in_shardings = arch.build_step(shape, mesh, **vkw)
+        donate = getattr(fn, "donate_argnums", ())
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*arg_specs)
+            rec["lower_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.perf_counter() - t1
+
+            rec["memory"] = analysis.memory_stats(compiled)
+            roof = analysis.roofline_from_compiled(compiled)
+            rec["cost"] = {k: v for k, v in analysis.cost_dict(compiled).items()
+                           if k in _COST_KEYS}
+
+        # XLA cost_analysis counts while-loop (scan-over-layers) bodies ONCE.
+        # For LM archs, compile UNROLLED r=1 and r=2 variants (layer costs
+        # inline, so they are counted) and extrapolate:
+        # cost(R) = cost(1) + (R-1) * [cost(2) - cost(1)].
+        if (with_cost and getattr(arch, "family", "lm") == "lm"
+                and hasattr(arch, "config")):
+            R = arch.config().n_repeats
+            _, c1 = _compile_and_cost(arch, shape, mesh, n_repeats=1,
+                                      scan_layers=False, variant=variant)
+            _, c2 = _compile_and_cost(arch, shape, mesh, n_repeats=2,
+                                      scan_layers=False, variant=variant)
+            lin = lambda a, b: a + (R - 1) * (b - a)
+            coll = {k: lin(c1["coll"][k], c2["coll"][k]) for k in c1["coll"]}
+            roof = analysis.Roofline(
+                flops_per_chip=lin(c1["flops"], c2["flops"]),
+                bytes_per_chip=lin(c1["bytes"], c2["bytes"]),
+                coll_bytes_per_chip=float(sum(coll.values())),
+                coll_by_kind=coll)
+            rec["scan_extrapolated"] = {"n_repeats": R, "r1": c1, "r2": c2}
+
+        rec["roofline"] = roof.as_dict()
+        mf = analysis.model_flops(arch, shape)
+        rec["model_flops"] = mf
+        if mf and roof.flops_per_chip:
+            # cost_analysis flops are per-chip; model flops are global.
+            hlo_global = roof.flops_per_chip * mesh.devices.size
+            rec["useful_flops_ratio"] = mf / hlo_global
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    if verbose:
+        if rec["ok"]:
+            r = rec["roofline"]
+            print(f"[OK] {arch_id} x {shape} @ {mesh_name}: "
+                  f"lower {rec['lower_s']:.1f}s compile {rec['compile_s']:.1f}s "
+                  f"| t_comp {r['t_compute_s']:.2e} t_mem {r['t_memory_s']:.2e} "
+                  f"t_coll {r['t_collective_s']:.2e} -> {r['bottleneck']}")
+        else:
+            print(f"[FAIL] {arch_id} x {shape} @ {mesh_name}: {rec['error']}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = ("_" + "-".join(variant)) if variant else ""
+        fname = f"{arch_id}_{shape}_{mesh_name}{suffix}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the cost-extrapolation compiles (multi-pod "
+                         "pass: compile success + memory only; the roofline "
+                         "table is single-pod)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="",
+                    help="comma-separated perf A/B switches "
+                         "(see EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+    variant = tuple(v for v in args.variant.split(",") if v)
+
+    from repro.configs.registry import all_cells
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch_id, shape in cells:
+        rec = run_cell(arch_id, shape, multi_pod=args.multipod,
+                       out_dir=args.out, with_cost=not args.no_cost,
+                       variant=variant)
+        n_fail += 0 if rec["ok"] else 1
+    print(f"dry-run complete: {len(cells) - n_fail}/{len(cells)} cells green")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

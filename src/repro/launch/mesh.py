@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init — the
+dry-run sets XLA_FLAGS before any import for exactly this reason).
+
+Production topology (TPU v5e target):
+  single-pod:  16 x 16 = 256 chips,  axes (data, model)
+  multi-pod:    2 x 16 x 16 = 512 chips, axes (pod, data, model)
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D (data,) mesh (examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

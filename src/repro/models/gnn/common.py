@@ -1,0 +1,86 @@
+"""Shared GNN infrastructure: message passing on edge lists via segment ops.
+
+JAX has no sparse SpMM beyond BCOO, so message passing is built directly on
+``jax.ops.segment_sum`` / ``segment_max`` over an edge-index — gather source
+features, transform, scatter-reduce to destinations.  Edge lists are padded to
+static capacity with src = dst = n_nodes (a sentinel row).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphBatch(NamedTuple):
+    """Padded graph (or batch of merged graphs).
+
+    node_feat : (N_pad, d_feat) float — input features.
+    edge_src  : (E_pad,) int32 — source node per directed edge (pad = N_pad).
+    edge_dst  : (E_pad,) int32 — destination node (pad = N_pad).
+    n_nodes   : () int32 — valid node count.
+    labels    : (N_pad,) int32 or (G,) — targets (node class / graph target).
+    graph_id  : (N_pad,) int32 — for batched small graphs (else zeros).
+    n_graphs  : () int32.
+    positions : (N_pad, 3) float or None — 3D coordinates (geometric models).
+    """
+
+    node_feat: jax.Array
+    edge_src: jax.Array
+    edge_dst: jax.Array
+    n_nodes: jax.Array
+    labels: jax.Array
+    graph_id: jax.Array
+    n_graphs: jax.Array
+    positions: Optional[jax.Array] = None
+
+
+def segment_softmax(logits: jax.Array, segments: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Softmax over groups (e.g. incoming edges of each node)."""
+    mx = jax.ops.segment_max(logits, segments, num_segments=num_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(logits - mx[segments])
+    den = jax.ops.segment_sum(ex, segments, num_segments=num_segments)
+    return ex / jnp.maximum(den[segments], 1e-16)
+
+
+def scatter_mean(values: jax.Array, segments: jax.Array,
+                 num_segments: int) -> jax.Array:
+    s = jax.ops.segment_sum(values, segments, num_segments=num_segments)
+    c = jax.ops.segment_sum(jnp.ones_like(segments, jnp.float32), segments,
+                            num_segments=num_segments)
+    return s / jnp.maximum(c, 1.0)[..., None] if values.ndim > 1 else \
+        s / jnp.maximum(c, 1.0)
+
+
+def mlp(x: jax.Array, params: list, act=jax.nn.relu) -> jax.Array:
+    """params: list of (w, b) pairs; activation between layers."""
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i + 1 < len(params):
+            x = act(x)
+    return x
+
+
+def mlp_init(key, dims, dtype=jnp.float32) -> list:
+    ks = jax.random.split(key, len(dims) - 1)
+    out = []
+    for i in range(len(dims) - 1):
+        w = jax.random.normal(ks[i], (dims[i], dims[i + 1]), jnp.float32)
+        out.append(((w / np.sqrt(dims[i])).astype(dtype),
+                    jnp.zeros((dims[i + 1],), dtype)))
+    return out
+
+
+def node_ce_loss(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None], 1)[:, 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

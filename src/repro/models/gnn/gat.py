@@ -1,0 +1,66 @@
+"""GAT (arXiv:1710.10903): SDDMM edge scores -> segment softmax -> weighted
+SpMM.  gat-cora config: 2 layers, 8 hidden per head, 8 heads."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import GraphBatch, node_ce_loss, segment_softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8          # per head
+    n_heads: int = 8
+    d_feat: int = 1433
+    n_classes: int = 7
+    negative_slope: float = 0.2
+
+
+def init_params(cfg: GATConfig, key: jax.Array) -> dict:
+    layers = []
+    d_in = cfg.d_feat
+    ks = jax.random.split(key, cfg.n_layers)
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        heads = 1 if last else cfg.n_heads
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append({
+            "w": jax.random.normal(k1, (d_in, heads, d_out)) / np.sqrt(d_in),
+            "a_src": jax.random.normal(k2, (heads, d_out)) / np.sqrt(d_out),
+            "a_dst": jax.random.normal(k3, (heads, d_out)) / np.sqrt(d_out),
+        })
+        d_in = heads * d_out
+    return {"layers": layers}
+
+
+def forward(cfg: GATConfig, params: dict, g: GraphBatch) -> jax.Array:
+    n_pad = g.node_feat.shape[0]
+    x = g.node_feat
+    for i, lp in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        h = jnp.einsum("nd,dho->nho", x, lp["w"])          # (N, H, O)
+        s_src = jnp.einsum("nho,ho->nh", h, lp["a_src"])   # (N, H)
+        s_dst = jnp.einsum("nho,ho->nh", h, lp["a_dst"])
+        e = s_src[g.edge_src] + s_dst[g.edge_dst]          # (E, H) SDDMM
+        e = jax.nn.leaky_relu(e, cfg.negative_slope)
+        # Mask padding edges out of the softmax.
+        e = jnp.where((g.edge_dst < n_pad)[:, None], e, -jnp.inf)
+        alpha = segment_softmax(e, g.edge_dst, n_pad + 1)  # (E, H)
+        msg = h[g.edge_src] * alpha[:, :, None]
+        out = jax.ops.segment_sum(msg, g.edge_dst, num_segments=n_pad + 1)[:n_pad]
+        x = out.reshape(n_pad, -1) if last else jax.nn.elu(out).reshape(n_pad, -1)
+    return x  # (N, n_classes)
+
+
+def loss_fn(cfg: GATConfig, params: dict, g: GraphBatch) -> jax.Array:
+    logits = forward(cfg, params, g)
+    mask = jnp.arange(logits.shape[0]) < g.n_nodes
+    return node_ce_loss(logits, g.labels, mask)

@@ -1,0 +1,122 @@
+"""Real spherical-harmonic rotation (Wigner-D) matrices, batched over edges.
+
+Implements the Ivanic–Ruedenberg recurrence (J. Phys. Chem. 1996, 100, 6342 +
+errata): R^l is built from R^1 and R^{l-1} entirely with elementwise ops, so a
+batch of edge rotations (E, 3, 3) turns into a list of (E, 2l+1, 2l+1) block
+matrices with static Python loops (l <= l_max is small).
+
+Convention: real SH basis ordered m = -l..l with the l=1 basis (y, z, x) —
+R^1 is the cartesian rotation conjugated by that permutation.  ``rotation_to_z``
+builds R with R @ n = z so that rotated edges point at +z, where real SH are
+nonzero only at m = 0 — the eSCN trick's precondition.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rotation_to_z(n: jax.Array) -> jax.Array:
+    """(E, 3) unit vectors -> (E, 3, 3) rotations with R @ n = +z."""
+    # Stable tangent: pick the reference axis least aligned with n.
+    ref = jnp.where(
+        (jnp.abs(n[:, 2:3]) < 0.9), jnp.array([[0.0, 0.0, 1.0]]),
+        jnp.array([[1.0, 0.0, 0.0]]))
+    u = jnp.cross(ref, n)
+    u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-12)
+    v = jnp.cross(n, u)
+    return jnp.stack([u, v, n], axis=1)      # rows: u, v, n  =>  R n = e_z
+
+
+def _r1_from_cart(r: jax.Array) -> jax.Array:
+    """Cartesian (E, 3, 3) -> l=1 real-SH block with (y, z, x) ordering."""
+    perm = jnp.asarray([1, 2, 0])            # (x,y,z) -> (y,z,x)
+    return r[:, perm][:, :, perm]
+
+
+def wigner_d_stack(r_cart: jax.Array, l_max: int) -> List[jax.Array]:
+    """Returns [D_0, D_1, ..., D_lmax], D_l: (E, 2l+1, 2l+1)."""
+    e = r_cart.shape[0]
+    ds = [jnp.ones((e, 1, 1), r_cart.dtype)]
+    if l_max == 0:
+        return ds
+    r1 = _r1_from_cart(r_cart)
+    ds.append(r1)
+
+    def R1(i, j):          # i, j in [-1, 0, 1]
+        return r1[:, i + 1, j + 1]
+
+    for l in range(2, l_max + 1):
+        prev = ds[l - 1]
+
+        def Rp(a, b):      # R^{l-1} entries, a, b in [-(l-1) .. l-1]
+            return prev[:, a + l - 1, b + l - 1]
+
+        def P(i, a, b):
+            # a: row of R^{l-1} (|a| <= l-1); b: column of R^l (|b| <= l).
+            if b == -l:
+                return R1(i, 1) * Rp(a, -l + 1) + R1(i, -1) * Rp(a, l - 1)
+            if b == l:
+                return R1(i, 1) * Rp(a, l - 1) - R1(i, -1) * Rp(a, -l + 1)
+            return R1(i, 0) * Rp(a, b)
+
+        rows = []
+        for m in range(-l, l + 1):          # row index
+            row = []
+            am = abs(m)
+            for n in range(-l, l + 1):      # column index
+                denom = ((2 * l) * (2 * l - 1) if abs(n) == l
+                         else (l + n) * (l - n))
+                # u, v, w coefficients (Ivanic–Ruedenberg + errata): the
+                # denominator depends on the COLUMN n, the numerators and the
+                # case analysis on the ROW m.
+                u_c = np.sqrt(max((l + m) * (l - m), 0) / denom)
+                v_c = 0.5 * np.sqrt((1 + (m == 0)) * max((l + am - 1)
+                                    * (l + am), 0) / denom) * (1 - 2 * (m == 0))
+                w_c = -0.5 * np.sqrt(max((l - am - 1) * (l - am), 0) / denom) \
+                    * (1 - (m == 0))
+
+                term = 0.0
+                if u_c:
+                    term = term + u_c * P(0, m, n)
+                if v_c:
+                    if m == 0:
+                        vv = P(1, 1, n) + P(-1, -1, n)
+                    elif m > 0:
+                        vv = P(1, m - 1, n) * np.sqrt(1 + (m == 1)) \
+                            - P(-1, -m + 1, n) * (1 - (m == 1))
+                    else:
+                        vv = P(1, m + 1, n) * (1 - (m == -1)) \
+                            + P(-1, -m - 1, n) * np.sqrt(1 + (m == -1))
+                    term = term + v_c * vv
+                if w_c:
+                    if m > 0:
+                        ww = P(1, m + 1, n) + P(-1, -m - 1, n)
+                    else:
+                        ww = P(1, m - 1, n) - P(-1, -m + 1, n)
+                    term = term + w_c * ww
+                row.append(term)
+            rows.append(jnp.stack(row, axis=-1))
+        ds.append(jnp.stack(rows, axis=1))
+    return ds
+
+
+def block_diag_apply(ds: List[jax.Array], x: jax.Array,
+                     transpose: bool = False) -> jax.Array:
+    """Apply the stacked Wigner blocks to irrep features.
+
+    x: (E, (l_max+1)^2, C); returns same shape — each l block rotated.
+    """
+    outs = []
+    off = 0
+    for l, d in enumerate(ds):
+        blk = x[:, off:off + 2 * l + 1]
+        mat = jnp.swapaxes(d, 1, 2) if transpose else d
+        outs.append(jnp.einsum("eij,ejc->eic", mat, blk))
+        off += 2 * l + 1
+    return jnp.concatenate(outs, axis=1)

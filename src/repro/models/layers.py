@@ -1,0 +1,220 @@
+"""Shared transformer building blocks (pure-JAX, functional, dry-run friendly).
+
+Everything takes explicit param pytrees; initialization mirrors the shapes the
+dry-run lowers with ShapeDtypeStructs.  Attention is blockwise (online softmax
+over KV chunks, FlashAttention-style in XLA):
+
+  - full-causal layers unroll a small number of query blocks, each scanning
+    exactly the KV blocks at/below its diagonal — compiled FLOPs ~ S^2/2, not
+    S^2, so cost_analysis() reflects the real causal work;
+  - sliding-window layers visit only the KV blocks intersecting their window
+    (O(S * W) FLOPs);
+  - GQA never materializes repeated KV heads (grouped einsums).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _tile(q5, k_blk, v_blk, mask, scale):
+    """One attention tile.  q5: (B, Qb, Hkv, G, Dh); k/v: (B, Kb, Hkv, Dh).
+
+    Returns running-softmax pieces (m, l, o) with
+    m, l: (B, Hkv, G, Qb, 1); o: (B, Qb, Hkv, G, Dh) — all f32.
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k_blk,
+                   preferred_element_type=jnp.float32)
+    s = s * scale + jnp.where(mask, 0.0, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
+                   preferred_element_type=jnp.float32)
+    return m, l, o.astype(jnp.float32)
+
+
+def _merge(carry, m_i, l_i, o_i):
+    m_run, l_run, o_run = carry
+    m_new = jnp.maximum(m_run, m_i)
+    alpha = jnp.exp(m_run - m_new)
+    beta = jnp.exp(m_i - m_new)
+    l_new = l_run * alpha + l_i * beta
+    # (B,H,G,Q,1) -> (B,Q,H,G,1) to scale o.
+    tr = lambda t: jnp.transpose(t, (0, 3, 1, 2, 4))
+    o_new = o_run * tr(alpha) + o_i * tr(beta)
+    return m_new, l_new, o_new
+
+
+def blockwise_attention(
+    q: jax.Array,                  # (B, Sq, Hq, Dh)
+    k: jax.Array,                  # (B, Sk, Hkv, Dh)
+    v: jax.Array,                  # (B, Sk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window size (None = full)
+    q_offset: int = 0,             # static absolute position of q[0]
+    q_block: int = 512,
+    kv_block: int = 512,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    windowed = window is not None and window < sk
+    if not windowed:
+        # The causal-exact path unrolls query blocks in Python — cap at 8
+        # blocks so the HLO stays small at long sequence lengths.
+        q_block = max(q_block, -(-sq // 8))
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, q_block, sk, kv_block)
+    nq = sq // q_block
+    nk = sk // kv_block
+    q5 = q.reshape(b, sq, hkv, g, dh)
+
+    def run_q_block(qi_static: int):
+        """Causal-exact path: static KV span per query block (unrolled)."""
+        q_i = q5[:, qi_static * q_block:(qi_static + 1) * q_block]
+        q_pos = q_offset + qi_static * q_block + jnp.arange(q_block)
+        hi = nk if not causal else min(
+            nk, -(-(q_offset + (qi_static + 1) * q_block) // kv_block))
+
+        def kv_step(carry, kb):
+            k_i = jax.lax.dynamic_slice_in_dim(k, kb * kv_block, kv_block, 1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, kb * kv_block, kv_block, 1)
+            kv_pos = kb * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            m_i, l_i, o_i = _tile(q_i, k_i, v_i, mask[None, None, None], scale)
+            return _merge(carry, m_i, l_i, o_i), None
+
+        carry0 = (
+            jnp.full((b, hkv, g, q_block, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hkv, g, q_block, 1), jnp.float32),
+            jnp.zeros((b, q_block, hkv, g, dv), jnp.float32),
+        )
+        (m_f, l_f, o_f), _ = jax.lax.scan(kv_step, carry0, jnp.arange(hi))
+        l_t = jnp.transpose(l_f, (0, 3, 1, 2, 4))
+        return o_f / jnp.maximum(l_t, 1e-30)
+
+    def run_q_block_windowed(qi):
+        """Windowed path: fixed span of KV blocks around the diagonal."""
+        span = min(nk, -(-(window + q_block) // kv_block) + 1)
+        q_i = jax.lax.dynamic_slice_in_dim(q5, qi * q_block, q_block, 1)
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+        lo_pos = jnp.maximum(q_offset + qi * q_block - window + 1, 0)
+        kv_lo = jnp.clip(lo_pos // kv_block, 0, nk - span)
+
+        def kv_step(carry, ki):
+            kb = kv_lo + ki
+            k_i = jax.lax.dynamic_slice_in_dim(k, kb * kv_block, kv_block, 1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, kb * kv_block, kv_block, 1)
+            kv_pos = kb * kv_block + jnp.arange(kv_block)
+            mask = q_pos[:, None] - kv_pos[None, :] < window
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            m_i, l_i, o_i = _tile(q_i, k_i, v_i, mask[None, None, None], scale)
+            return _merge(carry, m_i, l_i, o_i), None
+
+        carry0 = (
+            jnp.full((b, hkv, g, q_block, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hkv, g, q_block, 1), jnp.float32),
+            jnp.zeros((b, q_block, hkv, g, dv), jnp.float32),
+        )
+        (m_f, l_f, o_f), _ = jax.lax.scan(kv_step, carry0, jnp.arange(span))
+        l_t = jnp.transpose(l_f, (0, 3, 1, 2, 4))
+        return o_f / jnp.maximum(l_t, 1e-30)
+
+    if windowed:
+        outs = jax.lax.map(run_q_block_windowed, jnp.arange(nq))   # (nq,B,qb,...)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, dv)
+    else:
+        parts = [run_q_block(qi) for qi in range(nq)]
+        out = jnp.concatenate(parts, axis=1) if nq > 1 else parts[0]
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, Hq, Dh)
+    k_cache: jax.Array,      # (B, S, Hkv, Dh) — bf16/f32 or int8 (quantized)
+    v_cache: jax.Array,      # (B, S, Hkv, Dh)
+    cache_len: jax.Array,    # (B,) or scalar — valid prefix length
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,   # (B, S, Hkv) int8 dequant scales
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Single-token attention against a (padded) KV cache — O(S) per token.
+
+    With k_scale/v_scale the caches hold int8 values; dequantization happens
+    in-register (the per-row scale folds into the logits / the probabilities),
+    so HBM reads stay at 1 byte/element."""
+    b, s, hkv, dh = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+    qf = q[:, 0].astype(jnp.float32).reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    if k_scale is not None:
+        logits *= jnp.moveaxis(k_scale, 1, 2)[:, :, None, :]   # (B,H,1,S)
+    logits *= scale
+    pos = jnp.arange(s)
+    clen = jnp.asarray(cache_len).reshape(-1, 1, 1, 1)
+    mask = pos[None, None, None, :] < clen
+    if window is not None and window < s:
+        mask &= pos[None, None, None, :] >= clen - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.moveaxis(v_scale, 1, 2)[:, :, None, :]     # fold dequant
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def swiglu_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_id: int = -1) -> jax.Array:
+    """Mean token CE, numerically stable, ignoring ``ignore_id`` positions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = labels != ignore_id
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Prefill/train: the latent c_kv is up-projected to per-head K/V and fed to the
+shared blockwise attention.  Decode: the *absorbed* form — W_UK folds into the
+query and W_UV into the output — so the per-token cost is O(S * kv_lora) and
+the cache stores only (kv_lora + rope_dim) floats per token (576 for V2), the
+paper's headline memory saving.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, blockwise_attention, rms_norm
+
+
+class MLAConfig(NamedTuple):
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+def mla_qkv(p, cfg: MLAConfig, n_heads: int, x, positions, rope_theta):
+    """Project to (q_nope, q_rope, c_kv, k_rope).  x: (B, S, d)."""
+    b, s, _ = x.shape
+    h, dn, dr = n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+
+    cq = rms_norm(x @ p["w_dq"], p["q_ln"])                    # (B, S, q_lora)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_ln"])                # (B, S, kv_lora)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, rope_theta)
+    return q_nope, q_rope, c_kv, k_rope                        # k_rope: (B,S,1,dr)
+
+
+def mla_attention_full(p, cfg: MLAConfig, n_heads: int, x, positions,
+                       rope_theta: float, *, q_block: int = 512,
+                       kv_block: int = 512) -> jax.Array:
+    """Train/prefill MLA: materialize per-head K/V from the latent."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = (n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope, c_kv, k_rope = mla_qkv(p, cfg, h, x, positions, rope_theta)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    out = blockwise_attention(q, k, v, causal=True, q_block=q_block,
+                              kv_block=kv_block, softmax_scale=scale)
+    return out.reshape(b, s, h * dv) @ p["w_o"]
+
+
+def mla_decode(p, cfg: MLAConfig, n_heads: int, x, position,
+               c_cache, kr_cache, cache_len, rope_theta: float) -> jax.Array:
+    """Absorbed-latent decode.  x: (B, 1, d); caches: (B, S, kv_lora)/(B, S, dr).
+
+    score_h(t) = (W_UK_h^T q_nope_h) . c_t + q_rope_h . k_rope_t
+    out_h      = W_UV_h^T (sum_t p_t c_t)
+    """
+    b = x.shape[0]
+    h, dn, dr, dv = (n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    q_nope, q_rope, _, _ = mla_qkv(p, cfg, h, x, position, rope_theta)
+
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    q_eff = jnp.einsum("bohd,rhd->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))               # (B, H, r)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_eff, c_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bohd,bsd->bhs", q_rope.astype(jnp.float32),
+                        kr_cache.astype(jnp.float32))
+    logits = (s_lat + s_rope) / math.sqrt(dn + dr)
+    pos = jnp.arange(c_cache.shape[1])
+    mask = pos[None, None, :] < jnp.asarray(cache_len).reshape(-1, 1, 1)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, c_cache.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+    return (out.reshape(b, 1, h * dv) @ p["w_o"]).astype(x.dtype)
+
+
+def mla_init(key, cfg: MLAConfig, d_model: int, n_heads: int, dtype=jnp.float32):
+    h, dn, dr, dv = (n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 8)
+    init = lambda k, *s: (jax.random.normal(k, s, dtype)
+                          / math.sqrt(max(s[0], 1)))
+    return {
+        "w_dq": init(ks[0], d_model, cfg.q_lora_rank),
+        "q_ln": jnp.ones((cfg.q_lora_rank,), dtype),
+        "w_uq": init(ks[1], cfg.q_lora_rank, h * (dn + dr)),
+        "w_dkv": init(ks[2], d_model, cfg.kv_lora_rank),
+        "kv_ln": jnp.ones((cfg.kv_lora_rank,), dtype),
+        "w_kr": init(ks[3], d_model, dr),
+        "w_uk": init(ks[4], cfg.kv_lora_rank, h * dn),
+        "w_uv": init(ks[5], cfg.kv_lora_rank, h * dv),
+        "w_o": init(ks[6], h * dv, d_model),
+    }

@@ -1,0 +1,89 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch (GShard lineage).
+
+Dispatch avoids one-hot dispatch tensors: assignments are sorted by expert id,
+ranked within expert by a cumulative count, dropped beyond capacity, and the
+token features are gathered into a dense (E, capacity, d) buffer for a batched
+expert matmul.  Compiled FLOPs ~ top_k * tokens * expert_ffn — the real MoE
+cost, not the dense-all-experts upper bound.
+
+Sharding: the (E, cap, d) buffer and the expert weights shard over the
+``expert`` dimension for high-E models (DeepSeek: 160 experts / EP over the
+`model` axis) or over ``d_ff`` for low-E models (Mixtral: 8 experts / TP) —
+see configs/*.py for the per-arch rules.  Shared experts (DeepSeek) are plain
+dense FFNs added to the routed output.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import swiglu_ffn
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array            # (d, E)
+    w_gate: jax.Array            # (E, d, f)
+    w_up: jax.Array              # (E, d, f)
+    w_down: jax.Array            # (E, f, d)
+    shared_w_gate: Optional[jax.Array] = None   # (d, f_shared)
+    shared_w_up: Optional[jax.Array] = None
+    shared_w_down: Optional[jax.Array] = None
+
+
+def moe_ffn(
+    x: jax.Array,                # (T, d) — flattened tokens
+    p: MoEParams,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_softmax_after_topk: bool = False,
+) -> jax.Array:
+    """Top-k routed expert FFN; returns (T, d)."""
+    t, d = x.shape
+    e = p.router.shape[1]
+    logits = (x.astype(jnp.float32) @ p.router.astype(jnp.float32))  # (T, E)
+    if router_softmax_after_topk:
+        # Mixtral: softmax over the selected top-k logits only.
+        top_logits, top_idx = jax.lax.top_k(logits, top_k)
+        top_w = jax.nn.softmax(top_logits, axis=-1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_idx = jax.lax.top_k(probs, top_k)
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    capacity = max(int(capacity_factor * t * top_k / e), 4)
+
+    # Flatten (token, slot) assignments and rank them within each expert.
+    flat_e = top_idx.reshape(-1)                    # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)        # group by expert
+    sorted_e = flat_e[order]
+    ranks = jnp.arange(t * top_k) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")            # rank within expert group
+    keep = ranks < capacity
+    slot = jnp.where(keep, sorted_e * capacity + ranks, e * capacity)
+
+    # Gather tokens into the (E*cap, d) dispatch buffer (scatter by slot).
+    src_tok = flat_tok[order]
+    buf = jnp.zeros((e * capacity + 1, d), x.dtype).at[slot].set(x[src_tok])
+    buf = buf[:-1].reshape(e, capacity, d)
+
+    # Batched expert FFN: (E, cap, d) x (E, d, f) -> (E, cap, d).
+    h = jnp.einsum("ecd,edf->ecf", buf, p.w_gate)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p.w_up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p.w_down).reshape(e * capacity, d)
+
+    # Scatter-combine back to tokens, weighted by the router.
+    gathered = jnp.where(
+        keep[:, None], out_buf[jnp.minimum(slot, e * capacity - 1)], 0.0)
+    out = jnp.zeros((t, d), out_buf.dtype).at[src_tok].add(
+        gathered * flat_w[order][:, None])
+
+    if p.shared_w_gate is not None:
+        out = out + swiglu_ffn(x, p.shared_w_gate, p.shared_w_up,
+                               p.shared_w_down)
+    return out.astype(x.dtype)

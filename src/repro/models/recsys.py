@@ -1,0 +1,135 @@
+"""Factorization Machine (Rendle, ICDM'10) with JAX-native embedding bags.
+
+y(x) = w0 + sum_i w_i + 1/2 [ (sum_i v_i)^2 - sum_i v_i^2 ]   (O(n k) trick)
+
+over 39 sparse categorical fields (Criteo-style).  JAX has no native
+EmbeddingBag — ``embedding_bag`` below builds it from ``jnp.take`` +
+``jax.ops.segment_sum``, and the one-hot FM path is a plain sharded gather.
+Embedding tables are concatenated into one (sum(vocab), k) matrix row-sharded
+over the `model` mesh axis; per-field offsets turn field-local ids into rows.
+
+Shapes served: train (B=65536), online (B=512), bulk scoring (B=262144) and
+retrieval — one user query scored against 10^6 candidate items via a single
+batched matvec (no loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# A realistic Criteo-like vocabulary mix for 39 fields (sums to ~33M rows).
+DEFAULT_VOCABS = tuple(
+    [int(v) for v in
+     [10_000_000, 8_000_000, 4_000_000, 2_000_000, 1_500_000, 1_000_000,
+      800_000, 600_000, 400_000, 300_000, 200_000, 150_000, 100_000,
+      80_000, 60_000, 40_000, 30_000, 20_000, 15_000, 10_000,
+      8_000, 6_000, 4_000, 3_000, 2_000, 1_500, 1_000, 800, 600, 400,
+      300, 200, 150, 100, 80, 60, 40, 20, 10]]
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    vocab_sizes: Tuple[int, ...] = DEFAULT_VOCABS
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Table rows padded to a multiple of 512 so the row-sharded tables
+        divide every production mesh axis flattening; rows past total_vocab
+        are never indexed."""
+        return -(-self.total_vocab // 512) * 512
+
+    @property
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(np.int64)
+
+
+def init_params(cfg: FMConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    v_total = cfg.padded_vocab
+    return {
+        "w0": jnp.zeros((), dtype),
+        "w": (jax.random.normal(k1, (v_total,), jnp.float32) * 0.01).astype(dtype),
+        "v": (jax.random.normal(k2, (v_total, cfg.embed_dim), jnp.float32)
+              * 0.01).astype(dtype),
+    }
+
+
+def param_shapes(cfg: FMConfig) -> dict:
+    return {"w0": (), "w": (cfg.padded_vocab,),
+            "v": (cfg.padded_vocab, cfg.embed_dim)}
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, bag_ids: jax.Array,
+                  n_bags: int, mode: str = "sum",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: ragged gather + segment reduce.
+
+    table (V, k); ids (L,) row ids; bag_ids (L,) which bag each id belongs to.
+    """
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), bag_ids,
+                                num_segments=n_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, bag_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+def _rows_from_fields(cfg: FMConfig, field_ids: jax.Array) -> jax.Array:
+    """(B, F) per-field ids -> (B, F) global rows via field offsets."""
+    offs = jnp.asarray(cfg.field_offsets, jnp.int32)
+    return field_ids + offs[None, :]
+
+
+def forward(cfg: FMConfig, params: dict, field_ids: jax.Array) -> jax.Array:
+    """field_ids (B, F) int32 -> logits (B,)."""
+    rows = _rows_from_fields(cfg, field_ids)
+    v = jnp.take(params["v"], rows, axis=0)          # (B, F, k)  gather
+    w = jnp.take(params["w"], rows, axis=0)          # (B, F)
+    lin = params["w0"] + jnp.sum(w, axis=1)
+    sum_v = jnp.sum(v, axis=1)                        # (B, k)
+    sum_sq = jnp.sum(v * v, axis=1)                   # (B, k)
+    pair = 0.5 * jnp.sum(sum_v * sum_v - sum_sq, axis=1)
+    return (lin + pair).astype(jnp.float32)
+
+
+def loss_fn(cfg: FMConfig, params: dict, batch: dict) -> jax.Array:
+    """Binary cross-entropy on click labels."""
+    logits = forward(cfg, params, batch["field_ids"])
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_scores(cfg: FMConfig, params: dict, user_fields: jax.Array,
+                     cand_rows: jax.Array) -> jax.Array:
+    """Score ONE user (1, F) against N candidate rows (N,) in one matvec.
+
+    FM restricted to user-item cross terms: s(u, c) = <sum_f v_f(u), v_c> +
+    w_c + user-internal terms (constant over candidates, dropped for ranking).
+    """
+    rows = _rows_from_fields(cfg, user_fields)        # (1, F)
+    v_u = jnp.sum(jnp.take(params["v"], rows[0], axis=0), axis=0)   # (k,)
+    v_c = jnp.take(params["v"], cand_rows, axis=0)    # (N, k)
+    w_c = jnp.take(params["w"], cand_rows, axis=0)    # (N,)
+    return (v_c @ v_u + w_c).astype(jnp.float32)

@@ -1,0 +1,453 @@
+"""Configurable decoder-only LM covering the five assigned architectures.
+
+gemma3-12b (5:1 local:global GQA), qwen2-1.5b (GQA + QKV bias),
+internlm2-20b (GQA), mixtral-8x22b (GQA + SWA + 8-expert top-2 MoE),
+deepseek-v2-236b (MLA + 160-expert top-6 + 2 shared MoE).
+
+Layers run under `lax.scan` over *pattern repeats*: a config declares a layer
+pattern (e.g. gemma3: 5 sliding + 1 global) and the stack is that pattern
+repeated; each pattern slot owns stacked params of shape (n_repeats, ...).
+This keeps HLO size ~ O(pattern length), not O(n_layers), while letting layer
+kinds differ.
+
+Entry points:
+  init_params(cfg, key)        — real weights for smoke-scale configs.
+  param_specs(cfg)             — ShapeDtypeStructs for AOT dry-runs.
+  forward(cfg, params, tokens) — logits.
+  loss_fn / make_train_step    — training.
+  init_cache / decode_step     — single-token serving against a KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import mla as mla_mod
+from repro.models.layers import (apply_rope, blockwise_attention,
+                                 cross_entropy_loss, decode_attention,
+                                 rms_norm, swiglu_ffn)
+from repro.models.moe import MoEParams, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    softmax_after_topk: bool = False  # Mixtral-style router
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    # Layer pattern: tuple of window sizes, None = full attention.  The stack
+    # is the pattern repeated n_layers // len(pattern) times.
+    layer_windows: Tuple[Optional[int], ...] = (None,)
+    moe: Optional[MoESpec] = None
+    mla: Optional[mla_mod.MLAConfig] = None
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # "int8": GQA KV cache stored quantized (per-(pos, head) absmax scale),
+    # dequantized in-register during decode — halves cache HBM traffic and
+    # residency vs bf16.  MLA latent caches stay bf16 (already compressed).
+    kv_cache_dtype: str = "bf16"
+    # scan-over-repeats keeps HLO O(pattern) — the production default.  The
+    # dry-run's cost accounting unrolls (XLA cost_analysis counts while-loop
+    # bodies once, so per-layer costs must appear inline to be counted).
+    scan_layers: bool = True
+
+    @property
+    def n_repeats(self) -> int:
+        assert self.n_layers % len(self.layer_windows) == 0
+        return self.n_layers // len(self.layer_windows)
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for MODEL_FLOPS accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                    + d * m.kv_lora_rank + d * m.qk_rope_head_dim
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head \
+                + self.n_heads * self.d_head * d
+        if self.moe is not None:
+            ffn = (d * self.moe.n_experts
+                   + 3 * d * self.moe.d_ff_expert * self.moe.n_experts
+                   + 3 * d * self.moe.d_ff_shared * (1 if self.moe.n_shared else 0))
+        else:
+            ffn = 3 * d * f
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts only routed top-k + shared."""
+        if self.moe is None:
+            return self.param_count()
+        d, v = self.d_model, self.vocab
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                    + d * m.kv_lora_rank + d * m.qk_rope_head_dim
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head \
+                + self.n_heads * self.d_head * d
+        ffn = (3 * d * self.moe.d_ff_expert * self.moe.top_k
+               + 3 * d * self.moe.d_ff_shared * (1 if self.moe.n_shared else 0)
+               + d * self.moe.n_experts)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _layer_param_shapes(cfg: TransformerConfig) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    shapes = {"ln1": (d,), "ln2": (d,)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        shapes.update({
+            "w_dq": (d, m.q_lora_rank), "q_ln": (m.q_lora_rank,),
+            "w_uq": (m.q_lora_rank, h * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+            "w_dkv": (d, m.kv_lora_rank), "kv_ln": (m.kv_lora_rank,),
+            "w_kr": (d, m.qk_rope_head_dim),
+            "w_uk": (m.kv_lora_rank, h * m.qk_nope_head_dim),
+            "w_uv": (m.kv_lora_rank, h * m.v_head_dim),
+            "w_o": (h * m.v_head_dim, d),
+        })
+    else:
+        shapes.update({
+            "wq": (d, h * dh), "wk": (d, hk * dh), "wv": (d, hk * dh),
+            "wo": (h * dh, d),
+        })
+        if cfg.qkv_bias:
+            shapes.update({"bq": (h * dh,), "bk": (hk * dh,), "bv": (hk * dh,)})
+    if cfg.moe is not None:
+        mo = cfg.moe
+        shapes.update({
+            "router": (d, mo.n_experts),
+            "w_gate_e": (mo.n_experts, d, mo.d_ff_expert),
+            "w_up_e": (mo.n_experts, d, mo.d_ff_expert),
+            "w_down_e": (mo.n_experts, mo.d_ff_expert, d),
+        })
+        if mo.n_shared:
+            shapes.update({
+                "w_gate_s": (d, mo.d_ff_shared), "w_up_s": (d, mo.d_ff_shared),
+                "w_down_s": (mo.d_ff_shared, d),
+            })
+    else:
+        shapes.update({"w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff),
+                       "w_down": (cfg.d_ff, d)})
+    return shapes
+
+
+def param_shapes(cfg: TransformerConfig) -> dict:
+    per_layer = _layer_param_shapes(cfg)
+    n_slots = len(cfg.layer_windows)
+    out = {
+        "embed": (cfg.vocab, cfg.d_model),
+        "final_ln": (cfg.d_model,),
+        "layers": [
+            {k: (cfg.n_repeats,) + v for k, v in per_layer.items()}
+            for _ in range(n_slots)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = (cfg.d_model, cfg.vocab)
+    return out
+
+
+def param_specs(cfg: TransformerConfig) -> dict:
+    dt = cfg.activation_dtype
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dt),
+                        param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    shapes = param_shapes(cfg)
+    paths_leaves = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    leaves = paths_leaves[0]
+    treedef = paths_leaves[1]
+    keys = jax.random.split(key, len(leaves))
+    dt = cfg.activation_dtype
+
+    def make(k, path, shape):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if "ln" in name or name == "final_ln":          # norm scales -> ones
+            return jnp.ones(shape, dt)
+        if name.startswith("b"):                        # biases -> zeros
+            return jnp.zeros(shape, dt)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dt)
+
+    inits = [make(k, path, s) for k, (path, s) in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, inits)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attention_block(cfg: TransformerConfig, p: dict, x: jax.Array,
+                     positions, window: Optional[int]) -> jax.Array:
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if cfg.mla is not None:
+        return mla_mod.mla_attention_full(
+            p, cfg.mla, h, x, positions, cfg.rope_theta)
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q.reshape(b, s, h, dh), positions, cfg.rope_theta)
+    k = apply_rope(k.reshape(b, s, hk, dh), positions, cfg.rope_theta)
+    v = v.reshape(b, s, hk, dh)
+    out = blockwise_attention(q, k, v, causal=True, window=window)
+    return out.reshape(b, s, h * dh) @ p["wo"]
+
+
+def _ffn_block(cfg: TransformerConfig, p: dict, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    if cfg.moe is None:
+        return swiglu_ffn(x, p["w_gate"], p["w_up"], p["w_down"])
+    mp = MoEParams(
+        router=p["router"], w_gate=p["w_gate_e"], w_up=p["w_up_e"],
+        w_down=p["w_down_e"],
+        shared_w_gate=p.get("w_gate_s"), shared_w_up=p.get("w_up_s"),
+        shared_w_down=p.get("w_down_s"),
+    )
+    out = moe_ffn(x.reshape(b * s, d), mp, top_k=cfg.moe.top_k,
+                  capacity_factor=cfg.moe.capacity_factor,
+                  router_softmax_after_topk=cfg.moe.softmax_after_topk)
+    return out.reshape(b, s, d)
+
+
+def _decoder_layer(cfg: TransformerConfig, window, p, x, positions):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + _attention_block(cfg, p, h, positions, window)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _ffn_block(cfg, p, h)
+    return x
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array,
+            return_hidden: bool = False) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V); return_hidden skips the LM head
+    (for the sharded-CE loss, which fuses head matmul + softmax per vocab
+    shard)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    x = x * math.sqrt(cfg.d_model)
+    positions = jnp.arange(s)[None, :]
+
+    def repeat_body(x, slot_params):
+        for slot, window in enumerate(cfg.layer_windows):
+            p = slot_params[slot]
+            fn = functools.partial(_decoder_layer, cfg, window)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x = fn(p, x, positions)
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(repeat_body, x, params["layers"])
+    else:
+        for r in range(cfg.n_repeats):
+            slot_r = jax.tree.map(lambda a: a[r], params["layers"])
+            x, _ = repeat_body(x, slot_r)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg: TransformerConfig, params, batch) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: KV cache + single-token decode
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    n_slots = len(cfg.layer_windows)
+    r = cfg.n_repeats
+    if cfg.mla is not None:
+        m = cfg.mla
+        per = {"c_kv": (r, batch, max_len, m.kv_lora_rank),
+               "k_rope": (r, batch, max_len, m.qk_rope_head_dim)}
+    elif cfg.kv_cache_dtype == "int8":
+        per = {"k_q": (r, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+               "v_q": (r, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+               "k_s": (r, batch, max_len, cfg.n_kv_heads),
+               "v_s": (r, batch, max_len, cfg.n_kv_heads)}
+    else:
+        per = {"k": (r, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+               "v": (r, batch, max_len, cfg.n_kv_heads, cfg.d_head)}
+    return {"slots": [dict(per) for _ in range(n_slots)]}
+
+
+def _cache_leaf_dtype(cfg: TransformerConfig, name: str):
+    if name in ("k_q", "v_q"):
+        return jnp.int8
+    if name in ("k_s", "v_s"):
+        return jnp.float32
+    return cfg.activation_dtype
+
+
+def _cache_tree_map(cfg, fn, tree):
+    return {"slots": [{name: fn(shape, _cache_leaf_dtype(cfg, name))
+                       for name, shape in slot.items()}
+                      for slot in tree["slots"]]}
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    return _cache_tree_map(cfg, lambda s, dt: jnp.zeros(s, dt),
+                           cache_shapes(cfg, batch, max_len))
+
+
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    return _cache_tree_map(cfg, jax.ShapeDtypeStruct,
+                           cache_shapes(cfg, batch, max_len))
+
+
+def _quantize_kv(x: jax.Array):
+    """(B, 1, H, Dh) -> (int8 values, f32 per-(b, 1, h) absmax scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decode_layer(cfg, window, p, x, pos, cache_slot, cache_len):
+    """x: (B, 1, d); cache_slot: dict of (B, S, ...) arrays for THIS layer."""
+    b = x.shape[0]
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    hcur = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        m = cfg.mla
+        # Write the new latent into the cache, then absorbed-latent attention.
+        _, _, c_kv, k_rope = mla_mod.mla_qkv(
+            p, m, h, hcur, pos, cfg.rope_theta)
+        c_cache = jax.lax.dynamic_update_slice(
+            cache_slot["c_kv"], c_kv.astype(cache_slot["c_kv"].dtype),
+            (0, cache_len, 0))
+        kr_cache = jax.lax.dynamic_update_slice(
+            cache_slot["k_rope"], k_rope[:, :, 0].astype(
+                cache_slot["k_rope"].dtype), (0, cache_len, 0))
+        attn = mla_mod.mla_decode(p, m, h, hcur, pos, c_cache, kr_cache,
+                                  cache_len + 1, cfg.rope_theta)
+        x = x + attn
+        new_cache = {"c_kv": c_cache, "k_rope": kr_cache}
+    else:
+        q = hcur @ p["wq"]
+        kx = hcur @ p["wk"]
+        vx = hcur @ p["wv"]
+        if cfg.qkv_bias:
+            q, kx, vx = q + p["bq"], kx + p["bk"], vx + p["bv"]
+        q = apply_rope(q.reshape(b, 1, h, dh), pos, cfg.rope_theta)
+        kx = apply_rope(kx.reshape(b, 1, hk, dh), pos, cfg.rope_theta)
+        vx = vx.reshape(b, 1, hk, dh)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(kx)
+            vq, vs = _quantize_kv(vx)
+            upd = lambda buf, val, ix: jax.lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), ix)
+            k_q = upd(cache_slot["k_q"], kq, (0, cache_len, 0, 0))
+            v_q = upd(cache_slot["v_q"], vq, (0, cache_len, 0, 0))
+            k_s = upd(cache_slot["k_s"], ks, (0, cache_len, 0))
+            v_s = upd(cache_slot["v_s"], vs, (0, cache_len, 0))
+            attn = decode_attention(q, k_q, v_q, cache_len + 1,
+                                    window=window, k_scale=k_s, v_scale=v_s)
+            new_cache = {"k_q": k_q, "v_q": v_q, "k_s": k_s, "v_s": v_s}
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache_slot["k"], kx.astype(cache_slot["k"].dtype),
+                (0, cache_len, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache_slot["v"], vx.astype(cache_slot["v"].dtype),
+                (0, cache_len, 0, 0))
+            attn = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                    window=window)
+            new_cache = {"k": k_cache, "v": v_cache}
+        x = x + attn.reshape(b, 1, h * dh) @ p["wo"]
+    hcur = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _ffn_block(cfg, p, hcur)
+    return x, new_cache
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens, cache_len):
+    """One decode step.  tokens (B, 1) int32; cache_len scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    x = x * math.sqrt(cfg.d_model)
+    pos = cache_len + jnp.zeros((b, 1), jnp.int32)
+
+    def repeat_body(x, scan_in):
+        slot_params, slot_caches = scan_in
+        new_slots = []
+        for slot, window in enumerate(cfg.layer_windows):
+            x, nc = _decode_layer(cfg, window, slot_params[slot], x, pos,
+                                  slot_caches[slot], cache_len)
+            new_slots.append(nc)
+        return x, new_slots
+
+    # Scan over repeats; caches are scanned in/out along the repeat dim.
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(
+            repeat_body, x, (params["layers"], cache["slots"]))
+    else:
+        outs = []
+        for r in range(cfg.n_repeats):
+            slot_p = jax.tree.map(lambda a: a[r], params["layers"])
+            slot_c = jax.tree.map(lambda a: a[r], cache["slots"])
+            x, nc = repeat_body(x, (slot_p, slot_c))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"slots": new_caches}

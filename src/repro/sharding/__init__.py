@@ -1,0 +1,5 @@
+from repro.sharding.rules import (dp_axes, fm_param_pspecs, gnn_batch_pspecs,
+                                  lm_batch_pspecs, lm_param_pspecs)
+
+__all__ = ["dp_axes", "lm_param_pspecs", "lm_batch_pspecs",
+           "gnn_batch_pspecs", "fm_param_pspecs"]

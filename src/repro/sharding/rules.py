@@ -1,0 +1,167 @@
+"""Name-based sharding rules mapping model params/inputs to PartitionSpecs.
+
+Conventions (MaxText-style FSDP x TP):
+
+  - `model` axis: Megatron tensor parallelism — wq/wk/wv/gate/up
+    column-parallel, wo/down row-parallel, embedding vocab-sharded,
+    MoE expert-sharded (EP) when n_experts >= model-axis size.
+  - dp axes (`data`, and `pod` on the multi-pod mesh): FSDP — every
+    remaining large dimension is sharded over the dp axes so that params +
+    optimizer state scale 1/512 on the production mesh (a 236B-param model
+    at bf16 + f32 Adam moments is ~2.4 TB — replication over dp would be
+    ~100 GB/chip; fully sharded it is ~4.6 GB/chip).  GSPMD inserts the
+    FSDP all-gathers / reduce-scatters.
+  - KV caches: batch over dp, heads (or MLA latent) over model; the
+    batch=1 `long_500k` shape seq-shards the cache instead (sequence
+    parallelism — a 512k-token cache cannot live on one chip).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _layer_pspec(name: str, cfg, shard_experts: bool, F) -> P:
+    """PartitionSpec for one (unstacked) layer param by name.
+
+    F is the FSDP axis group (tuple of dp axis names).
+    """
+    if name in ("ln1", "ln2", "q_ln", "kv_ln"):
+        return P(None)
+    # --- attention ---
+    if name in ("wq", "wk", "wv"):
+        return P(F, "model")
+    if name in ("bq", "bk", "bv"):
+        return P("model")
+    if name == "wo":
+        return P("model", F)
+    # --- MLA ---
+    if name in ("w_dq", "w_dkv", "w_kr"):
+        return P(F, None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return P(F, "model")
+    if name == "w_o":
+        return P("model", F)
+    # --- dense FFN ---
+    if name in ("w_gate", "w_up"):
+        return P(F, "model")
+    if name == "w_down":
+        return P("model", F)
+    # --- MoE ---
+    if name == "router":
+        return P(F, None)
+    if name in ("w_gate_e", "w_up_e"):
+        return P("model", F, None) if shard_experts else P(None, F, "model")
+    if name == "w_down_e":
+        return P("model", None, F) if shard_experts else P(None, "model", F)
+    if name in ("w_gate_s", "w_up_s"):
+        return P(F, "model")
+    if name == "w_down_s":
+        return P("model", F)
+    raise ValueError(f"no sharding rule for param {name!r}")
+
+
+def lm_param_pspecs(cfg, mesh: Mesh, *, fsdp: bool = True) -> dict:
+    """Pytree of PartitionSpec matching transformer.param_shapes(cfg).
+
+    fsdp=False: tensor-parallel only — params replicated over the dp axes
+    (decode-serving layout for models whose TP shard fits HBM; removes the
+    per-layer FSDP weight all-gathers)."""
+    shard_experts = (cfg.moe is not None
+                     and cfg.moe.n_experts >= mesh.shape["model"])
+    F = dp_axes(mesh) if fsdp else None
+    from repro.models.transformer import _layer_param_shapes
+    per_layer_names = _layer_param_shapes(cfg).keys()
+    layer_specs = {
+        name: P(*((None,) + tuple(_layer_pspec(name, cfg, shard_experts, F))))
+        for name in per_layer_names
+    }
+    out = {
+        "embed": P("model", F),
+        "final_ln": P(None),
+        "layers": [dict(layer_specs) for _ in cfg.layer_windows],
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P(F, "model")
+    return out
+
+
+def lm_batch_pspecs(mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_pspecs(cfg, mesh: Mesh, *, seq_shard: bool = False,
+                    model_seq_shard: bool = True) -> dict:
+    """KV caches: batch over dp; the cache SEQUENCE dim over `model`
+    (flash-decoding layout: every model-group chip owns a slice of history,
+    attention partials are psum'd — tiny (b,h,1) collectives).
+
+    model_seq_shard=False is the naive baseline layout kept for the §Perf
+    A/B: heads over model when the GQA KV heads divide the axis, else the
+    head_dim — which forces SPMD to fully rematerialize (all-gather) the
+    cache every layer (the dominant collective in the decode baselines).
+
+    seq_shard=True (the batch=1 long_500k shape): the sequence dim is
+    sharded over dp as well — the 512k-token cache cannot live on one chip.
+    """
+    dp = dp_axes(mesh)
+    if seq_shard:
+        b_ax, s_ax = None, (dp + ("model",) if model_seq_shard else dp)
+    elif model_seq_shard:
+        b_ax, s_ax = dp, "model"
+    else:
+        b_ax, s_ax = dp, None
+    if cfg.mla is not None:
+        per = {"c_kv": P(None, b_ax, s_ax, None),
+               "k_rope": P(None, b_ax, s_ax, None)}
+    else:
+        if model_seq_shard:
+            h_ax, d_ax = None, None
+        elif cfg.n_kv_heads % mesh.shape["model"] == 0:
+            h_ax, d_ax = "model", None
+        else:
+            h_ax, d_ax = None, "model"
+        if cfg.kv_cache_dtype == "int8":
+            per = {"k_q": P(None, b_ax, s_ax, h_ax, d_ax),
+                   "v_q": P(None, b_ax, s_ax, h_ax, d_ax),
+                   "k_s": P(None, b_ax, s_ax, h_ax),
+                   "v_s": P(None, b_ax, s_ax, h_ax)}
+        else:
+            per = {"k": P(None, b_ax, s_ax, h_ax, d_ax),
+                   "v": P(None, b_ax, s_ax, h_ax, d_ax)}
+    return {"slots": [dict(per) for _ in cfg.layer_windows]}
+
+
+def gnn_batch_pspecs(mesh: Mesh, *, node_sharded: bool, leading_batch: bool,
+                     has_positions: bool = True) -> dict:
+    """GraphBatch pspecs.  node_sharded: full-graph training with nodes/edges
+    split across every axis.  leading_batch: a (n_blocks, ...) batch of
+    sampled blocks / molecule graphs, data-parallel over dp."""
+    dp = dp_axes(mesh)
+    if node_sharded:
+        allax = tuple(mesh.axis_names)
+        node, edge = P(allax), P(allax)
+        return dict(node_feat=P(allax, None), edge_src=edge, edge_dst=edge,
+                    n_nodes=P(), labels=node, graph_id=node, n_graphs=P(),
+                    positions=P(allax, None) if has_positions else None)
+    if leading_batch:
+        return dict(node_feat=P(dp, None, None), edge_src=P(dp, None),
+                    edge_dst=P(dp, None), n_nodes=P(dp), labels=P(dp, None),
+                    graph_id=P(dp, None), n_graphs=P(dp),
+                    positions=P(dp, None, None) if has_positions else None)
+    rep = P()
+    return dict(node_feat=P(None, None), edge_src=P(None), edge_dst=P(None),
+                n_nodes=rep, labels=P(None), graph_id=P(None), n_graphs=rep,
+                positions=P(None, None) if has_positions else None)
+
+
+def fm_param_pspecs(mesh: Mesh) -> dict:
+    return {"w0": P(), "w": P("model"), "v": P("model", None)}

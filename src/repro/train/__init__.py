@@ -1,0 +1,6 @@
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.loop import ElasticController, TrainLoopConfig, train
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "TrainLoopConfig", "ElasticController", "train"]

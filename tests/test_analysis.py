@@ -1,0 +1,83 @@
+"""launch/analysis.py: HLO collective parsing, roofline terms, model flops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import analysis
+
+_FAKE_HLO = """
+HloModule jit_step
+
+ENTRY %main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[2048,256]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar.1 = bf16[1024]{0} all-reduce(%x), to_apply=%add
+  %a2a = f32[16,32]{1,0} all-to-all(%y), dimensions={0}
+  %cp = u8[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %rs = f32[128]{0} reduce-scatter(%w), dimensions={0}, to_apply=%add
+  %ar2.s = (f32[256]{0}, f32[64]{0}) all-reduce-start(%q, %r), to_apply=%add
+  %ar2.d = (f32[256]{0}, f32[64]{0}) all-reduce-done(%ar2.s)
+  %not_a_coll = f32[999]{0} add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    got = analysis.collective_bytes(_FAKE_HLO)
+    assert got["all-gather"] == 2048 * 256 * 4
+    # plain all-reduce + the tuple-shaped async start (done NOT re-counted)
+    assert got["all-reduce"] == 1024 * 2 + (256 + 64) * 4
+    assert got["all-to-all"] == 16 * 32 * 4
+    assert got["collective-permute"] == 64 * 1
+    assert got["reduce-scatter"] == 128 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = analysis.Roofline(flops_per_chip=197e12, bytes_per_chip=819e9,
+                          coll_bytes_per_chip=0.0, coll_by_kind={})
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == 0.0
+    assert r.bound_time == pytest.approx(1.0)
+    r2 = analysis.Roofline(1e12, 1e9, 500e9, {})
+    assert r2.bottleneck == "collective"
+    assert r2.t_collective == pytest.approx(10.0)
+
+
+def test_roofline_from_real_compiled():
+    """End-to-end on a genuinely compiled function (1 device)."""
+    fn = jax.jit(lambda x: jnp.tanh(x @ x))
+    compiled = fn.lower(jax.ShapeDtypeStruct((256, 256), jnp.float32)).compile()
+    roof = analysis.roofline_from_compiled(compiled)
+    # matmul flops dominate: 2*256^3 = 33.6 MFLOP
+    assert roof.flops_per_chip >= 2 * 256**3
+    assert roof.bytes_per_chip > 0
+    assert roof.coll_bytes_per_chip == 0  # single device, no collectives
+    ms = analysis.memory_stats(compiled)
+    assert ms.get("argument_size_in_bytes", 0) >= 256 * 256 * 4
+
+
+def test_model_flops_lm():
+    from repro.configs.registry import get_arch
+    arch = get_arch("qwen2-1.5b")
+    mf_train = analysis.model_flops(arch, "train_4k")
+    # 6 * ~1.5e9 params * (256*4096 tokens) ~ 9.4e15, embed-heavy +/- 20%
+    assert 6e15 < mf_train < 1.5e16
+    mf_dec = analysis.model_flops(arch, "decode_32k")
+    assert mf_dec < mf_train / 1e3     # one token vs 4096
+
+
+def test_model_flops_all_cells_positive():
+    from repro.configs.registry import all_cells, get_arch
+    for arch_id, shape in all_cells():
+        mf = analysis.model_flops(get_arch(arch_id), shape)
+        assert mf is not None and mf > 0, (arch_id, shape)
+
+
+def test_shape_bytes_dtypes():
+    assert analysis._shape_bytes("bf16", "2,3") == 12
+    assert analysis._shape_bytes("f32", "") == 4      # scalar
+    assert analysis._shape_bytes("pred", "8") == 8
+    assert analysis._shape_bytes("s64", "4") == 32

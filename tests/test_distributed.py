@@ -1,0 +1,87 @@
+"""Distributed (shard_map) Louvain on forced host devices.
+
+Runs in a subprocess so the 8-device XLA_FLAGS does not leak into the other
+tests (jax locks device count at first init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+
+from repro.core.distributed import (distributed_louvain, partition_graph_host,
+                                    replicated_renumber)
+from repro.core.graph import from_networkx
+from repro.core.louvain import louvain, louvain_modularity
+from repro.core.modularity import modularity
+from repro.data import sbm_graph
+
+out = {}
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+# --- quality matches single-device on les miserables -----------------------
+nxg = nx.les_miserables_graph()
+g = from_networkx(nxg)
+mem, ncomm, stats = distributed_louvain(g, mesh, ("data", "model"))
+comm = jnp.concatenate([jnp.asarray(mem, jnp.int32),
+                        jnp.full((g.n_cap + 1 - len(mem),), g.n_cap, jnp.int32)])
+q_dist = float(modularity(g, comm))
+q_single = louvain_modularity(g, louvain(g))
+out["lesmis"] = {"q_dist": q_dist, "q_single": q_single, "ncomm": ncomm}
+
+# --- SBM recovery ------------------------------------------------------------
+g2, truth = sbm_graph(n_communities=6, size=24, p_in=0.35, p_out=0.01, seed=3)
+mem2, ncomm2, _ = distributed_louvain(g2, mesh, ("data", "model"))
+agree = 0
+for b in range(6):
+    ids, counts = np.unique(mem2[truth == b], return_counts=True)
+    agree += counts.max()
+out["sbm"] = {"recovery": float(agree / len(mem2)), "ncomm": ncomm2}
+
+# --- partition layout invariants ---------------------------------------------
+src_g, dst_g, w_g, spec = partition_graph_host(g, 8)
+out["partition"] = {
+    "w_sum_ok": bool(np.isclose(float(jnp.sum(w_g)),
+                                float(jnp.sum(g.weights)), rtol=1e-6)),
+    "shards": spec.n_shards,
+}
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_distributed_quality_close_to_single(dist_results):
+    r = dist_results["lesmis"]
+    assert r["q_dist"] >= 0.95 * r["q_single"], r
+
+
+def test_distributed_sbm_recovery(dist_results):
+    assert dist_results["sbm"]["recovery"] > 0.9
+
+
+def test_partition_conserves_weight(dist_results):
+    assert dist_results["partition"]["w_sum_ok"]
+    assert dist_results["partition"]["shards"] == 8

@@ -1,0 +1,103 @@
+"""Pallas louvain_scan kernel vs pure-jnp oracle: shape/dtype sweep +
+hypothesis property sweep (interpret=True executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.louvain_scan import ops
+from repro.kernels.louvain_scan.ref import louvain_scan_ref
+
+
+def _random_inputs(rng, r, d, n_comms=8, w_dtype=np.float32):
+    c = rng.integers(-1, n_comms, (r, d)).astype(np.int32)
+    w = (rng.random((r, d)) + 0.1).astype(w_dtype)
+    w = np.where(c >= 0, w, 0).astype(w_dtype)
+    sig = (rng.random((r, d)) * 5).astype(np.float32)
+    ki = (rng.random((r, 1)) * 3 + 0.1).astype(np.float32)
+    cown = rng.integers(0, n_comms, (r, 1)).astype(np.int32)
+    sigown = (rng.random((r, 1)) * 5).astype(np.float32)
+    m = np.float32(10.0)
+    return (jnp.asarray(c), jnp.asarray(w), jnp.asarray(sig),
+            jnp.asarray(ki), jnp.asarray(cown), jnp.asarray(sigown),
+            jnp.asarray(m))
+
+
+@pytest.mark.parametrize("r,d", [(8, 4), (8, 16), (16, 16), (32, 64),
+                                 (8, 128), (64, 8)])
+def test_pallas_matches_ref_shapes(r, d):
+    rng = np.random.default_rng(r * 1000 + d)
+    ins = _random_inputs(rng, r, d)
+    bc_p, bdq_p = ops.louvain_scan(*ins, use_pallas=True, interpret=True)
+    bc_r, bdq_r = louvain_scan_ref(*ins)
+    np.testing.assert_array_equal(np.asarray(bc_p), np.asarray(bc_r))
+    finite = np.isfinite(np.asarray(bdq_r))
+    np.testing.assert_allclose(np.asarray(bdq_p)[finite],
+                               np.asarray(bdq_r)[finite], rtol=1e-5)
+    assert np.array_equal(np.isfinite(np.asarray(bdq_p)), finite)
+
+
+@pytest.mark.parametrize("w_dtype", [np.float32, np.float16])
+def test_pallas_weight_dtypes(w_dtype):
+    rng = np.random.default_rng(7)
+    ins = _random_inputs(rng, 16, 16, w_dtype=w_dtype)
+    bc_p, bdq_p = ops.louvain_scan(*ins, use_pallas=True, interpret=True)
+    bc_r, bdq_r = louvain_scan_ref(*ins)
+    np.testing.assert_array_equal(np.asarray(bc_p), np.asarray(bc_r))
+
+
+@pytest.mark.parametrize("block_rows", [1, 2, 4, 8])
+def test_pallas_block_rows_invariant(block_rows):
+    """Grid tiling must not change results."""
+    rng = np.random.default_rng(11)
+    ins = _random_inputs(rng, 16, 8)
+    bc_ref, bdq_ref = louvain_scan_ref(*ins)
+    bc, bdq = ops.louvain_scan(*ins, use_pallas=True, interpret=True,
+                               block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(bc), np.asarray(bc_ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 8, 16]),
+       st.sampled_from([4, 8, 32]))
+def test_pallas_matches_ref_property(seed, r, d):
+    rng = np.random.default_rng(seed)
+    ins = _random_inputs(rng, r, d, n_comms=max(2, d // 2))
+    bc_p, bdq_p = ops.louvain_scan(*ins, use_pallas=True, interpret=True)
+    bc_r, bdq_r = louvain_scan_ref(*ins)
+    np.testing.assert_array_equal(np.asarray(bc_p), np.asarray(bc_r))
+    finite = np.isfinite(np.asarray(bdq_r))
+    np.testing.assert_allclose(np.asarray(bdq_p)[finite],
+                               np.asarray(bdq_r)[finite], rtol=1e-4)
+
+
+def test_ref_semantics_dead_rows():
+    """All-dead rows return (-1, -inf)."""
+    c = jnp.full((8, 4), -1, jnp.int32)
+    w = jnp.zeros((8, 4), jnp.float32)
+    sig = jnp.zeros((8, 4), jnp.float32)
+    ki = jnp.ones((8, 1), jnp.float32)
+    cown = jnp.zeros((8, 1), jnp.int32)
+    sigown = jnp.ones((8, 1), jnp.float32)
+    bc, bdq = ops.louvain_scan(c, w, sig, ki, cown, sigown,
+                               jnp.float32(5.0), use_pallas=True,
+                               interpret=True)
+    assert np.all(np.asarray(bc) == -1)
+    assert np.all(np.isneginf(np.asarray(bdq)))
+
+
+def test_ref_tie_breaks_to_lowest_community():
+    """Two communities with identical dQ -> the smaller id wins
+    (determinism requirement of the synchronous rounds)."""
+    # One row, two neighbors in different communities, symmetric weights.
+    c = jnp.asarray([[2, 1]], jnp.int32)
+    w = jnp.asarray([[1.0, 1.0]], jnp.float32)
+    sig = jnp.asarray([[3.0, 3.0]], jnp.float32)
+    ki = jnp.asarray([[1.0]], jnp.float32)
+    cown = jnp.asarray([[0]], jnp.int32)
+    sigown = jnp.asarray([[1.0]], jnp.float32)
+    bc, _ = ops.louvain_scan(c, w, sig, ki, cown, sigown, jnp.float32(8.0),
+                             use_pallas=True, interpret=True)
+    assert int(bc[0]) == 1

@@ -1,0 +1,132 @@
+"""Eq. 1 / Eq. 2 against networkx and against each other (property)."""
+
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import from_networkx
+from repro.core.local_move import best_moves
+from repro.core.modularity import community_weights, delta_modularity, modularity
+
+
+def _comm_array(g, membership):
+    n_cap = g.n_cap
+    return jnp.asarray(list(membership) + [n_cap], jnp.int32)
+
+
+def test_modularity_matches_networkx_karate():
+    nxg = nx.karate_club_graph()
+    g = from_networkx(nxg)
+    # ground-truth club split
+    clubs = [0 if nxg.nodes[v]["club"] == "Mr. Hi" else 1 for v in nxg]
+    q_nx = nx.algorithms.community.modularity(
+        nxg, [{v for v in nxg if clubs[v] == c} for c in (0, 1)])
+    q = float(modularity(g, _comm_array(g, clubs)))
+    assert np.isclose(q, q_nx, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_modularity_matches_networkx_random(seed):
+    rng = np.random.default_rng(seed)
+    nxg = nx.gnp_random_graph(24, 0.2, seed=int(seed))
+    if nxg.number_of_edges() == 0:
+        return
+    g = from_networkx(nxg)
+    comm = rng.integers(0, 4, 24)
+    parts = [{v for v in range(24) if comm[v] == c} for c in range(4)]
+    parts = [p for p in parts if p]
+    q_nx = nx.algorithms.community.modularity(nxg, parts)
+    q = float(modularity(g, _comm_array(g, comm)))
+    assert np.isclose(q, q_nx, atol=1e-5)
+
+
+def test_singleton_modularity_formula():
+    """Q of the singleton partition = -sum (K_i/2m)^2 (no internal edges
+    besides self-loops)."""
+    nxg = nx.les_miserables_graph()
+    g = from_networkx(nxg)
+    n = int(g.n_valid)
+    comm = _comm_array(g, range(n))
+    k = np.asarray(g.vertex_weights())[:n]
+    m = float(g.total_weight())
+    expect = -np.sum((k / (2 * m)) ** 2)
+    assert np.isclose(float(modularity(g, comm)), expect, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delta_modularity_consistent_with_q(seed):
+    """Moving one vertex: Q(after) - Q(before) == dQ from Eq. 2 (property —
+    the identity the local-moving phase relies on)."""
+    rng = np.random.default_rng(seed)
+    nxg = nx.gnp_random_graph(16, 0.3, seed=int(seed))
+    if nxg.number_of_edges() < 4:
+        return
+    g = from_networkx(nxg)
+    n = int(g.n_valid)
+    comm = rng.integers(0, 3, n)
+    i = int(rng.integers(0, n))
+    # target community c among neighbors
+    nbrs = list(nxg.neighbors(i))
+    if not nbrs:
+        return
+    c = int(comm[nbrs[0]])
+    d = int(comm[i])
+    if c == d:
+        return
+
+    comm_j = _comm_array(g, comm)
+    m = g.total_weight()
+    k = g.vertex_weights()
+    sigma = community_weights(g, comm_j)
+
+    # K_{i->c}, K_{i->d} by hand
+    k_ic = sum(1.0 for j in nbrs if comm[j] == c and j != i)
+    k_id = sum(1.0 for j in nbrs if comm[j] == d and j != i)
+    dq = float(delta_modularity(
+        jnp.float32(k_ic), jnp.float32(k_id), k[i],
+        sigma[c], sigma[d], m))
+
+    q_before = float(modularity(g, comm_j))
+    comm2 = comm.copy()
+    comm2[i] = c
+    q_after = float(modularity(g, _comm_array(g, comm2)))
+    assert np.isclose(q_after - q_before, dq, atol=1e-5)
+
+
+def test_best_moves_agree_with_bruteforce():
+    """best_moves() (sort-reduce path) equals brute-force dQ maximization."""
+    nxg = nx.gnp_random_graph(40, 0.15, seed=5)   # unweighted, int nodes
+    g = from_networkx(nxg)
+    n = int(g.n_valid)
+    rng = np.random.default_rng(1)
+    comm = rng.integers(0, 5, n)
+    comm_j = _comm_array(g, comm)
+    m = g.total_weight()
+    k = g.vertex_weights()
+    sigma = community_weights(g, comm_j)
+    frontier = jnp.ones((g.n_cap + 1,), bool)
+    bc, bdq = best_moves(g, comm_j, sigma, k, frontier, m)
+    bc, bdq = np.asarray(bc), np.asarray(bdq)
+
+    for i in range(n):
+        nbr_comms = {int(comm[j]) for j in nxg.neighbors(i) if j != i}
+        nbr_comms.discard(int(comm[i]))
+        if not nbr_comms:
+            assert not np.isfinite(bdq[i])
+            continue
+        best = None
+        for c in sorted(nbr_comms):
+            k_ic = sum(1.0 for j in nxg.neighbors(i)
+                       if comm[j] == c and j != i)
+            k_id = sum(1.0 for j in nxg.neighbors(i)
+                       if comm[j] == comm[i] and j != i)
+            dq = float(delta_modularity(
+                jnp.float32(k_ic), jnp.float32(k_id), k[i],
+                sigma[c], sigma[int(comm[i])], m))
+            if best is None or dq > best[1] + 1e-9:
+                best = (c, dq)
+        assert np.isclose(bdq[i], best[1], atol=1e-5), i

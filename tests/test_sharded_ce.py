@@ -1,0 +1,71 @@
+"""The vocab-sharded distributed-softmax CE must equal the dense loss
+(value AND gradient) — verified on 8 forced host devices in a subprocess."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lm_common import make_sharded_ce
+from repro.configs.qwen2_1p5b import ARCH
+from repro.models import transformer as tf
+
+cfg = ARCH.smoke_config()
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+b, s = 4, 16
+toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+batch = {"tokens": toks, "labels": toks}
+
+with mesh:
+    dense = float(jax.jit(lambda p: tf.loss_fn(cfg, p, batch))(params))
+    sharded_loss = make_sharded_ce(cfg, mesh)
+    sharded = float(jax.jit(lambda p: sharded_loss(p, batch))(params))
+
+    g_dense = jax.jit(jax.grad(lambda p: tf.loss_fn(cfg, p, batch)))(params)
+    g_shard = jax.jit(jax.grad(lambda p: sharded_loss(p, batch)))(params)
+
+diffs = jax.tree.map(
+    lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                        - b_.astype(jnp.float32)))),
+    g_dense, g_shard)
+max_diff = max(jax.tree.leaves(diffs))
+scale = max(float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+            for x in jax.tree.leaves(g_dense))
+print(json.dumps({"dense": dense, "sharded": sharded,
+                  "grad_max_diff": max_diff, "grad_scale": scale}))
+"""
+
+
+@pytest.fixture(scope="module")
+def ce_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_ce_value(ce_results):
+    r = ce_results
+    assert abs(r["dense"] - r["sharded"]) < 2e-3 * max(abs(r["dense"]), 1), r
+
+
+def test_sharded_ce_grads(ce_results):
+    r = ce_results
+    assert r["grad_max_diff"] < 5e-3 * max(r["grad_scale"], 1e-6), r
