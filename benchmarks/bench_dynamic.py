@@ -1,0 +1,103 @@
+"""Dynamic streaming Louvain: updates/sec vs full static recompute.
+
+An SBM graph is streamed as edge-batch inserts of varying size; for each
+batch size we measure
+
+  * ``dynamic``  — ``louvain_dynamic`` (warm start + delta screening),
+  * ``recompute`` — a cold static ``louvain`` after every batch
+
+and report edge-updates/sec, speedup, the mean delta-screened frontier
+fraction, and the modularity gap vs the cold recompute on the final graph.
+This is the streaming-serving scenario of the ROADMAP: small deltas between
+queries, membership always fresh.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit_csv, time_fn
+from repro.core.delta import make_edge_batch
+from repro.core.dynamic import louvain_dynamic
+from repro.core.graph import build_csr
+from repro.core.louvain import (LouvainConfig, louvain, louvain_modularity,
+                                membership_modularity as _q)
+from repro.data import sbm_graph
+
+
+def _holdout_stream(small: bool, seed: int = 0):
+    """(initial graph, (us, ud, uw) held-out undirected edges, full e)."""
+    n_comms, size = (32, 16) if small else (96, 24)
+    full, truth = sbm_graph(n_communities=n_comms, size=size, p_in=0.4,
+                            p_out=0.002, seed=seed)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    w = np.asarray(full.weights)[:e]
+    und = src < dst
+    us, ud, uw = src[und], dst[und], w[und]
+    rng = np.random.default_rng(seed)
+    n_hold = min(len(us) // 4, 480 if small else 4000)
+    hold = rng.choice(len(us), n_hold, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.concatenate([uw[keep], uw[keep]]),
+                     int(full.n_valid), e_cap=e + 8)
+    return init, (us[hold], ud[hold], uw[hold]), e
+
+
+def run(small: bool = True, repeats: int = 2,
+        batch_sizes=(1, 4, 16, 64)) -> None:
+    init, (us, ud, uw), _ = _holdout_stream(small)
+    prev = louvain(init).membership
+    rows = []
+    for bs in batch_sizes:
+        n_batches = max(1, min(len(us) // bs, 24))
+        used = n_batches * bs
+        batches = [make_edge_batch(us[i * bs:(i + 1) * bs],
+                                   ud[i * bs:(i + 1) * bs],
+                                   uw[i * bs:(i + 1) * bs],
+                                   init.n_cap, b_cap=bs)
+                   for i in range(n_batches)]
+
+        t_dyn, dyn = time_fn(louvain_dynamic, init, batches, prev=prev,
+                             repeats=repeats)
+        q_dyn = _q(dyn.graph, dyn.membership)
+
+        # Full recompute baseline: same stream, cold louvain per batch.
+        def recompute():
+            from repro.core.delta import apply_edge_batch
+            g = init
+            res = None
+            for b in batches:
+                g, _ = apply_edge_batch(g, b)
+                res = louvain(g)
+            return g, res
+
+        t_cold, (g_end, res_cold) = time_fn(recompute, repeats=repeats)
+        q_cold = louvain_modularity(g_end, res_cold)
+
+        fr = [s.frontier_fraction for s in dyn.batch_stats]
+        rows.append({
+            "batch_size": bs, "n_batches": n_batches,
+            "updates_per_s_dynamic": round(used / t_dyn, 1),
+            "updates_per_s_recompute": round(used / t_cold, 1),
+            "speedup": round(t_cold / t_dyn, 2),
+            "frontier_frac_mean": round(float(np.mean(fr)), 4),
+            "q_dynamic": round(q_dyn, 4),
+            "q_recompute": round(q_cold, 4),
+        })
+    emit_csv(rows, ["batch_size", "n_batches", "updates_per_s_dynamic",
+                    "updates_per_s_recompute", "speedup",
+                    "frontier_frac_mean", "q_dynamic", "q_recompute"])
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(small=not args.full, repeats=3 if args.full else 2)

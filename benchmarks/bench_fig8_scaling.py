@@ -23,13 +23,13 @@ n = int(sys.argv[1])
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
 import json, time
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.core.distributed import distributed_louvain, partition_graph_host
 from repro.core.modularity import modularity
 from repro.data import rmat_graph
 
 g = rmat_graph(10, edge_factor=8, seed=0)
-mesh = jax.make_mesh((n,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((n,), ("data",))
 _, _, _, spec = partition_graph_host(g, n)
 t0 = time.perf_counter()
 mem, ncomm, stats = distributed_louvain(g, mesh, ("data",))

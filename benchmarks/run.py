@@ -9,6 +9,7 @@ Sections:
     fig6  phase split / pass split
     fig7  runtime per edge
     fig8  strong scaling (device-count structural scaling)
+    dynamic  streaming edge-batch updates/sec vs full recompute
     roofline  per-(arch x shape) table from the dry-run artifacts (if present)
 """
 
@@ -25,7 +26,7 @@ def main() -> None:
                     help="paper-scale graphs + 3 repeats (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig5,fig6,fig7,fig8,"
-                         "roofline")
+                         "dynamic,roofline")
     args = ap.parse_args()
     small = not args.full
     repeats = 3 if args.full else 2
@@ -60,6 +61,11 @@ def main() -> None:
         print("== fig8: strong scaling (structural, 1..8 host devices) ==")
         from benchmarks import bench_fig8_scaling
         bench_fig8_scaling.run(max_devices=8)
+        print()
+    if want("dynamic"):
+        print("== dynamic: streaming updates/sec vs full recompute ==")
+        from benchmarks import bench_dynamic
+        bench_dynamic.run(small=small, repeats=repeats)
         print()
     if want("roofline"):
         print("== roofline: dry-run artifacts (single-pod) ==")

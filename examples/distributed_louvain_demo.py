@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.core.distributed import distributed_louvain, partition_graph_host
 from repro.core.louvain import LouvainConfig, louvain, louvain_modularity
 from repro.core.modularity import modularity
@@ -29,8 +30,7 @@ n, e = int(graph.n_valid), int(graph.e_valid)
 print(f"R-MAT graph: {n} vertices, {e} directed edges")
 print(f"devices: {jax.device_count()}")
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 # Show the layout the distributed phases consume.
 src_g, dst_g, w_g, spec = partition_graph_host(graph, 8)

@@ -23,8 +23,10 @@ def _config(sh: GNNShape, smoke: bool) -> equiformer.EquiformerConfig:
     node_level = sh.kind != "molecule"
     out = sh.n_classes if node_level else 1
     if smoke:
+        # d_hidden=8 keeps the eSCN tensor-product compile inside the tier-1
+        # wall-clock budget; l_max=2/m_max=1 still exercise the SO(2) path.
         return equiformer.EquiformerConfig(
-            name="equiformer-v2-smoke", n_layers=2, d_hidden=16, l_max=2,
+            name="equiformer-v2-smoke", n_layers=2, d_hidden=8, l_max=2,
             m_max=1, n_heads=2, d_feat=sh.d_feat, out_dim=out,
             node_level=node_level)
     return equiformer.EquiformerConfig(

@@ -19,10 +19,13 @@ def full_config() -> TransformerConfig:
 
 
 def smoke_config() -> TransformerConfig:
+    # A 1:1 local:global pattern keeps both attention kinds covered at 2
+    # layers — the full 5:1 ratio is a full_config property, and 6 unrolled
+    # windowed layers blew the tier-1 compile budget (see tests/conftest.py).
     return TransformerConfig(
-        name="gemma3-12b-smoke", n_layers=6, d_model=96, n_heads=4,
-        n_kv_heads=2, d_head=24, d_ff=192, vocab=512,
-        layer_windows=(16,) * 5 + (None,), tie_embeddings=True,
+        name="gemma3-12b-smoke", n_layers=2, d_model=48, n_heads=4,
+        n_kv_heads=2, d_head=12, d_ff=96, vocab=256,
+        layer_windows=(16, None), tie_embeddings=True,
         dtype="float32", remat=False,
     )
 

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+
 from repro.core.distributed import (ShardedGraphSpec, _best_moves_shard,
                                     _round_body, _shard_index)
 
@@ -209,9 +210,7 @@ def _aggregate_gather_body(axes, spec: ShardedGraphSpec,
     g_cj = jax.lax.all_gather(p_cj, axes, tiled=True)
     g_w = jax.lax.all_gather(p_w, axes, tiled=True)
 
-    shard_ix = jax.lax.axis_index(axes[0])
-    for ax in axes[1:]:
-        shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    shard_ix = _shard_index(axes)
     v0 = shard_ix * v_per
     mine = (g_ci >= v0) & (g_ci < v0 + v_per)
     m_ci = jnp.where(mine, g_ci, sent)

@@ -33,6 +33,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import compat
+
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
 
@@ -94,7 +96,7 @@ def partition_graph_host(
 def _shard_index(axes):
     shard_ix = jax.lax.axis_index(axes[0])
     for ax in axes[1:]:
-        shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        shard_ix = shard_ix * compat.axis_size(ax) + jax.lax.axis_index(ax)
     return shard_ix
 
 
@@ -221,9 +223,7 @@ def make_distributed_move(
     def phase(src_g, dst_g, w_g, comm, sigma, k, m, tolerance):
         def body_shard(src_l, dst_l, w_l, comm, sigma, k, m, tolerance):
             v_per, sent = spec.v_per_shard, spec.sentinel
-            shard_ix = jax.lax.axis_index(axes[0])
-            for ax in axes[1:]:
-                shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            shard_ix = _shard_index(axes)
             gidx = shard_ix * v_per + jnp.arange(v_per)
             frontier0 = gidx < spec.n_pad
 
@@ -296,9 +296,7 @@ def make_distributed_aggregate(mesh: Mesh, axes: Tuple[str, ...],
         g_cj = jax.lax.all_gather(p_cj, axes, tiled=True)
         g_w = jax.lax.all_gather(p_w, axes, tiled=True)
 
-        shard_ix = jax.lax.axis_index(axes[0])
-        for ax in axes[1:]:
-            shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        shard_ix = _shard_index(axes)
         v0 = shard_ix * v_per
         mine = (g_ci >= v0) & (g_ci < v0 + v_per)
         m_ci = jnp.where(mine, g_ci, sent)

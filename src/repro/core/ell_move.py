@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.graph import CSRGraph, ELLBlock, to_ell_blocks
 from repro.core.local_move import MoveState, apply_moves, best_moves
+from repro.core.modularity import community_weights
 from repro.kernels.louvain_scan import ops as scan_ops
 
 
@@ -71,10 +72,16 @@ def move_phase_ell(
     widths: Tuple[int, ...] = (16, 64, 256),
     use_pallas: bool = True,
     interpret: bool | None = None,
+    comm0: jax.Array | None = None,
+    sigma0: jax.Array | None = None,
+    frontier0: jax.Array | None = None,
 ):
     """ELL-kernel local-moving phase: returns (comm, iters, dq_sum).
 
     Host-side wrapper: buckets the graph once, then runs the jit'd sweep loop.
+    ``comm0``/``sigma0``/``frontier0`` warm-start the sweep from an arbitrary
+    membership snapshot (defaults: singleton start over all valid vertices),
+    mirroring the sort-reduce ``_move_phase``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -84,9 +91,17 @@ def move_phase_ell(
     n_cap = graph.n_cap
     k = graph.vertex_weights()
     m = graph.total_weight()
-    comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
     idx = jnp.arange(n_cap + 1)
-    frontier0 = idx < graph.n_valid
+    valid = idx < graph.n_valid
+    if comm0 is None:
+        comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
+        if sigma0 is None:
+            sigma0 = k               # singleton start: Sigma_c == K_i
+    elif sigma0 is None:
+        # Derive Sigma from the warm membership — defaulting to k here
+        # would silently pair a non-singleton C with singleton weights.
+        sigma0 = community_weights(graph, comm0)
+    frontier0 = valid if frontier0 is None else (frontier0 & valid)
 
     def cond(st: MoveState):
         return (st.iters < max_iterations) & (st.dq > tolerance)
@@ -118,7 +133,7 @@ def move_phase_ell(
             st = one_round(st, base + r)
         return st._replace(iters=st.iters + 1)
 
-    st0 = MoveState(comm0, k, frontier0, jnp.asarray(0, jnp.int32),
+    st0 = MoveState(comm0, sigma0, frontier0, jnp.asarray(0, jnp.int32),
                     jnp.asarray(jnp.inf, jnp.float32),
                     jnp.asarray(0.0, jnp.float32))
 

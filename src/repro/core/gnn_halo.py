@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.distributed import _shard_index
+
 F32, I32 = jnp.float32, jnp.int32
 
 
@@ -98,9 +100,7 @@ def gin_halo_loss_shard(cfg, params, x_l, src_l, dst_l, labels_l,
     f32 (halves the edge-side HBM/ICI traffic; MLPs stay f32)."""
     from repro.models.gnn.common import mlp
     v_l = spec.v_per_shard
-    shard_ix = jax.lax.axis_index(axes[0])
-    for ax in axes[1:]:
-        shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    shard_ix = _shard_index(axes)
     gidx = shard_ix * v_l + jnp.arange(v_l)
 
     x = x_l
@@ -176,9 +176,7 @@ def equiformer_halo_loss_shard(cfg, params, feat_l, pos_l, src_l, dst_l,
                                          wigner_d_stack)
 
     v_l, lm, c = spec.v_per_shard, cfg.l_max, cfg.d_hidden
-    shard_ix = jax.lax.axis_index(axes[0])
-    for ax in axes[1:]:
-        shard_ix = shard_ix * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    shard_ix = _shard_index(axes)
     gidx = shard_ix * v_l + jnp.arange(v_l)
 
     # --- edge geometry (positions exchanged once) ---------------------------

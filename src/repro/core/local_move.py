@@ -168,8 +168,16 @@ def louvain_move(
     max_iterations: int = 20,
     use_pruning: bool = True,
     gate_fraction: int = 2,
+    frontier0: jax.Array | None = None,
 ) -> MoveState:
     """Algorithm 2: iterate rounds until total dQ <= tolerance or the cap.
+
+    ``comm``/``sigma`` may be ANY consistent membership + community-weight
+    snapshot, not just the singleton start — warm starts (dynamic Louvain)
+    pass the previous membership here.  ``frontier0`` optionally restricts
+    the first round to a seed set (delta screening); ``None`` means all
+    valid vertices.  With ``use_pruning`` the frontier then grows outward
+    from movers exactly as in the static pruned phase.
 
     ``gate_fraction > 1`` enables stochastic round gating: each round only a
     pseudo-random 1/gate_fraction of vertices may move.  This damps the
@@ -179,7 +187,8 @@ def louvain_move(
     """
     n_cap = graph.n_cap
     idx = jnp.arange(n_cap + 1)
-    frontier0 = idx < graph.n_valid
+    valid = idx < graph.n_valid
+    frontier0 = valid if frontier0 is None else (frontier0 & valid)
 
     def cond(st: MoveState):
         return (st.iters < max_iterations) & (st.dq > tolerance)

@@ -7,6 +7,14 @@ with the paper's defaults:
 
     MAX_PASSES=10, MAX_ITERATIONS=20, initial tolerance 0.01,
     TOLERANCE_DROP=10, aggregation tolerance 0.8, vertex pruning on.
+
+The move phase accepts an arbitrary initial membership + community-weight
+snapshot (plus an optional seed frontier), which is what the dynamic
+warm-start driver in ``repro.core.dynamic`` builds on: ``louvain()`` with
+``init_membership=`` resumes from a previous partition instead of the
+singleton start, and ``init_frontier=`` restricts the first pass to a
+delta-screened vertex set.  All jit signatures stay static — warm and cold
+starts share one compiled ``_move_phase``.
 """
 
 from __future__ import annotations
@@ -51,6 +59,7 @@ class PassStats:
     seconds: float
     phase_seconds: dict
     modularity: Optional[float] = None
+    frontier_size: Optional[int] = None  # seed-frontier size (delta screening)
 
 
 @dataclasses.dataclass
@@ -65,20 +74,56 @@ class LouvainResult:
         return len(self.passes)
 
 
+@jax.jit
+def singleton_init(graph: CSRGraph):
+    """(comm0, sigma0, frontier0) of the cold singleton start."""
+    n_cap = graph.n_cap
+    comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
+    sigma0 = graph.vertex_weights()   # every vertex its own community
+    frontier0 = jnp.arange(n_cap + 1) < graph.n_valid
+    return comm0, sigma0, frontier0
+
+
+@jax.jit
+def warm_init(graph: CSRGraph, membership: jax.Array,
+              frontier: jax.Array | None = None):
+    """(comm0, sigma0, frontier0) resuming from ``membership``.
+
+    ``membership`` is (n_cap,) or (n_cap + 1,) int32 community ids in vertex-id
+    space (what ``LouvainResult.membership`` holds, padded to capacity);
+    invalid vertex slots are remapped to the sentinel, and valid vertices
+    WITHOUT a previous assignment (id >= n_cap — e.g. vertices that entered
+    via an edge insert) fall back to their own singleton.  ``sigma0`` is
+    recomputed from the CURRENT graph weights, so a warm start stays exact
+    after edge-batch updates.  ``frontier`` optionally seeds delta screening.
+    """
+    n_cap = graph.n_cap
+    idx = jnp.arange(n_cap + 1)
+    valid = idx < graph.n_valid
+    mem = jnp.concatenate([
+        membership[:n_cap].astype(jnp.int32),
+        jnp.full((1,), n_cap, jnp.int32),
+    ])
+    assigned = jnp.where(mem < n_cap, mem, idx.astype(jnp.int32))
+    comm0 = jnp.where(valid, assigned, n_cap)
+    sigma0 = community_weights(graph, comm0)
+    frontier0 = valid if frontier is None else (frontier[: n_cap + 1] & valid)
+    return comm0, sigma0, frontier0
+
+
 @functools.partial(jax.jit, static_argnames=("max_iterations", "use_pruning",
                                              "gate_fraction"))
-def _move_phase(graph: CSRGraph, tolerance, *, max_iterations: int,
-                use_pruning: bool, gate_fraction: int = 2):
-    """One local-moving phase from a fresh singleton assignment."""
-    n_cap = graph.n_cap
+def _move_phase(graph: CSRGraph, comm0, sigma0, frontier0, tolerance, *,
+                max_iterations: int, use_pruning: bool,
+                gate_fraction: int = 2):
+    """One local-moving phase from an arbitrary (C, Sigma, frontier) start."""
     k = graph.vertex_weights()
     m = graph.total_weight()
-    comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
-    sigma0 = k  # every vertex its own community
     st = louvain_move(
         graph, comm0, sigma0, k, m,
         tolerance=tolerance, max_iterations=max_iterations,
         use_pruning=use_pruning, gate_fraction=gate_fraction,
+        frontier0=frontier0,
     )
     return st.comm, st.iters, st.dq_sum
 
@@ -98,8 +143,22 @@ def _aggregate_phase(graph: CSRGraph, comm_renumbered, n_comms):
     return aggregate_graph(graph, comm_renumbered, n_comms)
 
 
-def louvain(graph: CSRGraph, config: LouvainConfig = LouvainConfig()) -> LouvainResult:
-    """Run GVE-Louvain; returns the flat membership for the original vertices."""
+def louvain(
+    graph: CSRGraph,
+    config: LouvainConfig = LouvainConfig(),
+    *,
+    init_membership: Optional[np.ndarray] = None,
+    init_frontier: Optional[np.ndarray] = None,
+) -> LouvainResult:
+    """Run GVE-Louvain; returns the flat membership for the original vertices.
+
+    ``init_membership`` warm-starts the FIRST pass from a previous partition
+    ((n,), (n_cap,) or (n_cap + 1,) community ids) instead of singletons;
+    ``init_frontier`` restricts that pass's seed frontier to a boolean
+    vertex mask (delta screening — see ``repro.core.dynamic``), with or
+    without a warm membership.  Later passes (after aggregation) always
+    restart from singletons on the coarse graph, as in static Louvain.
+    """
     t_start = time.perf_counter()
     n_cap = graph.n_cap
     n = int(graph.n_valid)
@@ -113,15 +172,46 @@ def louvain(graph: CSRGraph, config: LouvainConfig = LouvainConfig()) -> Louvain
     if config.use_ell_kernel:
         from repro.core import ell_move  # lazy: pulls in Pallas
 
+    warm_comm0 = warm_sigma0 = warm_frontier0 = None
+    frontier_size0 = None
+    fr = None
+    if init_frontier is not None:
+        fr = np.asarray(init_frontier, dtype=bool)
+        if len(fr) < n_cap + 1:
+            fr = np.concatenate([fr, np.zeros(n_cap + 1 - len(fr), bool)])
+        fr = jnp.asarray(fr)
+    if init_membership is not None:
+        mem = np.asarray(init_membership, dtype=np.int32)
+        if len(mem) < n_cap + 1:   # pad (n,) / (n_cap,) inputs to capacity
+            mem = np.concatenate(
+                [mem, np.full(n_cap + 1 - len(mem), n_cap, np.int32)])
+        warm_comm0, warm_sigma0, warm_frontier0 = warm_init(
+            g, jnp.asarray(mem), fr)
+        frontier_size0 = int(jnp.sum(warm_frontier0))
+    elif fr is not None:
+        # Screened frontier over a cold singleton start: still honored.
+        warm_comm0, warm_sigma0, frontier0_all = singleton_init(g)
+        warm_frontier0 = fr & frontier0_all
+        frontier_size0 = int(jnp.sum(warm_frontier0))
+
     for p in range(config.max_passes):
         t0 = time.perf_counter()
+        if p == 0 and warm_comm0 is not None:
+            comm0, sigma0, frontier0 = warm_comm0, warm_sigma0, warm_frontier0
+            pass_frontier = frontier_size0
+        else:
+            comm0, sigma0, frontier0 = singleton_init(g)
+            pass_frontier = None
         if config.use_ell_kernel:
             comm, iters, dq_sum = ell_move.move_phase_ell(
                 g, jnp.float32(tol), max_iterations=config.max_iterations,
-                use_pruning=config.use_pruning, widths=config.ell_widths)
+                use_pruning=config.use_pruning,
+                gate_fraction=config.gate_fraction, widths=config.ell_widths,
+                comm0=comm0, sigma0=sigma0, frontier0=frontier0)
         else:
             comm, iters, dq_sum = _move_phase(
-                g, jnp.float32(tol), max_iterations=config.max_iterations,
+                g, comm0, sigma0, frontier0, jnp.float32(tol),
+                max_iterations=config.max_iterations,
                 use_pruning=config.use_pruning,
                 gate_fraction=config.gate_fraction)
         iters = int(iters)
@@ -154,6 +244,8 @@ def louvain(graph: CSRGraph, config: LouvainConfig = LouvainConfig()) -> Louvain
             phase_seconds={"local_move": t1 - t0, "other": t2 - t1,
                            "aggregate": agg_s},
             modularity=q_now,
+            frontier_size=pass_frontier if pass_frontier is not None
+            else n_verts_i,
         ))
         n_comms_final = n_comms_i
         if converged or low_shrink:
@@ -169,11 +261,17 @@ def louvain(graph: CSRGraph, config: LouvainConfig = LouvainConfig()) -> Louvain
     )
 
 
-def louvain_modularity(graph: CSRGraph, result: LouvainResult) -> float:
-    """Q of a result on the original graph."""
+def membership_modularity(graph: CSRGraph, membership) -> float:
+    """Q of a flat (n,) membership array on ``graph`` (sentinel-padded)."""
+    membership = np.asarray(membership)
     comm = jnp.concatenate([
-        jnp.asarray(result.membership, jnp.int32),
-        jnp.full((graph.n_cap + 1 - len(result.membership),), graph.n_cap,
+        jnp.asarray(membership, jnp.int32),
+        jnp.full((graph.n_cap + 1 - len(membership),), graph.n_cap,
                  jnp.int32),
     ])
     return float(modularity(graph, comm))
+
+
+def louvain_modularity(graph: CSRGraph, result: LouvainResult) -> float:
+    """Q of a result on the original graph."""
+    return membership_modularity(graph, result.membership)

@@ -1,0 +1,100 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+``hypothesis`` is an OPTIONAL dev dependency (see README): when present, the
+property tests use it unchanged.  This fallback keeps the same
+``@settings(...) @given(st...)`` surface but degrades to a deterministic
+fixed-example sweep — each strategy draws from a seeded RNG keyed on the test
+name and example index, with example 0 pinned to the strategy's minimal value
+(the analogue of hypothesis shrinking: failures reproduce on the simplest
+draw first).  No shrinking, no database, no deadlines — just N examples.
+
+Import pattern used by the test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, minimal, draw):
+        self._minimal = minimal
+        self._draw = draw
+
+    def example_at(self, rng, index):
+        if index == 0:
+            return self._minimal
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(min_value,
+                         lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(elements[0],
+                         lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(False, lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0):
+        return _Strategy(min_value,
+                         lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+st = _Strategies()
+
+
+def given(*strategies):
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base + i) & 0xFFFFFFFF)
+                args = [s.example_at(rng, i) for s in strategies]
+                try:
+                    fn(*args)
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example #{i}: "
+                        f"{fn.__name__}({', '.join(map(repr, args))})"
+                    ) from err
+
+        # NOTE: no functools.wraps — pytest must see the ZERO-arg signature
+        # (the given-bound parameters are not fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+class settings:
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._max_examples = self.max_examples
+        return fn

@@ -10,6 +10,10 @@ import sys
 
 import pytest
 
+from conftest import multi_device as _multi_device
+
+pytestmark = [pytest.mark.slow, _multi_device]
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -28,8 +32,8 @@ from repro.data import sbm_graph
 
 out = {}
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 
 # --- quality matches single-device on les miserables -----------------------
 nxg = nx.les_miserables_graph()

@@ -1,0 +1,235 @@
+"""Dynamic streaming Louvain: edge-batch CSR updates (invariants, property)
+and warm-start + delta-screening quality vs cold static recompute."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.delta import apply_edge_batch, make_edge_batch
+from repro.core.dynamic import delta_frontier, louvain_dynamic
+from repro.core.graph import build_csr
+from repro.core.louvain import (louvain, louvain_modularity,
+                                membership_modularity as _q)
+from repro.data import sbm_graph
+
+
+def _ref_graph(g):
+    """Host adjacency dict {(u,v): w} over directed live slots."""
+    e = int(g.e_valid)
+    src = np.asarray(g.src)[:e]
+    dst = np.asarray(g.indices)[:e]
+    w = np.asarray(g.weights)[:e]
+    return {(int(s), int(d)): float(x) for s, d, x in zip(src, dst, w)}
+
+
+def _ref_apply(adj, us, vs, ws):
+    """Reference semantics: set weight on both directed slots; 0 deletes."""
+    for u, v, w in zip(us, vs, ws):
+        for key in {(int(u), int(v)), (int(v), int(u))}:
+            if w > 0:
+                adj[key] = float(w)
+            else:
+                adj.pop(key, None)
+    return adj
+
+
+def _assert_csr_well_formed(g):
+    n_cap, e_cap = g.n_cap, g.e_cap
+    e = int(g.e_valid)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.indices)
+    w = np.asarray(g.weights)
+    indptr = np.asarray(g.indptr)
+    # live prefix / sentinel padding split
+    assert np.all(src[:e] < n_cap) and np.all(dst[:e] < n_cap)
+    assert np.all(src[e:] == n_cap) and np.all(dst[e:] == n_cap)
+    assert np.all(w[e:] == 0)
+    # indptr matches the slot list and slots are in CSR order
+    assert indptr[0] == 0 and indptr[-1] == e
+    counts = np.bincount(src[:e], minlength=n_cap)
+    np.testing.assert_array_equal(np.diff(indptr), counts)
+    order = src[:e].astype(np.int64) * (n_cap + 1) + dst[:e]
+    assert np.all(np.diff(order) > 0), "slots not in strict (src, dst) order"
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_apply_edge_batch_invariants_random(seed):
+    """K_i / 2m invariants + exact adjacency vs a host reference under
+    random insert/delete/reweight sequences (property)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 16))
+    e0 = int(rng.integers(2, 3 * n))
+    src = rng.integers(0, n, e0)
+    dst = rng.integers(0, n, e0)
+    w = (rng.random(e0) + 0.1).astype(np.float32)
+    # Fixed capacities across examples: every draw reuses ONE compiled
+    # _apply_edge_batch (the whole point of the in-capacity design).
+    g = build_csr(src, dst, w, n, symmetrize=True, dedup=True,
+                  n_cap=16, e_cap=192)
+    adj = _ref_graph(g)
+
+    for _ in range(4):
+        b = int(rng.integers(1, 8))
+        us = rng.integers(0, n, b)
+        vs = rng.integers(0, n, b)
+        # mix of deletes (0), inserts and reweights; last-write-wins in batch
+        ws = np.where(rng.random(b) < 0.3, 0.0,
+                      (rng.random(b) * 2 + 0.1)).astype(np.float32)
+        # drop in-batch duplicates of the same undirected edge (semantics is
+        # last-write-wins; the reference dict applies in order, keep both)
+        g, touched = apply_edge_batch(
+            g, make_edge_batch(us, vs, ws, g.n_cap, b_cap=8))
+        adj = _ref_apply(adj, us, vs, ws)
+
+        _assert_csr_well_formed(g)
+        assert _ref_graph(g) == pytest.approx(adj)
+        # K_i == row sums of the reference; sum(K) == 2m
+        k = np.asarray(g.vertex_weights())
+        k_ref = np.zeros(n)
+        for (s, _), x in adj.items():
+            k_ref[s] += x
+        np.testing.assert_allclose(k[:n], k_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(k.sum(), 2 * float(g.total_weight()),
+                                   rtol=1e-5)
+        # touched ⊆ endpoints of the batch
+        t_ix = set(np.where(np.asarray(touched))[0].tolist())
+        assert t_ix <= set(us.tolist()) | set(vs.tolist())
+
+
+def test_apply_edge_batch_insert_delete_reweight():
+    src = np.array([0, 1, 1, 2, 3, 4])
+    dst = np.array([1, 0, 2, 1, 4, 3])
+    g = build_csr(src, dst, np.ones(6, np.float32), 5, e_cap=16)
+    batch = make_edge_batch([2, 0, 1], [3, 1, 2], [1.0, 0.0, 5.0],
+                            g.n_cap, b_cap=4)
+    g2, touched = apply_edge_batch(g, batch)
+    assert _ref_graph(g2) == {(1, 2): 5.0, (2, 1): 5.0, (2, 3): 1.0,
+                              (3, 2): 1.0, (3, 4): 1.0, (4, 3): 1.0}
+    assert float(g2.total_weight()) == 7.0
+    np.testing.assert_array_equal(
+        np.where(np.asarray(touched))[0], [0, 1, 2, 3])
+    _assert_csr_well_formed(g2)
+    # no-op batch (reweight to the same value, delete of absent edge)
+    g3, touched3 = apply_edge_batch(
+        g2, make_edge_batch([1, 0], [2, 4], [5.0, 0.0], g2.n_cap))
+    assert not bool(jnp.any(touched3))
+    assert _ref_graph(g3) == _ref_graph(g2)
+
+
+def test_apply_edge_batch_self_loop_single_slot():
+    g = build_csr(np.array([0, 1]), np.array([1, 0]),
+                  np.ones(2, np.float32), 3, e_cap=8)
+    g2, _ = apply_edge_batch(g, make_edge_batch([2], [2], [3.0], g.n_cap))
+    assert _ref_graph(g2) == {(0, 1): 1.0, (1, 0): 1.0, (2, 2): 3.0}
+    assert float(g2.total_weight()) == pytest.approx(2.5)  # m = sum(w)/2
+
+
+def test_apply_edge_batch_overflow_raises():
+    g = build_csr(np.array([0, 1]), np.array([1, 0]),
+                  np.ones(2, np.float32), 4, e_cap=4)
+    big = make_edge_batch([0, 1, 2], [2, 3, 3], [1.0, 1.0, 1.0], g.n_cap)
+    with pytest.raises(ValueError, match="overflow"):
+        apply_edge_batch(g, big)
+
+
+def test_delta_frontier_screens_to_affected_communities():
+    # comm: {0,1} -> 0, {2,3} -> 2, {4,5} -> 4 ; touching vertex 0 pulls in
+    # community 0's members but nobody else.
+    membership = jnp.asarray([0, 0, 2, 2, 4, 4, 6], jnp.int32)
+    touched = jnp.asarray([True, False, False, False, False, False, False])
+    fr = np.asarray(delta_frontier(touched, membership, jnp.int32(6)))
+    np.testing.assert_array_equal(fr, [True, True, False, False, False,
+                                       False, False])
+
+
+def test_warm_start_on_unchanged_graph_is_stable():
+    """Re-running from the converged membership must keep quality and stop
+    after a single pass (the dq <= tolerance fast path)."""
+    g, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=2)
+    cold = louvain(g)
+    warm = louvain(g, init_membership=cold.membership)
+    assert warm.n_passes == 1
+    assert louvain_modularity(g, warm) >= louvain_modularity(g, cold) - 1e-6
+
+
+def test_dynamic_stream_matches_static_recompute():
+    """Acceptance: SBM streamed as 20 edge batches — dynamic modularity
+    within 1% of a cold static recompute on the final graph, while the
+    delta-screened frontier re-processes < 25% of vertices per batch."""
+    n_comms, size = 64, 16
+    full, truth = sbm_graph(n_communities=n_comms, size=size, p_in=0.4,
+                            p_out=0.002, seed=11)
+    n = int(full.n_valid)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    w = np.asarray(full.weights)[:e]
+    und = src < dst
+    us, ud, uw = src[und], dst[und], w[und]
+
+    # Hold out 100 intra-community edges; stream them back as 20 batches.
+    rng = np.random.default_rng(0)
+    intra = np.where(truth[us] == truth[ud])[0]
+    hold = rng.choice(intra, 100, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.concatenate([uw[keep], uw[keep]]), n,
+                     e_cap=e + 8)
+    batches = [make_edge_batch(us[hold[i::20]], ud[hold[i::20]],
+                               uw[hold[i::20]], init.n_cap, b_cap=8)
+               for i in range(20)]
+
+    prev = louvain(init)
+    dyn = louvain_dynamic(init, batches, prev=prev.membership)
+    assert len(dyn.batch_stats) == 20
+
+    static = louvain(dyn.graph)
+    q_dyn = _q(dyn.graph, dyn.membership)
+    q_static = louvain_modularity(dyn.graph, static)
+    assert q_dyn >= q_static - 0.01 * abs(q_static), (q_dyn, q_static)
+
+    # Delta screening kept every per-batch seed frontier small.
+    fracs = [s.frontier_fraction for s in dyn.batch_stats]
+    assert max(fracs) < 0.25, fracs
+    # ... and the final graph really is the full SBM again.
+    assert int(dyn.graph.e_valid) == e
+
+
+def test_dynamic_without_screening_matches_with():
+    """Pure naive-dynamic (frontier = all vertices) reaches the same quality
+    — screening is an optimization, not a semantics change."""
+    full, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01,
+                        seed=5)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    und = src < dst
+    us, ud = src[und], dst[und]
+    rng = np.random.default_rng(1)
+    hold = rng.choice(len(us), 20, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.ones(2 * int(keep.sum()), np.float32),
+                     int(full.n_valid), e_cap=e + 8)
+    batches = [make_edge_batch(us[hold[i::4]], ud[hold[i::4]],
+                               np.ones(len(us[hold[i::4]]), np.float32),
+                               init.n_cap, b_cap=8) for i in range(4)]
+    prev = louvain(init).membership
+    dyn_nd = louvain_dynamic(init, batches, prev=prev, screening=False)
+    dyn_ds = louvain_dynamic(init, batches, prev=prev, screening=True)
+    q_nd = _q(dyn_nd.graph, dyn_nd.membership)
+    q_ds = _q(dyn_ds.graph, dyn_ds.membership)
+    assert abs(q_nd - q_ds) < 0.02, (q_nd, q_ds)
+    # ND re-processes everything; DS must not.
+    assert all(s.frontier_size == s.n_vertices for s in dyn_nd.batch_stats)
+    assert all(s.frontier_size < s.n_vertices for s in dyn_ds.batch_stats)

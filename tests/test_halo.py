@@ -10,6 +10,8 @@ import sys
 
 import pytest
 
+from conftest import multi_device as _multi_device
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -58,8 +60,8 @@ feat_p, pos_p, labels_p = feat[perm], pos[perm], labels[perm]
 inv = np.argsort(perm)
 src_p, dst_p = inv[src], inv[dst]
 
-mesh = jax.make_mesh((N_SHARDS,), ("i",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((N_SHARDS,), ("i",))
 axes = ("i",)
 shard1, rep = P("i"), P()
 
@@ -138,17 +140,23 @@ def halo_results():
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
+@_multi_device
 def test_gin_halo_matches_reference(halo_results):
     r = halo_results["gin"]
     assert abs(r["halo"] - r["ref"]) < 1e-4 * max(abs(r["ref"]), 1), r
 
 
+@pytest.mark.slow
+@_multi_device
 def test_equiformer_halo_matches_reference(halo_results):
     ref = halo_results["equi_ref"]
     got = halo_results["equi_trunc_False"]
     assert abs(got - ref) < 1e-3 * max(abs(ref), 1), (got, ref)
 
 
+@pytest.mark.slow
+@_multi_device
 def test_equiformer_m_truncation_exact(halo_results):
     """Truncated-rotation path == full-rotation path (the |m|>m_max
     coefficients it skips are provably unused)."""
@@ -163,8 +171,9 @@ def test_halo_step_lowers_locally():
     import jax
     from repro.configs.registry import get_arch
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     arch = get_arch("gin-tu")
     fn, args, shardings = arch.build_step("full_graph_sm", mesh,
                                           variant=("halo",))

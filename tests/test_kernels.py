@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.louvain_scan import ops
 from repro.kernels.louvain_scan.ref import louvain_scan_ref

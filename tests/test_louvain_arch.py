@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+from conftest import multi_device as _multi_device
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -39,8 +41,8 @@ ids = (np.arange(12) * n) // 12
 comm_map = ids[rng.integers(0, 12, n)].astype(np.int32)
 comm = jnp.asarray(np.concatenate([comm_map, [n]]))  # sentinel slot
 
-mesh = jax.make_mesh((P_SHARDS,), ("i",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((P_SHARDS,), ("i",))
 axes = ("i",)
 edge, rep = P("i"), P()
 
@@ -146,6 +148,8 @@ def agg_results():
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
+@_multi_device
 def test_a2a_aggregation_matches_gather_baseline(agg_results):
     r = agg_results
     assert r["keys_match"], r
@@ -157,6 +161,8 @@ def test_a2a_aggregation_matches_gather_baseline(agg_results):
     assert r["n_coarse_edges"] > 10
 
 
+@pytest.mark.slow
+@_multi_device
 def test_gather_baseline_overflow_detected(agg_results):
     """Community-ownership skew beyond per-shard capacity must be flagged
     (the silent-drop bug this test originally caught)."""
@@ -164,6 +170,8 @@ def test_gather_baseline_overflow_detected(agg_results):
     assert r["skew_owned_max"] > r["e_l"], r
 
 
+@pytest.mark.slow
+@_multi_device
 def test_delta_encoded_move_round_matches_baseline(agg_results):
     """The delta-C exchange reconstructs exactly the same (C, Σ, dQ) as the
     dense all_gather/psum round."""
@@ -177,9 +185,9 @@ def test_delta_encoded_move_round_matches_baseline(agg_results):
 
 def test_louvain_arch_lowers_locally():
     import jax
+    from repro.compat import make_mesh
     from repro.configs.louvain_arch import ARCH
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     for shape in ("road_108M_move", "road_108M_aggregate"):
         fn, args, shardings = ARCH.build_step(shape, mesh, smoke=True)
         with mesh:

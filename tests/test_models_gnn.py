@@ -14,10 +14,22 @@ from repro.models.gnn.common import GraphBatch, segment_softmax
 GNN_MODS = [gin_tu, gat_cora, dimenet_cfg, equiformer_v2]
 SHAPES = list(GNN_SMOKE_SHAPES)
 
+# DimeNet/Equiformer pay several seconds of tensor-product compile per
+# (arch, shape) cell; tier-1 keeps one representative shape ("molecule")
+# and the full sweep runs under --runslow.
+_HEAVY_GNN = {"dimenet", "equiformer-v2"}
 
-@pytest.mark.parametrize("mod", GNN_MODS, ids=lambda m: m.ARCH.arch_id)
-@pytest.mark.parametrize("shape", SHAPES)
-def test_smoke_train_step(mod, shape):
+
+def _cell(shape, mod):
+    if mod.ARCH.arch_id in _HEAVY_GNN and shape != "molecule":
+        return pytest.param(shape, mod, marks=pytest.mark.slow,
+                            id=f"{shape}-{mod.ARCH.arch_id}")
+    return pytest.param(shape, mod, id=f"{shape}-{mod.ARCH.arch_id}")
+
+
+@pytest.mark.parametrize(
+    "shape,mod", [_cell(s, m) for s in SHAPES for m in GNN_MODS])
+def test_smoke_train_step(shape, mod):
     """One optimizer step on a reduced config: loss finite and decreasing
     over a few steps."""
     from repro.optim import AdamWConfig, adamw_init, adamw_update

@@ -76,7 +76,12 @@ def test_decode_matches_forward(mod, lm_setups):
                                rtol=2e-2, atol=2e-2)
 
 
-@pytest.mark.parametrize("mod", LM_MODS, ids=lambda m: m.ARCH.arch_id)
+# One representative arch in tier-1 (the variant equivalence is per-layer
+# machinery shared by all five archs); the full sweep runs under --runslow.
+@pytest.mark.parametrize(
+    "mod",
+    [m if m is qwen2_1p5b else pytest.param(m, marks=pytest.mark.slow)
+     for m in LM_MODS], ids=lambda m: m.ARCH.arch_id)
 def test_scan_vs_unrolled_forward(mod, lm_setups):
     """The dry-run's unrolled variant computes the same function as scan."""
     import dataclasses

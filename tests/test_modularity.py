@@ -4,7 +4,10 @@ import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.graph import from_networkx
 from repro.core.local_move import best_moves
@@ -34,7 +37,8 @@ def test_modularity_matches_networkx_random(seed):
     nxg = nx.gnp_random_graph(24, 0.2, seed=int(seed))
     if nxg.number_of_edges() == 0:
         return
-    g = from_networkx(nxg)
+    # fixed capacities: every example reuses one compiled modularity()
+    g = from_networkx(nxg, n_cap=24, e_cap=2 * 276)
     comm = rng.integers(0, 4, 24)
     parts = [{v for v in range(24) if comm[v] == c} for c in range(4)]
     parts = [p for p in parts if p]
@@ -65,7 +69,7 @@ def test_delta_modularity_consistent_with_q(seed):
     nxg = nx.gnp_random_graph(16, 0.3, seed=int(seed))
     if nxg.number_of_edges() < 4:
         return
-    g = from_networkx(nxg)
+    g = from_networkx(nxg, n_cap=16, e_cap=2 * 120)  # fixed caps: one jit
     n = int(g.n_valid)
     comm = rng.integers(0, 3, n)
     i = int(rng.integers(0, n))

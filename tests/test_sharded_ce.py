@@ -8,6 +8,10 @@ import sys
 
 import pytest
 
+from conftest import multi_device as _multi_device
+
+pytestmark = [pytest.mark.slow, _multi_device]
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -22,8 +26,8 @@ from repro.models import transformer as tf
 
 cfg = ARCH.smoke_config()
 params = tf.init_params(cfg, jax.random.PRNGKey(0))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 
 b, s = 4, 16
 toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
