@@ -1,0 +1,130 @@
+"""Distributed streaming Louvain: updates/sec vs cold sharded recompute.
+
+The sharded analogue of ``bench_dynamic``: an SBM graph is streamed as
+edge-batch inserts through ``louvain_dynamic_sharded`` (partition once, then
+per batch: in-layout shard_map apply + delta-screened warm restart) and
+compared against the batch-only baseline — a cold ``distributed_louvain``
+(fresh partition, singleton start) after every batch.  Reports edge
+updates/sec, speedup, mean delta-screened frontier fraction, and the
+modularity gap on the final graph.
+
+Executed as a script it forces 8 host devices (it must own the process
+before JAX initializes, which is why ``benchmarks.run`` launches it as a
+subprocess); inside an existing JAX process it degrades to however many
+devices are visible.
+
+    PYTHONPATH=src python -m benchmarks.bench_distributed_dynamic [--full]
+"""
+
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede the first jax import
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np
+
+from benchmarks.common import emit_csv, time_fn
+from repro.core.delta import apply_edge_batch, make_edge_batch
+from repro.core.distributed import distributed_louvain
+from repro.core.distributed_dynamic import louvain_dynamic_sharded
+from repro.core.graph import build_csr
+from repro.core.louvain import membership_modularity
+from repro.data import sbm_graph
+
+
+def _mesh_axes():
+    import jax
+
+    from repro.compat import make_mesh
+
+    if jax.device_count() >= 8:
+        return make_mesh((2, 4), ("data", "model")), ("data", "model")
+    n = jax.device_count()
+    return make_mesh((n,), ("shard",)), ("shard",)
+
+
+def _holdout_stream(small: bool, seed: int = 0):
+    n_comms, size = (32, 16) if small else (96, 24)
+    full, _ = sbm_graph(n_communities=n_comms, size=size, p_in=0.4,
+                        p_out=0.002, seed=seed)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    w = np.asarray(full.weights)[:e]
+    und = src < dst
+    us, ud, uw = src[und], dst[und], w[und]
+    rng = np.random.default_rng(seed)
+    n_hold = min(len(us) // 4, 240 if small else 2000)
+    hold = rng.choice(len(us), n_hold, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.concatenate([uw[keep], uw[keep]]),
+                     int(full.n_valid), e_cap=e + 8)
+    return init, (us[hold], ud[hold], uw[hold]), e
+
+
+def run(small: bool = True, repeats: int = 2,
+        batch_sizes=(4, 16)) -> None:
+    mesh, axes = _mesh_axes()
+    init, (us, ud, uw), e = _holdout_stream(small)
+    # Cold runs re-partition per batch with skew headroom (aggregation can
+    # concentrate the SBM's coarse edges onto one shard).
+    prev, _, _ = distributed_louvain(init, mesh, axes, e_per_shard=e)
+    rows = []
+    for bs in batch_sizes:
+        n_batches = max(1, min(len(us) // bs, 12))
+        used = n_batches * bs
+        batches = [make_edge_batch(us[i * bs:(i + 1) * bs],
+                                   ud[i * bs:(i + 1) * bs],
+                                   uw[i * bs:(i + 1) * bs],
+                                   init.n_cap, b_cap=bs)
+                   for i in range(n_batches)]
+
+        t_dyn, dyn = time_fn(louvain_dynamic_sharded, init, mesh, axes,
+                             batches, prev=prev, repeats=repeats)
+
+        # Batch-only baseline: apply the delta, then a cold sharded run
+        # (fresh partition + singleton start) after every batch.
+        def recompute():
+            g = init
+            mem = None
+            for b in batches:
+                g, _ = apply_edge_batch(g, b)
+                mem, _, _ = distributed_louvain(g, mesh, axes,
+                                                e_per_shard=e)
+            return g, mem
+
+        t_cold, (g_end, mem_cold) = time_fn(recompute, repeats=repeats)
+        q_dyn = membership_modularity(g_end, dyn.membership)
+        q_cold = membership_modularity(g_end, mem_cold)
+
+        fr = [s.frontier_fraction for s in dyn.batch_stats]
+        rows.append({
+            "batch_size": bs, "n_batches": n_batches,
+            "updates_per_s_dynamic": round(used / t_dyn, 1),
+            "updates_per_s_recompute": round(used / t_cold, 1),
+            "speedup": round(t_cold / t_dyn, 2),
+            "frontier_frac_mean": round(float(np.mean(fr)), 4),
+            "q_dynamic": round(q_dyn, 4),
+            "q_recompute": round(q_cold, 4),
+        })
+    emit_csv(rows, ["batch_size", "n_batches", "updates_per_s_dynamic",
+                    "updates_per_s_recompute", "speedup",
+                    "frontier_frac_mean", "q_dynamic", "q_recompute"])
+
+
+if __name__ == "__main__":
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print(f"devices: {jax.device_count()}")
+    run(small=not args.full, repeats=3 if args.full else 2)

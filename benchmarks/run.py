@@ -10,12 +10,16 @@ Sections:
     fig7  runtime per edge
     fig8  strong scaling (device-count structural scaling)
     dynamic  streaming edge-batch updates/sec vs full recompute
+    distdyn  sharded streaming updates/sec vs cold sharded recompute
+             (forced-8-device subprocess)
     roofline  per-(arch x shape) table from the dry-run artifacts (if present)
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 
@@ -26,7 +30,7 @@ def main() -> None:
                     help="paper-scale graphs + 3 repeats (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig5,fig6,fig7,fig8,"
-                         "dynamic,roofline")
+                         "dynamic,distdyn,roofline")
     args = ap.parse_args()
     small = not args.full
     repeats = 3 if args.full else 2
@@ -36,6 +40,7 @@ def main() -> None:
         return only is None or name in only
 
     t0 = time.perf_counter()
+    failed = False
     if want("fig3"):
         print("== fig3: optimization ablations "
               "(relative to the paper's defaults) ==")
@@ -67,9 +72,24 @@ def main() -> None:
         from benchmarks import bench_dynamic
         bench_dynamic.run(small=small, repeats=repeats)
         print()
+    if want("distdyn"):
+        print("== distdyn: sharded streaming vs cold sharded recompute "
+              "(8 forced host devices, subprocess) ==")
+        # The benchmark must force the device count before JAX initializes,
+        # so it runs as its own process.
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        cmd = [sys.executable, "-m", "benchmarks.bench_distributed_dynamic"]
+        if not small:
+            cmd.append("--full")
+        proc = subprocess.run(cmd, env=env)
+        if proc.returncode != 0:
+            print(f"(distdyn subprocess failed with code {proc.returncode})")
+            failed = True
+        print()
     if want("roofline"):
         print("== roofline: dry-run artifacts (single-pod) ==")
-        import os
         if os.path.isdir("results/dryrun"):
             from benchmarks import roofline
             roofline.run()
@@ -78,6 +98,8 @@ def main() -> None:
                   "`python -m repro.launch.dryrun --all` first)")
         print()
     print(f"benchmarks done in {time.perf_counter() - t0:.1f}s")
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -72,6 +72,65 @@ def make_edge_batch(src, dst, weight, n_cap: int,
     )
 
 
+def sort_reduce_apply_slots(all_src, all_dst, all_w, rank, is_batch,
+                            sent: int, out_cap: int):
+    """The shared batch-apply sort-reduce over a unified directed-slot list.
+
+    ``all_*`` concatenate the existing slots (rank 0) and the batch's directed
+    slots (rank 1 + batch position, so later batch entries win ties); dead
+    slots must already carry an endpoint >= ``sent``.  Groups of equal
+    (src, dst) resolve to their highest-rank weight and compact back into
+    (src, dst)-sorted order in ``out_cap`` slots (overflow rows land in a
+    scratch slot and are reported via the uncapped ``e_new``).
+
+    Returns ``(out_src, out_dst, out_w, e_new, chg_src, chg_dst)`` where
+    ``chg_src``/``chg_dst`` hold the endpoints of every group whose resolved
+    weight actually changed (``sent`` elsewhere) — callers scatter these into
+    their own touched-vertex structures.  Used by both the single-device CSR
+    apply below and the per-shard apply in ``repro.core.distributed_dynamic``.
+    """
+    total = all_src.shape[0]
+    dead = (all_src >= sent) | (all_dst >= sent)
+    k_src = jnp.where(dead, sent, all_src)
+    k_dst = jnp.where(dead, sent, all_dst)
+    order = jnp.lexsort((rank, k_dst, k_src))
+    s_src, s_dst = k_src[order], k_dst[order]
+    s_w, s_batch = all_w[order], is_batch[order]
+    s_sent = s_src == sent
+
+    nxt_same = (s_src[:-1] == s_src[1:]) & (s_dst[:-1] == s_dst[1:])
+    is_last = jnp.concatenate([~nxt_same, jnp.ones((1,), bool)])
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ~nxt_same])
+    gid = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+
+    # Per-group old weight (0 if the first slot is a batch slot, i.e. insert)
+    # and new weight (the last slot's weight — batch overrides existing).
+    old_w = jax.ops.segment_sum(
+        jnp.where(is_first & ~s_batch, s_w, 0.0), gid, num_segments=total)
+    new_w = jax.ops.segment_sum(
+        jnp.where(is_last, s_w, 0.0), gid, num_segments=total)
+    changed_group = jax.ops.segment_max(
+        (s_batch & (old_w[gid] != new_w[gid])).astype(jnp.int32),
+        gid, num_segments=total)
+
+    # Compact live groups (w > 0, real key) back into sorted slot order.
+    keep = is_last & ~s_sent & (new_w[gid] > 0.0)
+    e_new = jnp.sum(keep.astype(jnp.int32))
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    pos = jnp.where(keep & (pos < out_cap), pos, out_cap)  # overflow -> scratch
+    out_src = jnp.full((out_cap + 1,), sent, jnp.int32).at[pos].set(
+        jnp.where(keep, s_src, sent))[:out_cap]
+    out_dst = jnp.full((out_cap + 1,), sent, jnp.int32).at[pos].set(
+        jnp.where(keep, s_dst, sent))[:out_cap]
+    out_w = jnp.zeros((out_cap + 1,), jnp.float32).at[pos].set(
+        jnp.where(keep, new_w[gid], 0.0))[:out_cap]
+
+    hit = changed_group[gid] > 0
+    chg_src = jnp.where(hit, s_src, sent)
+    chg_dst = jnp.where(hit, s_dst, sent)
+    return out_src, out_dst, out_w, e_new, chg_src, chg_dst
+
+
 @jax.jit
 def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch):
     """Jit core: returns (graph', touched_mask, e_new_uncapped)."""
@@ -107,44 +166,15 @@ def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch):
     # Dead slots collapse to the (n_cap, n_cap) sentinel pair so they sort
     # last; the (src, dst) sort order IS the CSR order — no combined int64
     # key (x64 is usually disabled), the lexsort carries both columns.
+    # The group-resolve + compaction itself is the shared sort-reduce core.
     dead = ~(slot_live & (all_src < n_cap) & (all_dst < n_cap))
-    k_src = jnp.where(dead, n_cap, all_src)
-    k_dst = jnp.where(dead, n_cap, all_dst)
-    order = jnp.lexsort((rank, k_dst, k_src))
-    s_src, s_dst = k_src[order], k_dst[order]
-    s_w, s_batch = all_w[order], is_batch[order]
-    s_sent = s_src == n_cap
+    out_src, out_dst, out_w, e_new, chg_src, chg_dst = sort_reduce_apply_slots(
+        jnp.where(dead, n_cap, all_src), jnp.where(dead, n_cap, all_dst),
+        all_w, rank, is_batch, n_cap, e_cap)
 
-    total = e_cap + 2 * b_cap
-    nxt_same = (s_src[:-1] == s_src[1:]) & (s_dst[:-1] == s_dst[1:])
-    is_last = jnp.concatenate([~nxt_same, jnp.ones((1,), bool)])
-    is_first = jnp.concatenate([jnp.ones((1,), bool), ~nxt_same])
-    gid = jnp.cumsum(is_first.astype(jnp.int32)) - 1
-
-    # Per-group old weight (0 if the first slot is a batch slot, i.e. insert)
-    # and new weight (the last slot's weight — batch overrides existing).
-    old_w = jax.ops.segment_sum(
-        jnp.where(is_first & ~s_batch, s_w, 0.0), gid, num_segments=total)
-    new_w = jax.ops.segment_sum(
-        jnp.where(is_last, s_w, 0.0), gid, num_segments=total)
-    touched_group = jax.ops.segment_max(
-        (s_batch & (old_w[gid] != new_w[gid])).astype(jnp.int32),
-        gid, num_segments=total)
-
-    # Compact live groups (w > 0, real key) back into CSR order.
-    keep = is_last & ~s_sent & (new_w[gid] > 0.0)
-    e_new = jnp.sum(keep.astype(jnp.int32))
-    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
-    pos = jnp.where(keep & (pos < e_cap), pos, e_cap)  # overflow -> scratch
-    out_src = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(
-        jnp.where(keep, s_src, n_cap))[:e_cap]
-    out_dst = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(
-        jnp.where(keep, s_dst, n_cap))[:e_cap]
-    out_w = jnp.zeros((e_cap + 1,), jnp.float32).at[pos].set(
-        jnp.where(keep, new_w[gid], 0.0))[:e_cap]
-
+    live_rows = out_src < n_cap
     counts = jax.ops.segment_sum(
-        jnp.where(keep, 1, 0), jnp.where(keep, s_src, n_cap),
+        jnp.where(live_rows, 1, 0), jnp.where(live_rows, out_src, n_cap),
         num_segments=n_cap + 1)
     indptr = jnp.concatenate([
         jnp.zeros((1,), jnp.int32),
@@ -152,10 +182,9 @@ def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch):
     ])
 
     # Touched vertices: endpoints of groups whose weight actually changed.
-    hit = touched_group[gid] > 0
     touched = jnp.zeros((n_cap + 1,), bool)
-    touched = touched.at[jnp.where(hit, s_src, n_cap)].set(True)
-    touched = touched.at[jnp.where(hit, s_dst, n_cap)].set(True)
+    touched = touched.at[chg_src].set(True)
+    touched = touched.at[chg_dst].set(True)
     touched = touched.at[n_cap].set(False)
 
     # Batch endpoints may extend the valid-vertex prefix (still < n_cap).
@@ -169,17 +198,50 @@ def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch):
     return out, touched, e_new
 
 
-def apply_edge_batch(graph: CSRGraph,
-                     batch: EdgeBatch) -> Tuple[CSRGraph, jax.Array]:
+def grow_graph_capacity(graph: CSRGraph, e_cap_new: int) -> CSRGraph:
+    """Host-side re-bucketing: copy a graph into buffers with more edge slots.
+
+    Vertex capacity (and so every (n_cap + 1,)-shaped consumer) is unchanged;
+    only the edge arrays grow, so downstream jits recompile once per growth
+    step and are reused for the rest of the stream.
+    """
+    e_cap_new = int(e_cap_new)
+    if e_cap_new < graph.e_cap:
+        raise ValueError(f"cannot shrink e_cap {graph.e_cap} -> {e_cap_new}")
+    n_cap = graph.n_cap
+    e = int(graph.e_valid)
+    pad_i = np.full(e_cap_new - e, n_cap, np.int32)
+    pad_w = np.zeros(e_cap_new - e, np.float32)
+    return CSRGraph(
+        indptr=graph.indptr,
+        indices=jnp.asarray(np.concatenate(
+            [np.asarray(graph.indices)[:e], pad_i])),
+        weights=jnp.asarray(np.concatenate(
+            [np.asarray(graph.weights)[:e], pad_w])),
+        src=jnp.asarray(np.concatenate([np.asarray(graph.src)[:e], pad_i])),
+        n_valid=graph.n_valid,
+        e_valid=graph.e_valid,
+    )
+
+
+def apply_edge_batch(graph: CSRGraph, batch: EdgeBatch, *,
+                     grow: bool = False) -> Tuple[CSRGraph, jax.Array]:
     """Apply one edge batch; returns (graph', touched_vertex_mask).
 
     Raises if the resulting edge count exceeds the preallocated ``e_cap``
     (streaming callers size capacities for the expected insert volume up
-    front — growing buffers would retrigger every downstream jit).
+    front — growing buffers would retrigger every downstream jit).  With
+    ``grow=True`` an overflowing batch instead re-buckets host-side into
+    doubled capacity (at least the required count) and re-applies — the
+    unbounded-stream policy used by ``louvain_dynamic``.
     """
     out, touched, e_new = _apply_edge_batch(graph, batch)
     if int(e_new) > graph.e_cap:
-        raise ValueError(
-            f"edge batch overflows capacity: {int(e_new)} live directed "
-            f"slots > e_cap={graph.e_cap}")
+        if not grow:
+            raise ValueError(
+                f"edge batch overflows capacity: {int(e_new)} live directed "
+                f"slots > e_cap={graph.e_cap}")
+        grown = grow_graph_capacity(
+            graph, max(2 * graph.e_cap, int(e_new)))
+        out, touched, e_new = _apply_edge_batch(grown, batch)
     return out, touched

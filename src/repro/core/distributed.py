@@ -23,8 +23,6 @@ launch/dryrun.py.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -37,6 +35,19 @@ from repro import compat
 
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
+
+
+class AggregationOverflow(RuntimeError):
+    """A shard owns more coarse edges than ``e_per_shard`` (community-
+    ownership skew).  Carries ``owned_max`` so streaming callers can
+    re-bucket into grown capacity and retry instead of dying."""
+
+    def __init__(self, owned_max: int, e_per_shard: int):
+        super().__init__(
+            f"aggregation overflow: a shard owns {owned_max} coarse edges "
+            f"> capacity {e_per_shard}; re-partition with more headroom "
+            "(community skew)")
+        self.owned_max = owned_max
 
 
 class ShardedGraphSpec(NamedTuple):
@@ -52,25 +63,20 @@ class ShardedGraphSpec(NamedTuple):
         return self.n_pad
 
 
-def partition_graph_host(
-    graph: CSRGraph, n_shards: int
-) -> Tuple[jax.Array, jax.Array, jax.Array, ShardedGraphSpec]:
-    """Host-side 1-D vertex partition -> globally laid-out padded edge arrays.
-
-    Shard s owns vertices [s*v, (s+1)*v) and the slice [s*E_l, (s+1)*E_l) of
-    each edge array.  Padding slots carry src = dst = sentinel, w = 0.
-    """
-    n = int(graph.n_valid)
-    v_per = -(-n // n_shards)
-    n_pad = v_per * n_shards
-    src = np.asarray(graph.src)
-    dst = np.asarray(graph.indices)
-    w = np.asarray(graph.weights)
-    live = src < graph.n_cap
-    src, dst, w = src[live], dst[live], w[live]
-
+def bucket_slots_host(
+    src: np.ndarray, dst: np.ndarray, w: np.ndarray, spec: ShardedGraphSpec
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Host-side owner bucketing of live directed slots into the padded
+    per-shard edge layout described by ``spec`` (the re-bucketing primitive
+    shared by initial partitioning and capacity growth)."""
+    n_shards, v_per, e_per = spec.n_shards, spec.v_per_shard, spec.e_per_shard
+    n_pad = spec.n_pad
     owner = src // v_per
-    e_per = max(int(np.bincount(owner, minlength=n_shards).max()), 1)
+    counts = np.bincount(owner, minlength=n_shards)
+    if counts.size > n_shards or (counts.max(initial=0) > e_per):
+        raise ValueError(
+            f"slots do not fit the shard layout: max owned "
+            f"{int(counts.max(initial=0))} > e_per_shard={e_per}")
     s_out = np.full((n_shards, e_per), n_pad, np.int32)
     d_out = np.full((n_shards, e_per), n_pad, np.int32)
     w_out = np.zeros((n_shards, e_per), np.float32)
@@ -83,9 +89,38 @@ def partition_graph_host(
         s_out[s, :cnt] = src[starts[s]:ends[s]]
         d_out[s, :cnt] = dst[starts[s]:ends[s]]
         w_out[s, :cnt] = w[starts[s]:ends[s]]
-    spec = ShardedGraphSpec(n_shards, v_per, e_per, n_pad)
     return (jnp.asarray(s_out.reshape(-1)), jnp.asarray(d_out.reshape(-1)),
-            jnp.asarray(w_out.reshape(-1)), spec)
+            jnp.asarray(w_out.reshape(-1)))
+
+
+def partition_graph_host(
+    graph: CSRGraph, n_shards: int, *,
+    n_target: int | None = None, e_per_shard: int | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, ShardedGraphSpec]:
+    """Host-side 1-D vertex partition -> globally laid-out padded edge arrays.
+
+    Shard s owns vertices [s*v, (s+1)*v) and the slice [s*E_l, (s+1)*E_l) of
+    each edge array.  Padding slots carry src = dst = sentinel, w = 0.
+
+    ``n_target``/``e_per_shard`` reserve headroom beyond the current live
+    graph (streaming callers partition for ``graph.n_cap`` vertices and an
+    expected insert volume so the layout survives edge batches in capacity).
+    """
+    n = int(n_target if n_target is not None else graph.n_valid)
+    v_per = -(-n // n_shards)
+    n_pad = v_per * n_shards
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.indices)
+    w = np.asarray(graph.weights)
+    live = src < graph.n_cap
+    src, dst, w = src[live], dst[live], w[live]
+
+    owner = src // v_per
+    e_per = max(int(np.bincount(owner, minlength=n_shards).max()), 1,
+                int(e_per_shard or 0))
+    spec = ShardedGraphSpec(n_shards, v_per, e_per, n_pad)
+    src_g, dst_g, w_g = bucket_slots_host(src, dst, w, spec)
+    return src_g, dst_g, w_g, spec
 
 
 # ---------------------------------------------------------------------------
@@ -214,18 +249,24 @@ def make_distributed_move(
 ):
     """Build the jit'd distributed local-moving phase for a fixed mesh/layout.
 
-    Returns fn(src_g, dst_g, w_g, comm, sigma, k, m, tolerance)
+    Returns fn(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance)
         -> (comm, sigma, iters, dq_sum); comm/sigma replicated outputs.
+
+    ``frontier_g`` is a replicated (n_pad + 1,) seed-frontier mask — all-ones
+    for the static start, the delta-screened set for warm streaming starts
+    (each shard slices its owned v_per entries).
     """
     edge_spec = P(axes)      # edge arrays: sharded along dim 0 over all axes
     rep = P()                # replicated state
 
-    def phase(src_g, dst_g, w_g, comm, sigma, k, m, tolerance):
-        def body_shard(src_l, dst_l, w_l, comm, sigma, k, m, tolerance):
+    def phase(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance):
+        def body_shard(src_l, dst_l, w_l, comm, sigma, k, frontier_g, m,
+                       tolerance):
             v_per, sent = spec.v_per_shard, spec.sentinel
             shard_ix = _shard_index(axes)
             gidx = shard_ix * v_per + jnp.arange(v_per)
-            frontier0 = gidx < spec.n_pad
+            frontier0 = jax.lax.dynamic_slice_in_dim(
+                frontier_g, shard_ix * v_per, v_per) & (gidx < spec.n_pad)
 
             def cond(st):
                 comm_, sigma_, frontier_, it, dq, dq_sum = st
@@ -252,11 +293,12 @@ def make_distributed_move(
 
         fn = shard_map(
             body_shard, mesh=mesh,
-            in_specs=(edge_spec, edge_spec, edge_spec, rep, rep, rep, rep, rep),
+            in_specs=(edge_spec, edge_spec, edge_spec, rep, rep, rep, rep,
+                      rep, rep),
             out_specs=(rep, rep, rep, rep),
             check_rep=False,
         )
-        return fn(src_g, dst_g, w_g, comm, sigma, k, m, tolerance)
+        return fn(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance)
 
     return jax.jit(phase)
 
@@ -331,6 +373,111 @@ def make_distributed_aggregate(mesh: Mesh, axes: Tuple[str, ...],
     return jax.jit(fn)
 
 
+@jax.jit
+def _vertex_k(w_g, src_g, n_pad_plus_1_zeros):
+    """K_i over the partitioned slot arrays (shape token carries n_pad + 1)."""
+    return jax.ops.segment_sum(
+        w_g, src_g,
+        num_segments=n_pad_plus_1_zeros.shape[0]).astype(jnp.float32)
+
+
+@jax.jit
+def _warm_comm_sigma(mem, k, n_valid):
+    """(comm0, sigma0) resuming the sharded move phase from ``mem``.
+
+    The replicated analogue of ``repro.core.louvain.warm_init``: valid
+    vertices without a previous assignment (id >= n_pad, e.g. entered via an
+    edge insert) fall back to their own singleton; sigma is recomputed from
+    the CURRENT vertex weights so the snapshot stays exact after updates.
+    """
+    n_pad = mem.shape[0] - 1
+    idx = jnp.arange(n_pad + 1)
+    valid = idx < n_valid
+    assigned = jnp.where(mem < n_pad, mem.astype(jnp.int32),
+                         idx.astype(jnp.int32))
+    comm0 = jnp.where(valid, assigned, n_pad).astype(jnp.int32)
+    sigma0 = jax.ops.segment_sum(k[:n_pad], comm0[:n_pad],
+                                 num_segments=n_pad + 1)
+    return comm0, sigma0.astype(jnp.float32)
+
+
+@jax.jit
+def sharded_modularity(src_g, dst_g, w_g, comm):
+    """Q of a replicated (n_pad + 1,) membership on partitioned edge arrays."""
+    sent = comm.shape[0] - 1
+    m = jnp.sum(w_g) * 0.5
+    internal = jnp.sum(jnp.where(comm[src_g] == comm[dst_g], w_g, 0.0))
+    k = jax.ops.segment_sum(w_g, src_g, num_segments=sent + 1)
+    sig = jax.ops.segment_sum(k[:sent], jnp.minimum(comm[:sent], sent),
+                              num_segments=sent + 1).at[sent].set(0.0)
+    return internal / (2.0 * m) - jnp.sum((sig / (2.0 * m)) ** 2)
+
+
+def sharded_louvain_passes(
+    src_g, dst_g, w_g,
+    spec: ShardedGraphSpec,
+    move, agg,
+    n_live: int,
+    *,
+    init_membership=None,
+    init_frontier=None,
+    max_passes: int = 10,
+    initial_tolerance: float = 0.01,
+    tolerance_drop: float = 10.0,
+    aggregation_tolerance: float = 0.8,
+):
+    """Host pass loop over prebuilt jit'd phases on partitioned edge arrays.
+
+    The shared engine of the static and streaming sharded drivers:
+    ``init_membership``/``init_frontier`` warm-start pass 0 ((n_pad + 1,)
+    replicated arrays, mirroring ``repro.core.louvain.louvain``); later
+    passes restart from singletons on the coarse graph.  The fine edge
+    arrays are never mutated (aggregation emits fresh coarse arrays), so
+    streaming callers can keep them resident across calls.
+
+    Returns (global_comm (n_pad,) device array, n_communities, stats).
+    """
+    n_pad, sent = spec.n_pad, spec.sentinel
+    idx = np.arange(n_pad + 1)
+    shape_token = jnp.zeros((n_pad + 1,), jnp.float32)
+    global_comm = jnp.arange(n_pad, dtype=jnp.int32)
+    ones_frontier = jnp.ones((n_pad + 1,), bool)
+    tol = float(initial_tolerance)
+    stats = []
+    n_comms_i = n_live
+    for p in range(max_passes):
+        k = _vertex_k(w_g, src_g, shape_token)
+        m = jnp.sum(w_g) * 0.5
+        if p == 0 and init_membership is not None:
+            comm0, sigma0 = _warm_comm_sigma(
+                init_membership, k, jnp.int32(n_live))
+            frontier0 = (ones_frontier if init_frontier is None
+                         else init_frontier)
+        else:
+            comm0 = jnp.asarray(
+                np.where(idx < n_live, idx, sent).astype(np.int32))
+            sigma0 = k
+            frontier0 = ones_frontier
+        comm, sigma, iters, dq_sum = move(
+            src_g, dst_g, w_g, comm0, sigma0, k, frontier0, m,
+            jnp.float32(tol))
+        comm_ren, n_comms = replicated_renumber(comm)
+        global_comm = comm_ren[global_comm]
+        iters_i, n_comms_i = int(iters), int(n_comms)
+        stats.append({"iterations": iters_i, "n_communities": n_comms_i,
+                      "n_vertices": n_live, "dq_sum": float(dq_sum)})
+        converged = iters_i <= 1
+        low_shrink = n_comms_i / max(n_live, 1) > aggregation_tolerance
+        if converged or low_shrink or p == max_passes - 1:
+            break
+        src_g, dst_g, w_g, _, owned_max = agg(src_g, dst_g, w_g, comm_ren)
+        if int(owned_max) > spec.e_per_shard:
+            raise AggregationOverflow(int(owned_max), spec.e_per_shard)
+        n_live = n_comms_i
+        tol /= tolerance_drop
+    return global_comm, n_comms_i, stats
+
+
 def distributed_louvain(
     graph: CSRGraph,
     mesh: Mesh,
@@ -343,52 +490,51 @@ def distributed_louvain(
     aggregation_tolerance: float = 0.8,
     gate_fraction: int = 2,
     use_pruning: bool = True,
+    init_membership=None,
+    init_frontier=None,
+    e_per_shard: int | None = None,
 ):
     """End-to-end multi-device GVE-Louvain (host pass loop, jit'd phases).
+
+    ``init_membership``/``init_frontier`` warm-start the first pass like the
+    single-device ``louvain`` (the streaming driver in
+    ``repro.core.distributed_dynamic`` builds on this).  ``e_per_shard``
+    reserves per-shard slot headroom — aggregation can concentrate coarse
+    edges on few shards (community skew), which otherwise raises
+    ``AggregationOverflow``.
 
     Returns (membership (n,), n_communities, pass_stats list).
     """
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    src_g, dst_g, w_g, spec = partition_graph_host(graph, n_shards)
-    n_pad, sent = spec.n_pad, spec.sentinel
+    src_g, dst_g, w_g, spec = partition_graph_host(
+        graph, n_shards, e_per_shard=e_per_shard)
     n = int(graph.n_valid)
 
     move = make_distributed_move(
         mesh, axes, spec, max_iterations=max_iterations,
         gate_fraction=gate_fraction, use_pruning=use_pruning)
     agg = make_distributed_aggregate(mesh, axes, spec)
-    vertex_k = jax.jit(functools.partial(
-        jax.ops.segment_sum, num_segments=n_pad + 1))
 
-    idx = np.arange(n_pad + 1)
-    n_live = n
-    global_comm = jnp.arange(n_pad, dtype=jnp.int32)
-    tol = float(initial_tolerance)
-    stats = []
+    from repro.core.louvain import pad_membership
+    mem0 = fr0 = None
+    if init_membership is not None:
+        mem0 = jnp.asarray(pad_membership(
+            np.minimum(np.asarray(init_membership, np.int64),
+                       spec.n_pad).astype(np.int32)[:spec.n_pad],
+            spec.n_pad))
+    if init_frontier is not None:
+        fr = np.zeros(spec.n_pad + 1, bool)
+        src_fr = np.asarray(init_frontier, bool)
+        fr[: min(len(src_fr), spec.n_pad)] = src_fr[: spec.n_pad]
+        fr0 = jnp.asarray(fr)
+
     with mesh:
-        for p in range(max_passes):
-            k = vertex_k(w_g, src_g).astype(jnp.float32)
-            m = jnp.sum(w_g) * 0.5
-            comm0 = jnp.where(idx < n_live, idx, sent).astype(jnp.int32)
-            comm, sigma, iters, dq_sum = move(
-                src_g, dst_g, w_g, comm0, k, k, m, jnp.float32(tol))
-            comm_ren, n_comms = replicated_renumber(comm)
-            global_comm = comm_ren[global_comm]
-            iters_i, n_comms_i = int(iters), int(n_comms)
-            stats.append({"iterations": iters_i, "n_communities": n_comms_i,
-                          "n_vertices": n_live, "dq_sum": float(dq_sum)})
-            converged = iters_i <= 1
-            low_shrink = n_comms_i / max(n_live, 1) > aggregation_tolerance
-            if converged or low_shrink or p == max_passes - 1:
-                break
-            src_g, dst_g, w_g, _, owned_max = agg(src_g, dst_g, w_g, comm_ren)
-            if int(owned_max) > spec.e_per_shard:
-                raise RuntimeError(
-                    f"aggregation overflow: a shard owns {int(owned_max)} "
-                    f"coarse edges > capacity {spec.e_per_shard}; "
-                    "re-partition with more headroom (community skew)")
-            n_live = n_comms_i
-            tol /= tolerance_drop
+        global_comm, _, stats = sharded_louvain_passes(
+            src_g, dst_g, w_g, spec, move, agg, n,
+            init_membership=mem0, init_frontier=fr0,
+            max_passes=max_passes, initial_tolerance=initial_tolerance,
+            tolerance_drop=tolerance_drop,
+            aggregation_tolerance=aggregation_tolerance)
     membership = np.asarray(global_comm[:n])
     return membership, int(len(np.unique(membership))), stats
 

@@ -37,27 +37,13 @@ import numpy as np
 from repro.core.delta import EdgeBatch, apply_edge_batch
 from repro.core.graph import CSRGraph
 from repro.core.louvain import (LouvainConfig, LouvainResult, louvain,
-                                louvain_modularity)
+                                louvain_modularity, pad_membership,
+                                screened_frontier)
 
-
-@jax.jit
-def delta_frontier(touched: jax.Array, membership: jax.Array,
-                   n_valid: jax.Array) -> jax.Array:
-    """Delta-screened seed frontier from a touched-vertex mask.
-
-    (n_cap + 1,) bool: touched endpoints + all members of their current
-    communities.  ``membership`` is (n_cap + 1,) community ids in vertex-id
-    space (sentinel slot = n_cap).
-    """
-    n_cap = membership.shape[0] - 1
-    idx = jnp.arange(n_cap + 1)
-    valid = idx < n_valid
-    comm = jnp.where(valid, jnp.minimum(membership, n_cap), n_cap)
-    # Mark affected communities, then pull every member of a marked one.
-    mark = jnp.zeros((n_cap + 1,), bool)
-    mark = mark.at[jnp.where(touched & valid, comm, n_cap)].set(True)
-    mark = mark.at[n_cap].set(False)
-    return (touched | mark[comm]) & valid
+# The frontier math is shared with the sharded layout — see
+# ``repro.core.louvain.screened_frontier``; this name is the historical
+# single-device entry point.
+delta_frontier = screened_frontier
 
 
 @dataclasses.dataclass
@@ -92,10 +78,7 @@ class DynamicResult:
         return edges / max(self.total_seconds, 1e-12)
 
 
-def _pad_membership(mem: np.ndarray, n_cap: int) -> np.ndarray:
-    out = np.full(n_cap + 1, n_cap, np.int32)
-    out[: len(mem)] = np.asarray(mem, np.int32)
-    return out
+_pad_membership = pad_membership
 
 
 def louvain_dynamic(
@@ -106,6 +89,7 @@ def louvain_dynamic(
     *,
     screening: bool = True,
     track_modularity: bool = False,
+    grow_capacity: bool = True,
 ) -> DynamicResult:
     """Stream edge batches through warm-started (ND + DS) Louvain.
 
@@ -114,7 +98,10 @@ def louvain_dynamic(
     initial graph produces it.  Each batch is applied in capacity
     (``apply_edge_batch``), then ``louvain`` resumes from the running
     membership with the delta-screened frontier (``screening=False`` falls
-    back to pure naive-dynamic: warm start over ALL vertices).
+    back to pure naive-dynamic: warm start over ALL vertices).  With
+    ``grow_capacity`` (the default) a batch that would overflow ``e_cap``
+    re-buckets host-side into doubled capacity instead of raising — one
+    recompile per growth step, then the stream continues in capacity.
 
     Returns the final graph/membership plus per-batch stats; the acceptance
     property is that modularity tracks a cold recompute while
@@ -129,16 +116,20 @@ def louvain_dynamic(
     membership = _pad_membership(np.asarray(prev, np.int32), n_cap)
 
     stats: List[BatchUpdateStats] = []
+    # n_touched is a device reduction; materializing it per batch would force
+    # a sync inside the stream loop, so collect the lazy scalars and fill the
+    # stats in one host transfer after the stream.
+    touched_counts: List[jax.Array] = []
     n_comms = int(len(np.unique(membership[: int(graph.n_valid)])))
     for batch in batches:
         t0 = time.perf_counter()
-        graph, touched = apply_edge_batch(graph, batch)
+        graph, touched = apply_edge_batch(graph, batch, grow=grow_capacity)
         t1 = time.perf_counter()
 
         frontier = None
         if screening:
-            frontier = np.asarray(delta_frontier(
-                touched, jnp.asarray(membership), graph.n_valid))
+            frontier = delta_frontier(
+                touched, jnp.asarray(membership), graph.n_valid)
         res: LouvainResult = louvain(
             graph, config, init_membership=membership,
             init_frontier=frontier)
@@ -147,9 +138,10 @@ def louvain_dynamic(
         n = int(graph.n_valid)
         membership = _pad_membership(res.membership, n_cap)
         n_comms = res.n_communities
+        touched_counts.append(jnp.sum(touched))
         stats.append(BatchUpdateStats(
             batch_size=int(batch.b_valid),
-            n_touched=int(jnp.sum(touched)),
+            n_touched=-1,  # filled from touched_counts after the stream
             frontier_size=res.passes[0].frontier_size if res.passes else 0,
             n_vertices=n,
             n_communities=n_comms,
@@ -158,6 +150,8 @@ def louvain_dynamic(
             modularity=louvain_modularity(graph, res)
             if track_modularity else None,
         ))
+    for s, cnt in zip(stats, touched_counts):
+        s.n_touched = int(cnt)
 
     n = int(graph.n_valid)
     return DynamicResult(

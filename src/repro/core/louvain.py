@@ -74,6 +74,36 @@ class LouvainResult:
         return len(self.passes)
 
 
+def pad_membership(mem, n_cap: int) -> np.ndarray:
+    """Pad a flat (n,) membership to the (n_cap + 1,) sentinel layout shared
+    by the warm-start paths (single-device and sharded)."""
+    out = np.full(n_cap + 1, n_cap, np.int32)
+    mem = np.asarray(mem, np.int32)
+    out[: len(mem)] = mem
+    return out
+
+
+@jax.jit
+def screened_frontier(touched: jax.Array, membership: jax.Array,
+                      n_valid: jax.Array) -> jax.Array:
+    """Delta-screened seed frontier from a touched-vertex mask.
+
+    (cap + 1,) bool: touched endpoints + all members of their current
+    communities.  ``membership`` is (cap + 1,) community ids with the
+    sentinel slot = cap; works for both the single-device capacity layout
+    (cap = n_cap) and the replicated sharded layout (cap = n_pad).
+    """
+    cap = membership.shape[0] - 1
+    idx = jnp.arange(cap + 1)
+    valid = idx < n_valid
+    comm = jnp.where(valid, jnp.minimum(membership, cap), cap)
+    # Mark affected communities, then pull every member of a marked one.
+    mark = jnp.zeros((cap + 1,), bool)
+    mark = mark.at[jnp.where(touched & valid, comm, cap)].set(True)
+    mark = mark.at[cap].set(False)
+    return (touched | mark[comm]) & valid
+
+
 @jax.jit
 def singleton_init(graph: CSRGraph):
     """(comm0, sigma0, frontier0) of the cold singleton start."""
@@ -176,10 +206,12 @@ def louvain(
     frontier_size0 = None
     fr = None
     if init_frontier is not None:
-        fr = np.asarray(init_frontier, dtype=bool)
-        if len(fr) < n_cap + 1:
-            fr = np.concatenate([fr, np.zeros(n_cap + 1 - len(fr), bool)])
-        fr = jnp.asarray(fr)
+        # jnp-native: device-resident frontiers (delta screening) stay on
+        # device — no host round-trip between batch apply and warm start.
+        fr = jnp.asarray(init_frontier).astype(bool)
+        if fr.shape[0] < n_cap + 1:
+            fr = jnp.concatenate(
+                [fr, jnp.zeros(n_cap + 1 - fr.shape[0], bool)])
     if init_membership is not None:
         mem = np.asarray(init_membership, dtype=np.int32)
         if len(mem) < n_cap + 1:   # pad (n,) / (n_cap,) inputs to capacity

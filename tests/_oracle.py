@@ -1,0 +1,127 @@
+"""Pure-NumPy sequential Louvain oracle — no JAX anywhere.
+
+An independent reference implementation of classic sequential Louvain
+(Blondel et al.), used by the golden tests to pin the quality of every
+execution path in the repo (single-device sort-reduce, ELL kernel, sharded
+static, sharded dynamic).  It deliberately shares NO code with ``src/``:
+adjacency is a plain dict-of-dicts, the move phase is the textbook
+sequential sweep (vertices in id order, best community by modularity gain,
+lowest-id tie-break), and aggregation rebuilds the coarse slot list with
+``np.add.at``.
+
+Slot conventions match the repo's CSR (DESIGN.md §6): an undirected edge
+{i, j}, i != j, appears as two directed slots; a self loop as one.  So
+``modularity_np`` on the same slot list is directly comparable with
+``repro.core.modularity.modularity``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def modularity_np(src, dst, w, membership) -> float:
+    """Q over directed slot lists (undirected edges as two slots)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = np.asarray(w, dtype=np.float64)
+    membership = np.asarray(membership)
+    m = w.sum() / 2.0
+    if m <= 0:
+        return 0.0
+    internal = w[membership[src] == membership[dst]].sum()
+    k = np.zeros(len(membership), np.float64)
+    np.add.at(k, src, w)
+    sigma = np.zeros(int(membership.max()) + 1, np.float64)
+    np.add.at(sigma, membership, k)
+    return float(internal / (2 * m) - np.sum((sigma / (2 * m)) ** 2))
+
+
+def _move_phase(adj, n, m, max_sweeps=100):
+    """Sequential local-moving: sweep vertices in id order until no vertex
+    moves.  ``adj`` is {u: {v: w}}; returns the membership array."""
+    comm = np.arange(n)
+    k = np.zeros(n, np.float64)
+    for u, nbrs in adj.items():
+        k[u] = sum(nbrs.values())
+    sigma = k.copy()
+
+    for _ in range(max_sweeps):
+        moved = False
+        for u in range(n):
+            nbrs = adj.get(u, {})
+            # K_{u -> c} over neighbor communities (self loops excluded).
+            k_to = {}
+            for v, wv in nbrs.items():
+                if v == u:
+                    continue
+                c = int(comm[v])
+                k_to[c] = k_to.get(c, 0.0) + wv
+            d = int(comm[u])
+            sigma[d] -= k[u]  # remove u from its community
+            # Best community by gain: k_uc - k_u * sigma_c / (2m); staying
+            # in d scores its own gain too.  Lowest id breaks ties.
+            best_c, best_gain = d, k_to.get(d, 0.0) - k[u] * sigma[d] / (2 * m)
+            for c in sorted(k_to):
+                gain = k_to[c] - k[u] * sigma[c] / (2 * m)
+                if gain > best_gain + 1e-12:
+                    best_c, best_gain = c, gain
+            sigma[best_c] += k[u]
+            if best_c != d:
+                comm[u] = best_c
+                moved = True
+        if not moved:
+            break
+    return comm
+
+
+def _aggregate(src, dst, w, comm_dense, n_comms):
+    """Coarse directed slot list: communities become vertices, parallel
+    slots merge by weight sum (self loops collapse community-internal
+    weight, appearing once per (c, c) key as in the repo's aggregation)."""
+    cs, cd = comm_dense[src], comm_dense[dst]
+    key = cs.astype(np.int64) * n_comms + cd
+    order = np.argsort(key, kind="stable")
+    key, cs, cd, w = key[order], cs[order], cd[order], np.asarray(w)[order]
+    first = np.ones(len(key), bool)
+    first[1:] = key[1:] != key[:-1]
+    gid = np.cumsum(first) - 1
+    wsum = np.zeros(int(gid[-1]) + 1, np.float64)
+    np.add.at(wsum, gid, w)
+    return cs[first], cd[first], wsum
+
+
+def louvain_oracle(src, dst, w, n, *, max_passes=10):
+    """Full sequential Louvain; returns the flat (n,) membership.
+
+    ``src``/``dst``/``w`` are directed slot lists in the repo convention.
+    Deterministic: in-order sweeps, lowest-id tie-break, aggregation keyed
+    by dense community ids.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float64)
+    m = w.sum() / 2.0
+    flat = np.arange(n)
+    cur_src, cur_dst, cur_w, cur_n = src, dst, w, n
+    for _ in range(max_passes):
+        adj = {}
+        for s, d, x in zip(cur_src, cur_dst, cur_w):
+            adj.setdefault(int(s), {})
+            adj[int(s)][int(d)] = adj[int(s)].get(int(d), 0.0) + x
+        comm = _move_phase(adj, cur_n, m)
+        uniq, comm_dense = np.unique(comm, return_inverse=True)
+        flat = comm_dense[flat]
+        if len(uniq) == cur_n:  # no compression -> converged
+            break
+        cur_src, cur_dst, cur_w = _aggregate(
+            cur_src, cur_dst, cur_w, comm_dense, len(uniq))
+        cur_n = len(uniq)
+    return flat
+
+
+def oracle_graph_slots(graph):
+    """Live directed slot lists (np arrays) of a repro ``CSRGraph``."""
+    e = int(graph.e_valid)
+    return (np.asarray(graph.src)[:e], np.asarray(graph.indices)[:e],
+            np.asarray(graph.weights)[:e], int(graph.n_valid))

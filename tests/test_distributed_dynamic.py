@@ -1,0 +1,330 @@
+"""Sharded streaming Louvain: per-shard batch-apply invariants (property),
+quality parity with the single-device dynamic path, capacity growth, and the
+forced-8-device acceptance suite (subprocess, ``--runslow``)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import multi_device as _multi_device
+
+from repro.compat import make_mesh
+from repro.core.delta import apply_edge_batch, make_edge_batch
+from repro.core.distributed import partition_graph_host
+from repro.core.distributed_dynamic import (apply_batch_shard,
+                                            louvain_dynamic_sharded)
+from repro.core.dynamic import louvain_dynamic
+from repro.core.graph import build_csr
+from repro.core.louvain import louvain, membership_modularity
+from repro.data import sbm_graph
+
+
+def _slot_dict(src, dst, w, sent):
+    src, dst, w = np.asarray(src), np.asarray(dst), np.asarray(w)
+    live = src < sent
+    return {(int(s), int(d)): float(x)
+            for s, d, x in zip(src[live], dst[live], w[live])}
+
+
+def _apply_all_shards(spec, src_g, dst_g, w_g, batch):
+    """Drive the pure per-shard kernel shard-by-shard (no mesh needed)."""
+    e_per = spec.e_per_shard
+    outs, touched, e_news = [], [], []
+    for s in range(spec.n_shards):
+        sl = slice(s * e_per, (s + 1) * e_per)
+        o = apply_batch_shard(spec, jnp.asarray(s, jnp.int32),
+                              src_g[sl], dst_g[sl], w_g[sl],
+                              batch.src, batch.dst, batch.weight,
+                              batch.b_valid)
+        outs.append(o[:3])
+        touched.append(np.asarray(o[3]))
+        e_news.append(int(o[4]))
+    src2 = jnp.concatenate([o[0] for o in outs])
+    dst2 = jnp.concatenate([o[1] for o in outs])
+    w2 = jnp.concatenate([o[2] for o in outs])
+    return src2, dst2, w2, np.concatenate(touched), e_news
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sharded_batch_apply_matches_single_device(seed):
+    """Property: after random insert/delete/reweight streams, the union of
+    all shards' slots equals the single-device ``apply_edge_batch`` result,
+    per-shard padding/ordering/ownership invariants hold, and the gathered
+    touched-owned slices reproduce the single-device touched mask."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 16))
+    e0 = int(rng.integers(2, 3 * n))
+    src = rng.integers(0, n, e0)
+    dst = rng.integers(0, n, e0)
+    w = (rng.random(e0) + 0.1).astype(np.float32)
+    # Fixed capacities across examples -> ONE compiled kernel per shape.
+    g = build_csr(src, dst, w, n, symmetrize=True, dedup=True,
+                  n_cap=16, e_cap=192)
+    n_shards = 4
+    src_g, dst_g, w_g, spec = partition_graph_host(
+        g, n_shards, n_target=g.n_cap, e_per_shard=64)
+    assert spec.n_pad == g.n_cap  # sentinel spaces coincide -> comparable
+    sent = spec.sentinel
+
+    for _ in range(3):
+        b = int(rng.integers(1, 8))
+        us = rng.integers(0, n, b)
+        vs = rng.integers(0, n, b)
+        ws = np.where(rng.random(b) < 0.3, 0.0,
+                      (rng.random(b) * 2 + 0.1)).astype(np.float32)
+        batch = make_edge_batch(us, vs, ws, g.n_cap, b_cap=8)
+
+        g, touched_ref = apply_edge_batch(g, batch)
+        src_g, dst_g, w_g, touched_sh, e_news = _apply_all_shards(
+            spec, src_g, dst_g, w_g, batch)
+
+        # Union of shard slots == single-device CSR slots (exact).
+        ref = _slot_dict(g.src, g.indices, g.weights, g.n_cap)
+        sh = _slot_dict(src_g, dst_g, w_g, sent)
+        assert sh == pytest.approx(ref)
+
+        # Per-shard invariants: live prefix, sentinel padding, ownership,
+        # strict (src, dst) order, e_new == live count.
+        for s in range(n_shards):
+            sl = slice(s * spec.e_per_shard, (s + 1) * spec.e_per_shard)
+            ss = np.asarray(src_g[sl])
+            sd = np.asarray(dst_g[sl])
+            sw = np.asarray(w_g[sl])
+            live = ss < sent
+            cnt = int(live.sum())
+            assert e_news[s] == cnt
+            assert np.all(ss[:cnt] < sent) and np.all(ss[cnt:] == sent)
+            assert np.all(sd[cnt:] == sent) and np.all(sw[cnt:] == 0)
+            assert np.all(ss[:cnt] // spec.v_per_shard == s)
+            order = ss[:cnt].astype(np.int64) * (sent + 1) + sd[:cnt]
+            assert np.all(np.diff(order) > 0)
+
+        # K_i / 2m conservation across the partition.
+        k_sh = np.zeros(n)
+        for (u, _), x in sh.items():
+            k_sh[u] += x
+        np.testing.assert_allclose(
+            k_sh, np.asarray(g.vertex_weights())[:n], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(jnp.sum(w_g)),
+                                   2 * float(g.total_weight()), rtol=1e-5)
+
+        # Touched: gathered owned slices == single-device mask.
+        np.testing.assert_array_equal(
+            touched_sh[: g.n_cap], np.asarray(touched_ref)[: g.n_cap])
+
+
+def test_sharded_batch_apply_drops_out_of_capacity_endpoints():
+    """n_pad > n_cap when n_cap % n_shards != 0; entries touching the
+    phantom ids in [n_cap, n_pad) must be dropped exactly like the
+    single-device apply drops them (n_limit plumbing)."""
+    g = build_csr(np.array([0, 1]), np.array([1, 0]),
+                  np.ones(2, np.float32), 10, n_cap=10, e_cap=32)
+    src_g, dst_g, w_g, spec = partition_graph_host(
+        g, 4, n_target=g.n_cap, e_per_shard=16)
+    assert spec.n_pad > g.n_cap  # 4 * ceil(10/4) = 12
+    batch = make_edge_batch([10, 2], [3, 3], [1.0, 1.0], g.n_cap, b_cap=4)
+
+    g2, touched_ref = apply_edge_batch(g, batch)
+    outs = []
+    for s in range(spec.n_shards):
+        sl = slice(s * spec.e_per_shard, (s + 1) * spec.e_per_shard)
+        outs.append(apply_batch_shard(
+            spec, jnp.asarray(s, jnp.int32), src_g[sl], dst_g[sl], w_g[sl],
+            batch.src, batch.dst, batch.weight, batch.b_valid,
+            n_limit=g.n_cap))
+    sh = {}
+    for o in outs:
+        sh.update(_slot_dict(o[0], o[1], o[2], spec.sentinel))
+    ref = _slot_dict(g2.src, g2.indices, g2.weights, g2.n_cap)
+    assert sh == pytest.approx(ref)         # the (10, 3) entry was dropped
+    assert (2, 3) in sh and not any(u >= g.n_cap or v >= g.n_cap
+                                    for u, v in sh)
+
+
+def _holdout_stream(n_comms, size, n_hold, n_batches, seed):
+    full, _ = sbm_graph(n_communities=n_comms, size=size, p_in=0.4,
+                        p_out=0.005, seed=seed)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    w = np.asarray(full.weights)[:e]
+    und = src < dst
+    us, ud, uw = src[und], dst[und], w[und]
+    rng = np.random.default_rng(seed)
+    hold = rng.choice(len(us), n_hold, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.concatenate([uw[keep], uw[keep]]),
+                     int(full.n_valid), e_cap=e + 8)
+    batches = [make_edge_batch(us[hold[i::n_batches]], ud[hold[i::n_batches]],
+                               uw[hold[i::n_batches]], init.n_cap, b_cap=8)
+               for i in range(n_batches)]
+    return full, init, batches
+
+
+def test_sharded_dynamic_matches_single_device_dynamic():
+    """Same stream through ``louvain_dynamic`` and the sharded driver
+    (1-shard mesh, tier-1): matching modularity and final edge sets."""
+    full, init, batches = _holdout_stream(16, 16, 60, 10, seed=7)
+    prev = louvain(init).membership
+    mesh = make_mesh((1,), ("shard",))
+
+    dyn_sh = louvain_dynamic_sharded(init, mesh, ("shard",), batches,
+                                     prev=prev)
+    dyn_sd = louvain_dynamic(init, batches, prev=prev)
+
+    q_sh = membership_modularity(dyn_sd.graph, dyn_sh.membership)
+    q_sd = membership_modularity(dyn_sd.graph, dyn_sd.membership)
+    assert q_sh >= q_sd - 0.02, (q_sh, q_sd)
+    assert dyn_sh.n_regrows == 0
+    # Both drivers applied the same stream: final graph == the full SBM.
+    assert all(s.frontier_size < s.n_vertices for s in dyn_sh.batch_stats)
+    assert all(s.n_touched == t.n_touched
+               for s, t in zip(dyn_sh.batch_stats, dyn_sd.batch_stats))
+
+
+def test_sharded_capacity_growth_rebuckets_and_matches():
+    """A stream engineered to overflow e_per_shard re-buckets into doubled
+    capacity (results unchanged) instead of raising; grow_capacity=False
+    raises."""
+    full, init, batches = _holdout_stream(16, 16, 60, 10, seed=7)
+    prev = louvain(init).membership
+    mesh = make_mesh((1,), ("shard",))
+
+    ample = louvain_dynamic_sharded(init, mesh, ("shard",), batches,
+                                    prev=prev)
+    tight = louvain_dynamic_sharded(init, mesh, ("shard",), batches,
+                                    prev=prev, e_per_shard=1)
+    assert tight.n_regrows >= 1
+    assert tight.spec.e_per_shard > 1  # capacity actually doubled up
+    q_tight = membership_modularity(full, tight.membership)
+    q_ample = membership_modularity(full, ample.membership)
+    # Grown arrays have different padding shapes, so reduction order (and
+    # with it ULP-level dQ ties) may differ — quality equivalence, not
+    # bitwise equality, is the contract.
+    assert abs(q_tight - q_ample) < 0.02, (q_tight, q_ample)
+
+    with pytest.raises(ValueError, match="overflow"):
+        louvain_dynamic_sharded(init, mesh, ("shard",), batches, prev=prev,
+                                e_per_shard=1, grow_capacity=False)
+
+
+# ---------------------------------------------------------------------------
+# Forced-8-device acceptance suite (subprocess so XLA_FLAGS does not leak).
+# ---------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import sys
+import numpy as np
+
+sys.path.insert(0, "tests")   # subprocess cwd is the repo root
+from _oracle import louvain_oracle, modularity_np, oracle_graph_slots
+
+from repro.compat import make_mesh
+from repro.core.delta import make_edge_batch
+from repro.core.distributed import distributed_louvain
+from repro.core.distributed_dynamic import louvain_dynamic_sharded
+from repro.core.graph import build_csr
+from repro.core.louvain import membership_modularity
+from repro.data import sbm_graph
+
+full, _ = sbm_graph(n_communities=64, size=16, p_in=0.4, p_out=0.002, seed=11)
+e = int(full.e_valid)
+src = np.asarray(full.src)[:e]
+dst = np.asarray(full.indices)[:e]
+w = np.asarray(full.weights)[:e]
+und = src < dst
+us, ud, uw = src[und], dst[und], w[und]
+rng = np.random.default_rng(0)
+hold = rng.choice(len(us), 100, replace=False)
+keep = np.ones(len(us), bool)
+keep[hold] = False
+init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                 np.concatenate([ud[keep], us[keep]]),
+                 np.concatenate([uw[keep], uw[keep]]),
+                 int(full.n_valid), e_cap=e + 8)
+batches = [make_edge_batch(us[hold[i::20]], ud[hold[i::20]],
+                           uw[hold[i::20]], init.n_cap, b_cap=8)
+           for i in range(20)]
+
+mesh = make_mesh((2, 4), ("data", "model"))
+axes = ("data", "model")
+# Cold static runs need per-shard headroom: aggregation concentrates this
+# SBM's coarse edges onto one shard (community skew).  e covers any skew.
+prev, _, _ = distributed_louvain(init, mesh, axes, e_per_shard=e)
+
+out = {}
+dyn = louvain_dynamic_sharded(init, mesh, axes, batches, prev=prev)
+cold_mem, _, _ = distributed_louvain(full, mesh, axes, e_per_shard=e)
+q_dyn = membership_modularity(full, dyn.membership)
+q_cold = membership_modularity(full, cold_mem)
+fr = [s.frontier_size / max(s.n_vertices, 1) for s in dyn.batch_stats]
+out["stream"] = {"q_dyn": q_dyn, "q_cold": q_cold,
+                 "frontier_max": max(fr), "n_batches": len(dyn.batch_stats),
+                 "regrows": dyn.n_regrows}
+
+fs, fd, fw, fn = oracle_graph_slots(full)
+out["oracle"] = {"q": modularity_np(fs, fd, fw,
+                                    louvain_oracle(fs, fd, fw, fn))}
+
+tight = louvain_dynamic_sharded(init, mesh, axes, batches, prev=prev,
+                                e_per_shard=1)
+out["growth"] = {"regrows": tight.n_regrows,
+                 "q": membership_modularity(full, tight.membership),
+                 "e_per": tight.spec.e_per_shard}
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_dyn_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@_multi_device
+def test_sharded_dynamic_acceptance_8dev(dist_dyn_results):
+    """Acceptance: within 1% modularity of a cold sharded recompute while
+    re-processing a minority of vertices per batch."""
+    r = dist_dyn_results["stream"]
+    assert r["n_batches"] == 20
+    assert r["q_dyn"] >= r["q_cold"] - 0.01 * abs(r["q_cold"]), r
+    assert r["frontier_max"] < 0.5, r
+
+
+@pytest.mark.slow
+@_multi_device
+def test_sharded_dynamic_oracle_level_8dev(dist_dyn_results):
+    r = dist_dyn_results["stream"]
+    assert r["q_dyn"] >= dist_dyn_results["oracle"]["q"] - 0.02, r
+
+
+@pytest.mark.slow
+@_multi_device
+def test_sharded_capacity_growth_8dev(dist_dyn_results):
+    r = dist_dyn_results["growth"]
+    assert r["regrows"] >= 1
+    assert r["q"] >= dist_dyn_results["stream"]["q_dyn"] - 0.02, r

@@ -138,6 +138,97 @@ def test_apply_edge_batch_overflow_raises():
         apply_edge_batch(g, big)
 
 
+def test_apply_edge_batch_grow_rebuckets():
+    """grow=True: an overflowing batch re-buckets into doubled capacity and
+    produces the same adjacency a big-enough buffer would have."""
+    g = build_csr(np.array([0, 1]), np.array([1, 0]),
+                  np.ones(2, np.float32), 4, e_cap=4)
+    big = make_edge_batch([0, 1, 2], [2, 3, 3], [1.0, 1.0, 1.0], g.n_cap)
+    g2, touched = apply_edge_batch(g, big, grow=True)
+    assert g2.e_cap >= 8  # doubled
+    ref = build_csr(np.array([0, 1]), np.array([1, 0]),
+                    np.ones(2, np.float32), 4, e_cap=16)
+    ref2, touched_ref = apply_edge_batch(ref, big)
+    assert _ref_graph(g2) == pytest.approx(_ref_graph(ref2))
+    np.testing.assert_array_equal(np.asarray(touched), np.asarray(touched_ref))
+    _assert_csr_well_formed(g2)
+
+
+def test_dynamic_stream_grows_capacity():
+    """A stream engineered to overflow e_cap completes via re-bucketing
+    (grow_capacity default) with the same result as an ample buffer, and
+    raises with grow_capacity=False."""
+    full, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01,
+                        seed=5)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    und = src < dst
+    us, ud = src[und], dst[und]
+    rng = np.random.default_rng(1)
+    hold = rng.choice(len(us), 40, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    n = int(full.n_valid)
+
+    def make_init(e_cap):
+        return build_csr(np.concatenate([us[keep], ud[keep]]),
+                         np.concatenate([ud[keep], us[keep]]),
+                         np.ones(2 * int(keep.sum()), np.float32), n,
+                         e_cap=e_cap)
+
+    tight = make_init(2 * int(keep.sum()) + 8)   # room for ~4 more edges
+    ample = make_init(e + 8)
+    batches = [make_edge_batch(us[hold[i::8]], ud[hold[i::8]],
+                               np.ones(len(us[hold[i::8]]), np.float32),
+                               n, b_cap=8) for i in range(8)]
+    prev = louvain(ample).membership  # same initial graph, any capacity
+
+    dyn_t = louvain_dynamic(tight, batches, prev=prev)
+    dyn_a = louvain_dynamic(ample, batches, prev=prev)
+    assert dyn_t.graph.e_cap > tight.e_cap          # grew
+    assert int(dyn_t.graph.e_valid) == e            # stream fully applied
+    q_t = _q(dyn_t.graph, dyn_t.membership)
+    q_a = _q(dyn_a.graph, dyn_a.membership)
+    assert abs(q_t - q_a) < 0.02, (q_t, q_a)
+
+    with pytest.raises(ValueError, match="overflow"):
+        louvain_dynamic(tight, batches, prev=prev, grow_capacity=False)
+
+
+def test_dynamic_stats_n_touched_matches_eager_recount():
+    """Regression (timing-free): n_touched is collected lazily after the
+    stream; it must equal an eager per-batch recount of the same stream."""
+    full, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01,
+                        seed=9)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    und = src < dst
+    us, ud = src[und], dst[und]
+    rng = np.random.default_rng(2)
+    hold = rng.choice(len(us), 24, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.ones(2 * int(keep.sum()), np.float32),
+                     int(full.n_valid), e_cap=e + 8)
+    batches = [make_edge_batch(us[hold[i::4]], ud[hold[i::4]],
+                               np.ones(len(us[hold[i::4]]), np.float32),
+                               init.n_cap, b_cap=8) for i in range(4)]
+    prev = louvain(init).membership
+
+    dyn = louvain_dynamic(init, batches, prev=prev)
+    g = init
+    expected = []
+    for b in batches:
+        g, touched = apply_edge_batch(g, b)
+        expected.append(int(jnp.sum(touched)))
+    assert [s.n_touched for s in dyn.batch_stats] == expected
+    assert all(s.n_touched >= 0 for s in dyn.batch_stats)
+
+
 def test_delta_frontier_screens_to_affected_communities():
     # comm: {0,1} -> 0, {2,3} -> 2, {4,5} -> 4 ; touching vertex 0 pulls in
     # community 0's members but nobody else.
