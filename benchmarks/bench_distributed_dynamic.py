@@ -116,15 +116,24 @@ def run(small: bool = True, repeats: int = 2,
     emit_csv(rows, ["batch_size", "n_batches", "updates_per_s_dynamic",
                     "updates_per_s_recompute", "speedup",
                     "frontier_frac_mean", "q_dynamic", "q_recompute"])
+    return rows
 
 
 if __name__ == "__main__":
     import argparse
+    import time
 
     import jax
+
+    from benchmarks.common import emit_json
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     print(f"devices: {jax.device_count()}")
-    run(small=not args.full, repeats=3 if args.full else 2)
+    t0 = time.perf_counter()
+    rows = run(small=not args.full, repeats=3 if args.full else 2)
+    # This module runs as its own process (forced device count), so it
+    # emits its BENCH json here rather than via benchmarks/run.py.
+    emit_json("distdyn", rows, seconds=time.perf_counter() - t0,
+              small=not args.full)

@@ -10,6 +10,11 @@ and report edge-updates/sec, speedup, the mean delta-screened frontier
 fraction, and the modularity gap vs the cold recompute on the final graph.
 This is the streaming-serving scenario of the ROADMAP: small deltas between
 queries, membership always fresh.
+
+The ``pallas`` column re-runs the dynamic stream with the Pallas batch-apply
+kernel (``apply_backend="pallas"``, interpret mode on CPU) and asserts its
+final membership is BIT-IDENTICAL to the sort-reduce apply — the kernel
+acceptance gate, recorded per row as ``pallas_match``.
 """
 
 from __future__ import annotations
@@ -66,6 +71,18 @@ def run(small: bool = True, repeats: int = 2,
                              repeats=repeats)
         q_dyn = _q(dyn.graph, dyn.membership)
 
+        # Pallas batch-apply: must reproduce the stream bit-for-bit.  A
+        # divergence is recorded (pallas_match=False survives into the
+        # BENCH json) rather than aborting the suite — the hard gate lives
+        # in tests/test_batch_apply_kernel.py / test_engine_equiv.py.
+        t_pal, dyn_pal = time_fn(louvain_dynamic, init, batches, prev=prev,
+                                 apply_backend="pallas", repeats=repeats)
+        pallas_match = bool(np.array_equal(dyn.membership,
+                                           dyn_pal.membership))
+        if not pallas_match:
+            print(f"WARNING: pallas batch-apply diverged from sort-reduce "
+                  f"at batch_size={bs}")
+
         # Full recompute baseline: same stream, cold louvain per batch.
         def recompute():
             from repro.core.delta import apply_edge_batch
@@ -84,14 +101,18 @@ def run(small: bool = True, repeats: int = 2,
             "batch_size": bs, "n_batches": n_batches,
             "updates_per_s_dynamic": round(used / t_dyn, 1),
             "updates_per_s_recompute": round(used / t_cold, 1),
+            "updates_per_s_pallas_apply": round(used / t_pal, 1),
             "speedup": round(t_cold / t_dyn, 2),
+            "pallas_match": pallas_match,
             "frontier_frac_mean": round(float(np.mean(fr)), 4),
             "q_dynamic": round(q_dyn, 4),
             "q_recompute": round(q_cold, 4),
         })
     emit_csv(rows, ["batch_size", "n_batches", "updates_per_s_dynamic",
-                    "updates_per_s_recompute", "speedup",
+                    "updates_per_s_recompute", "updates_per_s_pallas_apply",
+                    "speedup", "pallas_match",
                     "frontier_frac_mean", "q_dynamic", "q_recompute"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
 """Shared benchmark infrastructure: the graph suite (the paper's dataset
 *families* at laptop scale — SuiteSparse itself is not available offline),
-timing helpers, and CSV emission."""
+timing helpers, and CSV/JSON emission.
+
+Every benchmark section also lands as a machine-readable ``BENCH_<name>.json``
+(rows + wall time + environment), so the perf trajectory is diffable across
+PRs — see ``benchmarks/run.py``.  ``BENCH_OUT_DIR`` overrides the output
+directory (default: the current working directory)."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -55,6 +62,35 @@ def emit_csv(rows: List[dict], header: List[str]) -> None:
     print(",".join(header))
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
+
+
+def emit_json(name: str, rows: Optional[List[dict]],
+              seconds: Optional[float] = None, **extra) -> str:
+    """Write ``BENCH_<name>.json`` — the machine-readable perf artifact.
+
+    ``rows`` is whatever the section measured (each bench keeps its own
+    schema: wall times, edges/s / updates/s, modularity where applicable);
+    ``seconds`` the section's wall time; ``extra`` free-form metadata.
+    Returns the path written.
+    """
+    import jax
+
+    payload = {
+        "bench": name,
+        "seconds": None if seconds is None else round(float(seconds), 3),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": rows if rows is not None else [],
+    }
+    payload.update(extra)
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, default=str)
+        fh.write("\n")
+    print(f"[bench] wrote {path}")
+    return path
 
 
 def geomean(xs) -> float:

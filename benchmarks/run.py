@@ -10,9 +10,15 @@ Sections:
     fig7  runtime per edge
     fig8  strong scaling (device-count structural scaling)
     dynamic  streaming edge-batch updates/sec vs full recompute
+             (+ Pallas batch-apply bit-for-bit gate)
+    multistream  batched multi-stream serving vs sequential dynamic
     distdyn  sharded streaming updates/sec vs cold sharded recompute
              (forced-8-device subprocess)
     roofline  per-(arch x shape) table from the dry-run artifacts (if present)
+
+Every section also writes a machine-readable ``BENCH_<name>.json`` (rows +
+wall seconds + backend), so the perf trajectory is diffable across PRs;
+``BENCH_OUT_DIR`` redirects the artifacts.
 """
 
 from __future__ import annotations
@@ -30,7 +36,7 @@ def main() -> None:
                     help="paper-scale graphs + 3 repeats (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig5,fig6,fig7,fig8,"
-                         "dynamic,distdyn,roofline")
+                         "dynamic,multistream,distdyn,roofline")
     args = ap.parse_args()
     small = not args.full
     repeats = 3 if args.full else 2
@@ -39,44 +45,60 @@ def main() -> None:
     def want(name: str) -> bool:
         return only is None or name in only
 
+    from benchmarks.common import emit_json
+
     t0 = time.perf_counter()
     failed = False
+
+    def section(name: str, title: str, fn) -> None:
+        """Run one in-process section and persist its BENCH json."""
+        print(f"== {name}: {title} ==")
+        t = time.perf_counter()
+        rows = fn()
+        emit_json(name, rows, seconds=time.perf_counter() - t, small=small)
+        print()
+
     if want("fig3"):
-        print("== fig3: optimization ablations "
-              "(relative to the paper's defaults) ==")
         from benchmarks import bench_fig3_ablations
-        bench_fig3_ablations.run(small=small, repeats=repeats)
-        print()
+        section("fig3", "optimization ablations "
+                "(relative to the paper's defaults)",
+                lambda: bench_fig3_ablations.run(small=small,
+                                                 repeats=repeats))
     if want("fig5"):
-        print("== fig5: runtime / speedup / modularity vs networkx ==")
         from benchmarks import bench_fig5_runtime
-        bench_fig5_runtime.run(small=small, repeats=repeats)
-        print()
+        section("fig5", "runtime / speedup / modularity vs networkx",
+                lambda: bench_fig5_runtime.run(small=small, repeats=repeats))
     if want("fig6"):
-        print("== fig6: phase and pass split ==")
         from benchmarks import bench_fig6_phase_split
-        bench_fig6_phase_split.run(small=small)
-        print()
+        section("fig6", "phase and pass split",
+                lambda: bench_fig6_phase_split.run(small=small))
     if want("fig7"):
-        print("== fig7: runtime per edge ==")
         from benchmarks import bench_fig7_edge_factor
-        bench_fig7_edge_factor.run(small=small, repeats=repeats)
-        print()
+        section("fig7", "runtime per edge",
+                lambda: bench_fig7_edge_factor.run(small=small,
+                                                   repeats=repeats))
     if want("fig8"):
-        print("== fig8: strong scaling (structural, 1..8 host devices) ==")
         from benchmarks import bench_fig8_scaling
-        bench_fig8_scaling.run(max_devices=8)
-        print()
+        section("fig8", "strong scaling (structural, 1..8 host devices)",
+                lambda: bench_fig8_scaling.run(max_devices=8))
     if want("dynamic"):
-        print("== dynamic: streaming updates/sec vs full recompute ==")
         from benchmarks import bench_dynamic
-        bench_dynamic.run(small=small, repeats=repeats)
-        print()
+        section("dynamic", "streaming updates/sec vs full recompute "
+                "(+ Pallas batch-apply)",
+                lambda: bench_dynamic.run(small=small, repeats=repeats))
+    if want("multistream"):
+        from benchmarks import bench_multistream
+        section("multistream",
+                "batched multi-stream serving vs sequential dynamic",
+                # best-of-5 minimum: the head-to-head is tight enough that
+                # 2-vCPU runner noise can flip a low-repeat row.
+                lambda: bench_multistream.run(small=small,
+                                              repeats=max(repeats, 5)))
     if want("distdyn"):
         print("== distdyn: sharded streaming vs cold sharded recompute "
               "(8 forced host devices, subprocess) ==")
         # The benchmark must force the device count before JAX initializes,
-        # so it runs as its own process.
+        # so it runs as its own process (it emits BENCH_distdyn.json itself).
         env = dict(os.environ)
         env["PYTHONPATH"] = "src" + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -92,7 +114,9 @@ def main() -> None:
         print("== roofline: dry-run artifacts (single-pod) ==")
         if os.path.isdir("results/dryrun"):
             from benchmarks import roofline
-            roofline.run()
+            t = time.perf_counter()
+            rows = roofline.run()
+            emit_json("roofline", rows, seconds=time.perf_counter() - t)
         else:
             print("(results/dryrun not found — run "
                   "`python -m repro.launch.dryrun --all` first)")

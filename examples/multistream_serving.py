@@ -1,0 +1,66 @@
+"""Batched multi-stream serving: one jitted program, a fleet of tenants.
+
+Four independent SBM graphs each stream small edge-batch deltas; the batched
+driver serves all four through ONE compiled program per step (vmapped engine
+rounds), then the same streams are re-served sequentially to show the
+fleet-level speedup and per-stream equality.
+
+    PYTHONPATH=src python examples/multistream_serving.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.dynamic import louvain_dynamic
+from repro.core.louvain import louvain, membership_modularity
+from repro.core.multistream import louvain_dynamic_batched
+from repro.data import sbm_holdout_stream
+
+
+def make_stream(seed, n_cap=128, e_cap=4600, n_hold=32, n_steps=8, b_cap=4):
+    """One tenant: an SBM graph with held-out edges streamed back in."""
+    init, batches, _ = sbm_holdout_stream(
+        seed, n_cap=n_cap, e_cap=e_cap, n_hold=n_hold, n_steps=n_steps,
+        b_cap=b_cap)
+    return init, batches
+
+
+def main():
+    S = 4
+    cases = [make_stream(100 + s) for s in range(S)]
+    graphs = [c[0] for c in cases]
+    streams = [c[1] for c in cases]
+
+    print(f"fleet: {S} tenants, {len(streams[0])} serving steps each")
+    prevs = [louvain(g).membership for g in graphs]
+
+    # Warm both paths once (compile), then time.  Neither timed call
+    # tracks modularity — Q is recomputed from the results afterwards, so
+    # the head-to-head is symmetric.
+    louvain_dynamic_batched(graphs, streams, prevs=prevs)
+    for s in range(S):
+        louvain_dynamic(graphs[s], streams[s], prev=prevs[s])
+
+    t0 = time.perf_counter()
+    batched = louvain_dynamic_batched(graphs, streams, prevs=prevs)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    solo = [louvain_dynamic(graphs[s], streams[s], prev=prevs[s])
+            for s in range(S)]
+    t_seq = time.perf_counter() - t0
+
+    print(f"\nbatched   : {t_batched:.3f}s for the fleet")
+    print(f"sequential: {t_seq:.3f}s ({t_seq / t_batched:.2f}x slower)")
+    print("\nper-stream results (batched == sequential, bit-for-bit):")
+    for s in range(S):
+        same = np.array_equal(batched.stream_membership(s),
+                              solo[s].membership)
+        q = membership_modularity(solo[s].graph, solo[s].membership)
+        print(f"  tenant {s}: {batched.n_communities[s]:2d} communities, "
+              f"Q = {q:.4f}, equal = {same}")
+
+
+if __name__ == "__main__":
+    main()

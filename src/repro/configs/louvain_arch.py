@@ -29,6 +29,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.distributed import (ShardedGraphSpec, _best_moves_shard,
                                     _round_body, _shard_index)
+from repro.core.engine import round_gate
 
 F32, I32 = jnp.float32, jnp.int32
 
@@ -70,7 +71,7 @@ def _move_round_delta(axes, spec: ShardedGraphSpec, move_cap_frac: int,
     gidx = v0 + jnp.arange(v_per)
 
     # round-0 gate + singleton guard from the REPLICATED sizes input.
-    gate = jnp.abs((gidx.astype(I32) * jnp.int32(-1640531535)) >> 13) % 2 == 0
+    gate = round_gate(gidx, jnp.int32(0), 2)
     own_single = comm_sizes[own_comm_l] == 1
     tgt_single = comm_sizes[jnp.minimum(best_c, sent)] == 1
     swap_blocked = own_single & tgt_single & (best_c > own_comm_l)

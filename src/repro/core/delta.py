@@ -73,7 +73,7 @@ def make_edge_batch(src, dst, weight, n_cap: int,
 
 
 def sort_reduce_apply_slots(all_src, all_dst, all_w, rank, is_batch,
-                            sent: int, out_cap: int):
+                            sent: int, out_cap: int, backend: str = "xla"):
     """The shared batch-apply sort-reduce over a unified directed-slot list.
 
     ``all_*`` concatenate the existing slots (rank 0) and the batch's directed
@@ -88,6 +88,13 @@ def sort_reduce_apply_slots(all_src, all_dst, all_w, rank, is_batch,
     weight actually changed (``sent`` elsewhere) — callers scatter these into
     their own touched-vertex structures.  Used by both the single-device CSR
     apply below and the per-shard apply in ``repro.core.distributed_dynamic``.
+
+    ``backend`` selects the post-sort group-resolve: ``"xla"`` (segment_*
+    reductions, the reference) or ``"pallas"`` (the fused carry-chained scan
+    kernel in ``repro.kernels.batch_apply`` — interpret mode off-TPU).  Both
+    produce bit-identical graphs and touched sets; only the internal
+    ``chg_*`` encoding differs (all group slots vs one record per group),
+    which scatters to the same mask.
     """
     total = all_src.shape[0]
     dead = (all_src >= sent) | (all_dst >= sent)
@@ -96,8 +103,26 @@ def sort_reduce_apply_slots(all_src, all_dst, all_w, rank, is_batch,
     order = jnp.lexsort((rank, k_dst, k_src))
     s_src, s_dst = k_src[order], k_dst[order]
     s_w, s_batch = all_w[order], is_batch[order]
-    s_sent = s_src == sent
 
+    if backend == "pallas":
+        from repro.kernels.batch_apply import resolve_groups_pallas
+        keep, pos, f_src, f_dst, f_w, chg = resolve_groups_pallas(
+            s_src, s_dst, s_w, s_batch, sent=sent)
+        e_new = jnp.sum(keep.astype(jnp.int32))
+        pos = jnp.where(keep & (pos < out_cap), pos, out_cap)
+        out_src = jnp.full((out_cap + 1,), sent, jnp.int32).at[pos].set(
+            jnp.where(keep, f_src, sent))[:out_cap]
+        out_dst = jnp.full((out_cap + 1,), sent, jnp.int32).at[pos].set(
+            jnp.where(keep, f_dst, sent))[:out_cap]
+        out_w = jnp.zeros((out_cap + 1,), jnp.float32).at[pos].set(
+            jnp.where(keep, f_w, 0.0))[:out_cap]
+        chg_src = jnp.where(chg, f_src, sent)
+        chg_dst = jnp.where(chg, f_dst, sent)
+        return out_src, out_dst, out_w, e_new, chg_src, chg_dst
+    if backend != "xla":
+        raise ValueError(f"unknown batch-apply backend: {backend!r}")
+
+    s_sent = s_src == sent
     nxt_same = (s_src[:-1] == s_src[1:]) & (s_dst[:-1] == s_dst[1:])
     is_last = jnp.concatenate([~nxt_same, jnp.ones((1,), bool)])
     is_first = jnp.concatenate([jnp.ones((1,), bool), ~nxt_same])
@@ -131,8 +156,9 @@ def sort_reduce_apply_slots(all_src, all_dst, all_w, rank, is_batch,
     return out_src, out_dst, out_w, e_new, chg_src, chg_dst
 
 
-@jax.jit
-def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch):
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch,
+                      backend: str = "xla"):
     """Jit core: returns (graph', touched_mask, e_new_uncapped)."""
     n_cap, e_cap = graph.n_cap, graph.e_cap
     b_cap = batch.b_cap
@@ -170,7 +196,7 @@ def _apply_edge_batch(graph: CSRGraph, batch: EdgeBatch):
     dead = ~(slot_live & (all_src < n_cap) & (all_dst < n_cap))
     out_src, out_dst, out_w, e_new, chg_src, chg_dst = sort_reduce_apply_slots(
         jnp.where(dead, n_cap, all_src), jnp.where(dead, n_cap, all_dst),
-        all_w, rank, is_batch, n_cap, e_cap)
+        all_w, rank, is_batch, n_cap, e_cap, backend)
 
     live_rows = out_src < n_cap
     counts = jax.ops.segment_sum(
@@ -225,7 +251,8 @@ def grow_graph_capacity(graph: CSRGraph, e_cap_new: int) -> CSRGraph:
 
 
 def apply_edge_batch(graph: CSRGraph, batch: EdgeBatch, *,
-                     grow: bool = False) -> Tuple[CSRGraph, jax.Array]:
+                     grow: bool = False,
+                     backend: str = "xla") -> Tuple[CSRGraph, jax.Array]:
     """Apply one edge batch; returns (graph', touched_vertex_mask).
 
     Raises if the resulting edge count exceeds the preallocated ``e_cap``
@@ -233,9 +260,11 @@ def apply_edge_batch(graph: CSRGraph, batch: EdgeBatch, *,
     front — growing buffers would retrigger every downstream jit).  With
     ``grow=True`` an overflowing batch instead re-buckets host-side into
     doubled capacity (at least the required count) and re-applies — the
-    unbounded-stream policy used by ``louvain_dynamic``.
+    unbounded-stream policy used by ``louvain_dynamic``.  ``backend``
+    selects the group-resolve implementation (see
+    ``sort_reduce_apply_slots``).
     """
-    out, touched, e_new = _apply_edge_batch(graph, batch)
+    out, touched, e_new = _apply_edge_batch(graph, batch, backend=backend)
     if int(e_new) > graph.e_cap:
         if not grow:
             raise ValueError(
@@ -243,5 +272,5 @@ def apply_edge_batch(graph: CSRGraph, batch: EdgeBatch, *,
                 f"slots > e_cap={graph.e_cap}")
         grown = grow_graph_capacity(
             graph, max(2 * graph.e_cap, int(e_new)))
-        out, touched, e_new = _apply_edge_batch(grown, batch)
+        out, touched, e_new = _apply_edge_batch(grown, batch, backend=backend)
     return out, touched

@@ -33,6 +33,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro import compat
 
+from repro.core.engine import EngineConfig, MoveEngine, MoveState
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
 
@@ -187,55 +188,81 @@ def _best_moves_shard(axes, spec, src_l, dst_l, w_l, comm, sigma, k,
     return best_c, best_dq, v0
 
 
+class ShardedScanner:
+    """Engine backend: per-shard sort-reduce scan + collective topology.
+
+    Lives inside ``shard_map``: local layout is the shard's ``v_per_shard``
+    owned vertices; community state (C, Sigma) is replicated ``(n_pad + 1,)``
+    and updated with one ``all_gather`` (owned C slices + moved flags) and
+    one ``psum`` (Sigma deltas) per round — the Vite-style ghost exchange,
+    expressed as XLA collectives.  See ``repro.core.engine.MoveEngine`` for
+    the protocol.
+    """
+
+    def __init__(self, axes, spec: ShardedGraphSpec, src_l, dst_l, w_l,
+                 k, m):
+        v_per, sent = spec.v_per_shard, spec.sentinel
+        self.axes, self.spec = axes, spec
+        self.src_l, self.dst_l, self.w_l = src_l, dst_l, w_l
+        self.k, self.m = k, m
+        self.sentinel = sent
+        self.v0 = _shard_index(axes) * v_per
+        self.local_ids = self.v0 + jnp.arange(v_per)
+        self.k_local = jax.lax.dynamic_slice_in_dim(k, self.v0, v_per)
+        self.src_loc = jnp.where(src_l >= sent, v_per, src_l - self.v0)
+        self.move_valid = None           # invalid slots carry comm == sent
+        self.frontier_valid = self.local_ids < spec.n_pad
+
+    def scan(self, comm, sigma, frontier):
+        best_c, best_dq, _ = _best_moves_shard(
+            self.axes, self.spec, self.src_l, self.dst_l, self.w_l,
+            comm, sigma, self.k, frontier, self.m)
+        return best_c, best_dq
+
+    def comm_local(self, comm):
+        return jax.lax.dynamic_slice_in_dim(comm, self.v0,
+                                            self.spec.v_per_shard)
+
+    def count_ones(self, comm_l):
+        return jnp.where(comm_l < self.sentinel, 1, 0)  # ghosts excluded
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axes)
+
+    def combine_sigma(self, sigma, add, sub):
+        return sigma + self.psum(add - sub)
+
+    def gather_comm(self, comm_l):
+        full = jax.lax.all_gather(comm_l, self.axes, tiled=True)
+        return jnp.concatenate(
+            [full, jnp.asarray([self.sentinel], jnp.int32)])
+
+    def gather_mask(self, mask_l):
+        full = jax.lax.all_gather(mask_l, self.axes, tiled=True)
+        return jnp.concatenate([full, jnp.zeros((1,), bool)])
+
+    def mark_neighbors(self, moved):
+        v_per = self.spec.v_per_shard
+        marked = jax.ops.segment_max(
+            moved[self.dst_l].astype(jnp.int32), self.src_loc,
+            num_segments=v_per + 1)[:v_per]
+        return marked > 0
+
+
 def _round_body(axes, spec, src_l, dst_l, w_l, comm, sigma, k,
                 frontier_l, round_ix, gate_fraction, m):
-    """One synchronous local-move round for one shard; returns updates."""
-    v_per, sent = spec.v_per_shard, spec.sentinel
-    best_c, best_dq, v0 = _best_moves_shard(
-        axes, spec, src_l, dst_l, w_l, comm, sigma, k, frontier_l, m)
-    own_comm_l = jax.lax.dynamic_slice_in_dim(comm, v0, v_per)
-    k_l = jax.lax.dynamic_slice_in_dim(k, v0, v_per)
-    src_loc = jnp.where(src_l >= sent, v_per, src_l - v0)
+    """One synchronous local-move round for one shard; returns updates.
 
-    # --- gating + singleton guard (global semantics, computed locally) ---
-    gidx = v0 + jnp.arange(v_per)
-    if gate_fraction > 1:
-        h = (gidx.astype(jnp.int32) * jnp.int32(-1640531535)
-             + round_ix.astype(jnp.int32) * jnp.int32(40503))
-        gate = jnp.abs(h >> 13) % gate_fraction == 0
-    else:
-        gate = jnp.ones((v_per,), bool)
-
-    ones_l = jnp.where(own_comm_l < sent, 1, 0)  # ghost vertices excluded
-    size_local = jax.ops.segment_sum(ones_l, own_comm_l, num_segments=sent + 1)
-    comm_size = jax.lax.psum(size_local, axes)
-    own_single = comm_size[own_comm_l] == 1
-    tgt_single = comm_size[jnp.minimum(best_c, sent)] == 1
-    swap_blocked = own_single & tgt_single & (best_c > own_comm_l)
-
-    do_move = ((best_dq > 0.0) & (best_c != own_comm_l) & (best_c < sent)
-               & frontier_l & gate & ~swap_blocked)
-
-    moved_k = jnp.where(do_move, k_l, 0.0)
-    delta = (jax.ops.segment_sum(moved_k, jnp.where(do_move, best_c, sent),
-                                 num_segments=sent + 1)
-             - jax.ops.segment_sum(moved_k, jnp.where(do_move, own_comm_l, sent),
-                                   num_segments=sent + 1))
-    sigma_new = sigma + jax.lax.psum(delta, axes)
-    comm_l_new = jnp.where(do_move, best_c, own_comm_l)
-    dq_round = jax.lax.psum(jnp.sum(jnp.where(do_move, best_dq, 0.0)), axes)
-
-    comm_new = jax.lax.all_gather(comm_l_new, axes, tiled=True)
-    comm_new = jnp.concatenate([comm_new, jnp.asarray([sent], jnp.int32)])
-    moved_g = jax.lax.all_gather(do_move, axes, tiled=True)
-    moved_g = jnp.concatenate([moved_g, jnp.zeros((1,), bool)])
-
-    # Frontier: neighbors of movers (dst side lives locally).
-    marked = jax.ops.segment_max(
-        moved_g[dst_l].astype(jnp.int32), src_loc, num_segments=v_per + 1)[:v_per]
-    frontier_new = (marked > 0) & (gidx < spec.n_pad)
-    frontier_new = frontier_new | (frontier_l & ~gate)
-    return comm_new, sigma_new, frontier_new, dq_round
+    Compatibility adapter over ``MoveEngine.one_round`` (the analysis
+    harness in ``repro.configs.louvain_arch`` drives single rounds).
+    """
+    engine = MoveEngine(ShardedScanner(axes, spec, src_l, dst_l, w_l, k, m),
+                        EngineConfig(gate_fraction=gate_fraction))
+    zero = jnp.asarray(0.0, jnp.float32)
+    st = MoveState(comm, sigma, frontier_l, jnp.asarray(0, jnp.int32),
+                   zero, zero)
+    st = engine.one_round(st, frontier_l, round_ix)
+    return st.comm, st.sigma, st.frontier, st.dq
 
 
 def make_distributed_move(
@@ -259,37 +286,20 @@ def make_distributed_move(
     edge_spec = P(axes)      # edge arrays: sharded along dim 0 over all axes
     rep = P()                # replicated state
 
+    config = EngineConfig(max_iterations=max_iterations,
+                          use_pruning=use_pruning,
+                          gate_fraction=gate_fraction)
+
     def phase(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance):
         def body_shard(src_l, dst_l, w_l, comm, sigma, k, frontier_g, m,
                        tolerance):
-            v_per, sent = spec.v_per_shard, spec.sentinel
-            shard_ix = _shard_index(axes)
-            gidx = shard_ix * v_per + jnp.arange(v_per)
+            scanner = ShardedScanner(axes, spec, src_l, dst_l, w_l, k, m)
             frontier0 = jax.lax.dynamic_slice_in_dim(
-                frontier_g, shard_ix * v_per, v_per) & (gidx < spec.n_pad)
-
-            def cond(st):
-                comm_, sigma_, frontier_, it, dq, dq_sum = st
-                return (it < max_iterations) & (dq > tolerance)
-
-            def body(st):
-                comm_, sigma_, frontier_, it, _, dq_sum = st
-                dq_acc = jnp.asarray(0.0, jnp.float32)
-                for r in range(gate_fraction):
-                    fr = frontier_ if use_pruning else frontier0
-                    comm_, sigma_, frontier_, dq_r = _round_body(
-                        axes, spec, src_l, dst_l, w_l, comm_, sigma_, k,
-                        fr, it * gate_fraction + r, gate_fraction, m)
-                    dq_acc = dq_acc + dq_r
-                return (comm_, sigma_, frontier_, it + 1, dq_acc,
-                        dq_sum + dq_acc)
-
-            st0 = (comm, sigma, frontier0, jnp.asarray(0, jnp.int32),
-                   jnp.asarray(jnp.inf, jnp.float32),
-                   jnp.asarray(0.0, jnp.float32))
-            comm_f, sigma_f, _, iters, _, dq_sum = jax.lax.while_loop(
-                cond, body, st0)
-            return comm_f, sigma_f, iters, dq_sum
+                frontier_g, scanner.v0, spec.v_per_shard
+            ) & scanner.frontier_valid
+            st = MoveEngine(scanner, config).run(comm, sigma, frontier0,
+                                                 tolerance)
+            return st.comm, st.sigma, st.iters, st.dq_sum
 
         fn = shard_map(
             body_shard, mesh=mesh,

@@ -50,13 +50,15 @@ from repro.core.distributed import (AggregationOverflow, ShardedGraphSpec,
                                     sharded_louvain_passes,
                                     sharded_modularity)
 from repro.core.dynamic import BatchUpdateStats
+from repro.core.engine import affected_frontier, normalize_screening
 from repro.core.graph import CSRGraph
-from repro.core.louvain import LouvainConfig, pad_membership, screened_frontier
+from repro.core.louvain import LouvainConfig, pad_membership
 
 
 def apply_batch_shard(spec: ShardedGraphSpec, shard_ix,
                       src_l, dst_l, w_l, b_src, b_dst, b_w, b_valid,
-                      n_limit: Optional[int] = None):
+                      n_limit: Optional[int] = None,
+                      backend: str = "xla"):
     """Per-shard batch apply: resolve the owned directed batch slots against
     this shard's (e_per_shard,) slot arrays via the shared sort-reduce.
 
@@ -106,7 +108,7 @@ def apply_batch_shard(spec: ShardedGraphSpec, shard_ix,
         1 + (jnp.arange(2 * b_cap, dtype=jnp.int32) % b_cap),
     ])
     out_src, out_dst, out_w, e_new, chg_src, _ = sort_reduce_apply_slots(
-        all_src, all_dst, all_w, rank, is_batch, sent, e_per)
+        all_src, all_dst, all_w, rank, is_batch, sent, e_per, backend)
 
     # Every changed slot's src is owned here; the mirror shard marks the dst
     # endpoint via its own (v, u) slot — no cross-shard scatter needed.
@@ -117,14 +119,16 @@ def apply_batch_shard(spec: ShardedGraphSpec, shard_ix,
 
 def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
                              spec: ShardedGraphSpec,
-                             n_limit: Optional[int] = None):
+                             n_limit: Optional[int] = None,
+                             backend: str = "xla"):
     """Build the jit'd sharded batch apply for a fixed mesh/layout.
 
     Returns fn(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid, n_valid)
         -> (src_g', dst_g', w_g', touched (n_pad + 1,), e_max, n_valid')
     with edge arrays in the partitioned layout, the touched mask replicated
     (ONE all_gather of touched-owned slices), and ``e_max`` the worst
-    shard's uncapped slot count (overflow signal).
+    shard's uncapped slot count (overflow signal).  ``backend`` picks the
+    group-resolve implementation (``"xla"`` / ``"pallas"``).
     """
     edge_spec = P(axes)
     rep = P()
@@ -134,7 +138,7 @@ def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
             shard_ix = _shard_index(axes)
             src2, dst2, w2, touched_own, e_new = apply_batch_shard(
                 spec, shard_ix, src_l, dst_l, w_l, b_src, b_dst, b_w,
-                b_valid, n_limit)
+                b_valid, n_limit, backend)
             touched = jax.lax.all_gather(touched_own, axes, tiled=True)
             touched = jnp.concatenate([touched, jnp.zeros((1,), bool)])
             e_max = jax.lax.pmax(e_new, axes)
@@ -165,12 +169,12 @@ def _rebucket_host(src_g, dst_g, w_g, spec: ShardedGraphSpec):
 
 
 def _build_phases(mesh, axes, spec, config: LouvainConfig,
-                  n_limit: Optional[int] = None):
+                  n_limit: Optional[int] = None, backend: str = "xla"):
     move = make_distributed_move(
         mesh, axes, spec, max_iterations=config.max_iterations,
         gate_fraction=config.gate_fraction, use_pruning=config.use_pruning)
     agg = make_distributed_aggregate(mesh, axes, spec)
-    apply_fn = make_sharded_batch_apply(mesh, axes, spec, n_limit)
+    apply_fn = make_sharded_batch_apply(mesh, axes, spec, n_limit, backend)
     return move, agg, apply_fn
 
 
@@ -197,10 +201,11 @@ def louvain_dynamic_sharded(
     prev: Optional[np.ndarray] = None,
     config: LouvainConfig = LouvainConfig(),
     *,
-    screening: bool = True,
+    screening=True,
     track_modularity: bool = False,
     grow_capacity: bool = True,
     e_per_shard: Optional[int] = None,
+    apply_backend: str = "xla",
 ) -> ShardedDynamicResult:
     """Stream edge batches through warm-started sharded Louvain.
 
@@ -216,8 +221,12 @@ def louvain_dynamic_sharded(
     ``prev`` is the membership of ``graph`` before the stream; ``None`` runs
     one cold sharded pass loop to produce it.  Batches of equal ``b_cap``
     reuse one compiled apply; mixed capacities recompile per distinct size.
+    ``screening`` picks the seed-frontier policy (``True``/``"community"``,
+    ``"vertex"`` for DF-style per-vertex flags, ``False`` for pure
+    naive-dynamic); ``apply_backend`` the batch-apply group-resolve.
     """
     t_start = time.perf_counter()
+    screen_mode = normalize_screening(screening)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     src_g, dst_g, w_g, spec = partition_graph_host(
         graph, n_shards, n_target=graph.n_cap)
@@ -230,7 +239,8 @@ def louvain_dynamic_sharded(
         spec = spec._replace(e_per_shard=int(e_per_shard))
         src_g, dst_g, w_g = _rebucket_host(src_g, dst_g, w_g, spec)
     n_limit = graph.n_cap   # logical vertex capacity (n_pad may exceed it)
-    move, agg, apply_fn = _build_phases(mesh, axes, spec, config, n_limit)
+    move, agg, apply_fn = _build_phases(mesh, axes, spec, config, n_limit,
+                                        apply_backend)
     sent = spec.sentinel
 
     pass_kw = dict(
@@ -252,7 +262,7 @@ def louvain_dynamic_sharded(
         spec = spec._replace(e_per_shard=int(e_per_new))
         src_g, dst_g, w_g = _rebucket_host(src_g, dst_g, w_g, spec)
         move, agg, apply_fn = _build_phases(mesh, axes, spec, config,
-                                            n_limit)
+                                            n_limit, apply_backend)
         n_regrows += 1
 
     def _passes_with_growth(n_live_, **kw):
@@ -299,8 +309,9 @@ def louvain_dynamic_sharded(
             t1 = time.perf_counter()
 
             frontier = None
-            if screening:
-                frontier = screened_frontier(touched, mem, n_valid_dev)
+            if screen_mode is not None:
+                frontier = affected_frontier(touched, mem, n_valid_dev,
+                                             screen_mode)
             n_live = int(n_valid_dev)
             global_comm, n_comms, _ = _passes_with_growth(
                 n_live, init_membership=mem, init_frontier=frontier)

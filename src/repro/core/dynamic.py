@@ -35,13 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delta import EdgeBatch, apply_edge_batch
+from repro.core.engine import affected_frontier, normalize_screening
 from repro.core.graph import CSRGraph
 from repro.core.louvain import (LouvainConfig, LouvainResult, louvain,
                                 louvain_modularity, pad_membership,
                                 screened_frontier)
 
 # The frontier math is shared with the sharded layout — see
-# ``repro.core.louvain.screened_frontier``; this name is the historical
+# ``repro.core.engine.affected_frontier``; this name is the historical
 # single-device entry point.
 delta_frontier = screened_frontier
 
@@ -87,9 +88,10 @@ def louvain_dynamic(
     prev: Optional[np.ndarray] = None,
     config: LouvainConfig = LouvainConfig(),
     *,
-    screening: bool = True,
+    screening=True,
     track_modularity: bool = False,
     grow_capacity: bool = True,
+    apply_backend: str = "xla",
 ) -> DynamicResult:
     """Stream edge batches through warm-started (ND + DS) Louvain.
 
@@ -97,11 +99,16 @@ def louvain_dynamic(
     in ``LouvainResult.membership``); if ``None``, a cold static run on the
     initial graph produces it.  Each batch is applied in capacity
     (``apply_edge_batch``), then ``louvain`` resumes from the running
-    membership with the delta-screened frontier (``screening=False`` falls
-    back to pure naive-dynamic: warm start over ALL vertices).  With
+    membership with the delta-screened frontier.  ``screening`` picks the
+    seed-frontier policy: ``True``/``"community"`` (touched endpoints plus
+    their whole communities), ``"vertex"`` (DF-Louvain-style per-vertex
+    affected flags — finer; pruning grows the frontier from actual movers),
+    or ``False`` (pure naive-dynamic: warm start over ALL vertices).  With
     ``grow_capacity`` (the default) a batch that would overflow ``e_cap``
     re-buckets host-side into doubled capacity instead of raising — one
     recompile per growth step, then the stream continues in capacity.
+    ``apply_backend`` selects the batch-apply group-resolve (``"xla"`` or
+    the ``"pallas"`` kernel — bit-identical results).
 
     Returns the final graph/membership plus per-batch stats; the acceptance
     property is that modularity tracks a cold recompute while
@@ -109,6 +116,7 @@ def louvain_dynamic(
     """
     t_start = time.perf_counter()
     n_cap = graph.n_cap
+    screen_mode = normalize_screening(screening)
 
     if prev is None:
         cold = louvain(graph, config)
@@ -123,13 +131,15 @@ def louvain_dynamic(
     n_comms = int(len(np.unique(membership[: int(graph.n_valid)])))
     for batch in batches:
         t0 = time.perf_counter()
-        graph, touched = apply_edge_batch(graph, batch, grow=grow_capacity)
+        graph, touched = apply_edge_batch(graph, batch, grow=grow_capacity,
+                                          backend=apply_backend)
         t1 = time.perf_counter()
 
         frontier = None
-        if screening:
-            frontier = delta_frontier(
-                touched, jnp.asarray(membership), graph.n_valid)
+        if screen_mode is not None:
+            frontier = affected_frontier(
+                touched, jnp.asarray(membership), graph.n_valid,
+                screen_mode)
         res: LouvainResult = louvain(
             graph, config, init_membership=membership,
             init_frontier=frontier)

@@ -1,65 +1,94 @@
-"""Local-moving phase backed by the Pallas ELL scan kernel.
+"""Pallas-ELL scanner backend + its local-moving adapter.
 
 Vertices are degree-bucketed into fixed-width ELL tiles (graph.to_ell_blocks)
 — the TPU analogue of the paper's dynamic load-balanced schedule — and each
 tile's best-move scan runs in the fused Pallas kernel.  Hub vertices whose
-degree exceeds the largest ELL width fall back to the sort-reduce path.
+degree exceeds the largest ELL width fall back to the sort-reduce scan.
 
-The bucketing happens host-side once per pass (the graph is static within a
-pass); the round loop itself is a single jit with `lax.while_loop`.
+The round/sweep loop lives in ``repro.core.engine.MoveEngine``; this module
+contributes only the ELL **scanner** and the host-side wrapper.  The compiled
+loop is cached per static configuration (``_ell_runner``) — blocks and
+leftover ids are passed as jit *arguments*, so repeated calls with the same
+shapes reuse one executable instead of re-jitting per invocation (the old
+``jax.jit(lambda s: ...)``-per-call bug).
 """
 
 from __future__ import annotations
 
-from typing import List, Tuple
+import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.graph import CSRGraph, ELLBlock, to_ell_blocks
-from repro.core.local_move import MoveState, apply_moves, best_moves
+from repro.core.engine import EngineConfig, MoveEngine, MoveState
+from repro.core.graph import CSRGraph, to_ell_blocks
+from repro.core.local_move import SortReduceScanner, best_moves
 from repro.core.modularity import community_weights
 from repro.kernels.louvain_scan import ops as scan_ops
 
 
-def _ell_best_moves(
-    blocks: List[ELLBlock],
-    leftover: jax.Array | None,
-    graph: CSRGraph,
-    comm: jax.Array,
-    sigma: jax.Array,
-    k: jax.Array,
-    frontier: jax.Array,
-    m: jax.Array,
-    *,
-    use_pallas: bool,
-    interpret: bool,
-) -> Tuple[jax.Array, jax.Array]:
-    """Best (community, dQ) per vertex, assembled from all ELL tiles."""
-    n_cap = graph.n_cap
-    best_c = jnp.full((n_cap + 1,), n_cap, jnp.int32)
-    best_dq = jnp.full((n_cap + 1,), -jnp.inf, jnp.float32)
+class ELLScanner(SortReduceScanner):
+    """Engine backend: Pallas ELL scan tiles + sort-reduce hub fallback.
 
-    for block in blocks:
-        ins = scan_ops.prepare_ell_inputs(block, comm, sigma, k, n_cap)
-        bc, bdq = scan_ops.louvain_scan(
-            *ins, m, use_pallas=use_pallas, interpret=interpret
-        )
-        bc = jnp.where(bc < 0, n_cap, bc)
-        # Pad rows carry vertex id n_cap -> land in the sentinel slot.
-        best_c = best_c.at[block.rows].set(bc)
-        best_dq = best_dq.at[block.rows].set(bdq)
+    Topology hooks (identity) and ``mark_neighbors`` come from the
+    sort-reduce scanner; only the best-move scan differs.
+    """
 
-    if leftover is not None and leftover.size:
-        sc, sdq = best_moves(graph, comm, sigma, k, frontier, m)
-        best_c = best_c.at[leftover].set(sc[leftover])
-        best_dq = best_dq.at[leftover].set(sdq[leftover])
+    def __init__(self, graph: CSRGraph, blocks, leftover, k, m, *,
+                 use_pallas: bool, interpret: bool):
+        super().__init__(graph, k, m)
+        self.blocks = blocks
+        self.leftover = leftover        # (n_leftover,) int32; may be empty
+        self.use_pallas = use_pallas
+        self.interpret = interpret
 
-    # Frontier-gate: non-frontier vertices must not move.
-    best_dq = jnp.where(frontier, best_dq, -jnp.inf)
-    best_c = best_c.at[n_cap].set(n_cap)
-    return best_c, best_dq
+    def scan(self, comm, sigma, frontier) -> Tuple[jax.Array, jax.Array]:
+        graph, k, m = self.graph, self.k_local, self.m
+        n_cap = graph.n_cap
+        best_c = jnp.full((n_cap + 1,), n_cap, jnp.int32)
+        best_dq = jnp.full((n_cap + 1,), -jnp.inf, jnp.float32)
+
+        for block in self.blocks:
+            ins = scan_ops.prepare_ell_inputs(block, comm, sigma, k, n_cap)
+            bc, bdq = scan_ops.louvain_scan(
+                *ins, m, use_pallas=self.use_pallas, interpret=self.interpret
+            )
+            bc = jnp.where(bc < 0, n_cap, bc)
+            # Pad rows carry vertex id n_cap -> land in the sentinel slot.
+            best_c = best_c.at[block.rows].set(bc)
+            best_dq = best_dq.at[block.rows].set(bdq)
+
+        if self.leftover.shape[0]:
+            sc, sdq = best_moves(graph, comm, sigma, k, frontier, m)
+            best_c = best_c.at[self.leftover].set(sc[self.leftover])
+            best_dq = best_dq.at[self.leftover].set(sdq[self.leftover])
+
+        # Frontier-gate: non-frontier vertices must not move.
+        best_dq = jnp.where(frontier, best_dq, -jnp.inf)
+        best_c = best_c.at[n_cap].set(n_cap)
+        return best_c, best_dq
+
+
+@functools.lru_cache(maxsize=None)
+def _ell_runner(n_blocks: int, use_pallas: bool, interpret: bool,
+                max_iterations: int, use_pruning: bool, gate_fraction: int):
+    """One jit'd engine loop per static config; graph/blocks are arguments
+    (not closure constants), so calls with equal shapes share the executable."""
+    config = EngineConfig(max_iterations=max_iterations,
+                          use_pruning=use_pruning,
+                          gate_fraction=gate_fraction)
+
+    @jax.jit
+    def run(graph, blocks, leftover, k, m, comm0, sigma0, frontier0,
+            tolerance):
+        scanner = ELLScanner(graph, blocks, leftover, k, m,
+                             use_pallas=use_pallas, interpret=interpret)
+        st = MoveEngine(scanner, config).run(comm0, sigma0, frontier0,
+                                             tolerance)
+        return st.comm, st.iters, st.dq_sum
+
+    return run
 
 
 def move_phase_ell(
@@ -78,21 +107,20 @@ def move_phase_ell(
 ):
     """ELL-kernel local-moving phase: returns (comm, iters, dq_sum).
 
-    Host-side wrapper: buckets the graph once, then runs the jit'd sweep loop.
-    ``comm0``/``sigma0``/``frontier0`` warm-start the sweep from an arbitrary
-    membership snapshot (defaults: singleton start over all valid vertices),
-    mirroring the sort-reduce ``_move_phase``.
+    Host-side wrapper: buckets the graph once, then runs the cached jit'd
+    engine loop.  ``comm0``/``sigma0``/``frontier0`` warm-start the sweep
+    from an arbitrary membership snapshot (defaults: singleton start over
+    all valid vertices), mirroring the sort-reduce ``_move_phase``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     blocks, leftover_np = to_ell_blocks(graph, widths)
-    leftover = jnp.asarray(leftover_np) if len(leftover_np) else None
+    leftover = jnp.asarray(leftover_np)
 
     n_cap = graph.n_cap
     k = graph.vertex_weights()
     m = graph.total_weight()
-    idx = jnp.arange(n_cap + 1)
-    valid = idx < graph.n_valid
+    valid = jnp.arange(n_cap + 1) < graph.n_valid
     if comm0 is None:
         comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
         if sigma0 is None:
@@ -103,40 +131,7 @@ def move_phase_ell(
         sigma0 = community_weights(graph, comm0)
     frontier0 = valid if frontier0 is None else (frontier0 & valid)
 
-    def cond(st: MoveState):
-        return (st.iters < max_iterations) & (st.dq > tolerance)
-
-    def one_round(st: MoveState, round_ix):
-        frontier = st.frontier if use_pruning else frontier0
-        bc, bdq = _ell_best_moves(
-            blocks, leftover, graph, st.comm, st.sigma, k, frontier, m,
-            use_pallas=use_pallas, interpret=interpret,
-        )
-        if gate_fraction > 1:
-            h = (idx.astype(jnp.int32) * jnp.int32(-1640531535)
-                 + round_ix.astype(jnp.int32) * jnp.int32(40503))
-            gate = jnp.abs(h >> 13) % gate_fraction == 0
-        else:
-            gate = None
-        comm, sigma, frontier_new, dq = apply_moves(
-            graph, st.comm, st.sigma, k, frontier, bc, bdq, gate
-        )
-        if gate is not None:
-            frontier_new = frontier_new | (frontier & ~gate)
-        return MoveState(comm, sigma, frontier_new, st.iters, st.dq + dq,
-                         st.dq_sum + dq)
-
-    def body(st: MoveState) -> MoveState:
-        st = st._replace(dq=jnp.asarray(0.0, jnp.float32))
-        base = st.iters * gate_fraction
-        for r in range(gate_fraction):
-            st = one_round(st, base + r)
-        return st._replace(iters=st.iters + 1)
-
-    st0 = MoveState(comm0, sigma0, frontier0, jnp.asarray(0, jnp.int32),
-                    jnp.asarray(jnp.inf, jnp.float32),
-                    jnp.asarray(0.0, jnp.float32))
-
-    run = jax.jit(lambda s: jax.lax.while_loop(cond, body, s))
-    st = run(st0)
-    return st.comm, st.iters, st.dq_sum
+    run = _ell_runner(len(blocks), use_pallas, interpret,
+                      max_iterations, use_pruning, gate_fraction)
+    return run(graph, tuple(blocks), leftover, k, m, comm0, sigma0,
+               frontier0, jnp.float32(tolerance))

@@ -1,0 +1,296 @@
+"""Unified BSP move engine: ONE round loop behind pluggable scanner backends.
+
+GVE-Louvain's speed lives in a single tight local-moving loop (Algorithm 2);
+this repo used to carry three divergent copies of it — the single-device
+sort-reduce loop, the Pallas-ELL loop, and the shard_map ``_round_body`` —
+each re-implementing the gate hash, frontier pruning, singleton-swap guard,
+and sweep/tolerance semantics.  Following the PLM/Grappolo observation that
+parallel Louvain variants differ only in their *heuristic knobs* (pruning,
+gating, ordering), the loop now exists exactly once:
+
+  * ``MoveEngine`` owns the bulk-synchronous sweep (``lax.while_loop`` over
+    sweeps of ``gate_fraction`` gated rounds), the Weyl gate hash, tolerance
+    and iteration-cap semantics, vertex pruning, the singleton-swap guard,
+    and the warm-start/``frontier0`` plumbing.
+  * A **scanner backend** supplies only what is backend-specific: the
+    per-vertex best-move scan ``(best_c, best_dq)`` from a (C, Sigma)
+    snapshot, plus a thin topology surface (how to slice local state, sum
+    across shards, gather replicated state, and mark movers' neighbors).
+    ``repro.core.local_move.SortReduceScanner`` (CSR sort-reduce),
+    ``repro.core.ell_move.ELLScanner`` (Pallas ELL kernel), and
+    ``repro.core.distributed.ShardedScanner`` (shard_map + collectives) are
+    the three backends; every execution path — static, dynamic, sharded,
+    sharded-dynamic, batched multi-stream — routes through this engine.
+
+The engine is shape-polymorphic over the backend's *local* vertex axis
+(``n_cap + 1`` replicated slots on a single device, ``v_per_shard`` owned
+slots inside ``shard_map``) while community state (C, Sigma) is always the
+replicated ``(sentinel + 1,)`` layout.
+
+Delta screening also lives here (``affected_frontier``): the seed-frontier
+policy for streaming updates, at community granularity (touched endpoints +
+every member of their communities, the PR-1 behavior) or DF-Louvain-style
+per-vertex granularity (touched endpoints only — finer, relying on pruning
+to grow the frontier outward from actual movers).  All streaming drivers
+(CSR, sharded, batched) share this one implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Weyl gate hash — the one home of the constants formerly pasted per-loop.
+# ---------------------------------------------------------------------------
+
+#: Knuth's multiplicative constant 2654435761 reinterpreted as int32.
+GATE_MUL = jnp.int32(-1640531535)
+#: Odd per-round Weyl increment (low bits of 2654435769).
+GATE_INC = jnp.int32(40503)
+
+
+def gate_hash(ids: jax.Array, round_ix: jax.Array) -> jax.Array:
+    """Cheap per-(vertex, round) hash — Weyl sequence on odd constants."""
+    return ids.astype(jnp.int32) * GATE_MUL + round_ix.astype(jnp.int32) * GATE_INC
+
+
+def round_gate(ids: jax.Array, round_ix: jax.Array,
+               gate_fraction: int) -> jax.Array:
+    """Boolean mask selecting ~1/gate_fraction of ``ids`` this round.
+
+    Deterministic, and decorrelated across rounds: a vertex not selected in
+    round r is (approximately uniformly) likely to be selected in r + 1, so
+    over a sweep of ``gate_fraction`` rounds nearly all vertices get a turn.
+    """
+    h = gate_hash(ids, round_ix)
+    return jnp.abs(h >> 13) % gate_fraction == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine state and configuration.
+# ---------------------------------------------------------------------------
+
+
+class MoveState(NamedTuple):
+    """Loop state of one local-moving phase.
+
+    ``comm``/``sigma`` are replicated community state ((sentinel + 1,));
+    ``frontier`` is in the backend's LOCAL vertex layout (equal to the
+    replicated layout on a single device, ``(v_per_shard,)`` per shard).
+    """
+
+    comm: jax.Array      # (sent + 1,) int32, sentinel slot = sent
+    sigma: jax.Array     # (sent + 1,) float32 community total weights
+    frontier: jax.Array  # (L,) bool — local layout
+    iters: jax.Array     # () int32 — sweeps performed
+    dq: jax.Array        # () float32 — total dQ of the last sweep
+    dq_sum: jax.Array    # () float32 — accumulated dQ over the phase
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static knobs of the round loop (jit-static everywhere)."""
+
+    max_iterations: int = 20
+    use_pruning: bool = True
+    gate_fraction: int = 2
+
+
+class MoveEngine:
+    """The one BSP round loop.  ``scanner`` supplies the backend surface:
+
+    required attributes
+      ``sentinel``    int — sentinel id (n_cap single-device, n_pad sharded)
+      ``local_ids``   (L,) int32 — global vertex id per local slot
+      ``k_local``     (L,) f32 — vertex weights K_i in local layout
+      ``move_valid``  (L,) bool or None — structural validity gate on moves
+      ``frontier_valid`` (L,) bool — mask applied to the grown frontier
+
+    required methods
+      ``scan(comm, sigma, frontier)`` -> (best_c (L,), best_dq (L,))
+      ``comm_local(comm)``            -> (L,) current community per local slot
+      ``count_ones(comm_l)``          -> (L,) 0/1 contribution to |community|
+      ``psum(x)``                     -> cross-shard sum (identity locally)
+      ``combine_sigma(sigma, add, sub)`` -> replicated Sigma'
+      ``gather_comm(comm_l)``         -> (sent + 1,) replicated membership
+      ``gather_mask(mask_l)``         -> (sent + 1,) replicated bool
+      ``mark_neighbors(moved)``       -> (L,) bool neighbors-of-movers
+    """
+
+    def __init__(self, scanner, config: EngineConfig):
+        self.scanner = scanner
+        self.config = config
+
+    # -- one synchronous round: scan -> gate -> guard -> apply ------------
+    def one_round(self, st: MoveState, frontier0: jax.Array,
+                  round_ix: jax.Array) -> MoveState:
+        sc, cfg = self.scanner, self.config
+        sent = sc.sentinel
+        frontier = st.frontier if cfg.use_pruning else frontier0
+
+        best_c, best_dq = sc.scan(st.comm, st.sigma, frontier)
+        comm_l = sc.comm_local(st.comm)
+
+        gate = (round_gate(sc.local_ids, round_ix, cfg.gate_fraction)
+                if cfg.gate_fraction > 1 else None)
+
+        # Singleton-swap guard (Vite lineage): two singleton communities may
+        # only merge towards the smaller id, breaking A<->B oscillation.
+        sizes = sc.psum(jax.ops.segment_sum(
+            sc.count_ones(comm_l), comm_l, num_segments=sent + 1))
+        own_single = sizes[comm_l] == 1
+        tgt_single = sizes[jnp.minimum(best_c, sent)] == 1
+        swap_blocked = own_single & tgt_single & (best_c > comm_l)
+
+        do_move = ((best_dq > 0.0) & (best_c != comm_l) & (best_c < sent)
+                   & frontier & ~swap_blocked)
+        if sc.move_valid is not None:
+            do_move = do_move & sc.move_valid
+        if gate is not None:
+            do_move = do_move & gate
+
+        moved_k = jnp.where(do_move, sc.k_local, 0.0)
+        sigma = sc.combine_sigma(
+            st.sigma,
+            jax.ops.segment_sum(moved_k, jnp.where(do_move, best_c, sent),
+                                num_segments=sent + 1),
+            jax.ops.segment_sum(moved_k, jnp.where(do_move, comm_l, sent),
+                                num_segments=sent + 1))
+        comm = sc.gather_comm(jnp.where(do_move, best_c, comm_l))
+        dq = sc.psum(jnp.sum(jnp.where(do_move, best_dq, 0.0)))
+
+        # Vertex pruning: processed vertices leave the frontier; neighbors
+        # of movers re-enter it.  Gated-out frontier vertices were never
+        # processed this round — keep them hot.
+        moved_g = sc.gather_mask(do_move)
+        frontier_new = sc.mark_neighbors(moved_g) & sc.frontier_valid
+        if gate is not None:
+            frontier_new = frontier_new | (frontier & ~gate)
+
+        return MoveState(comm, sigma, frontier_new, st.iters,
+                         st.dq + dq, st.dq_sum + dq)
+
+    # -- the sweep loop ---------------------------------------------------
+    def run(self, comm0: jax.Array, sigma0: jax.Array, frontier0: jax.Array,
+            tolerance: jax.Array) -> MoveState:
+        """Algorithm 2: sweeps until total dQ <= tolerance or the cap.
+
+        ``comm0``/``sigma0`` may be ANY consistent membership + community-
+        weight snapshot (warm starts pass the previous membership);
+        ``frontier0`` restricts the first round to a seed set (delta
+        screening) and is the re-scan set when pruning is disabled.
+        """
+        cfg = self.config
+
+        def cond(st: MoveState):
+            return (st.iters < cfg.max_iterations) & (st.dq > tolerance)
+
+        def body(st: MoveState) -> MoveState:
+            # One paper-"iteration" = one sweep = gate_fraction gated rounds,
+            # so tolerance/cap semantics match the paper's full sweeps.
+            st = st._replace(dq=jnp.asarray(0.0, jnp.float32))
+            base = st.iters * cfg.gate_fraction
+            for r in range(cfg.gate_fraction):
+                st = self.one_round(st, frontier0, base + r)
+            return st._replace(iters=st.iters + 1)
+
+        # Prime with dq = +inf so the loop always runs at least one sweep.
+        st0 = MoveState(comm0, sigma0, frontier0, jnp.asarray(0, jnp.int32),
+                        jnp.asarray(jnp.inf, jnp.float32),
+                        jnp.asarray(0.0, jnp.float32))
+        return jax.lax.while_loop(cond, body, st0)
+
+
+class ReplicatedScannerBase:
+    """Topology surface shared by the single-device backends (sort-reduce
+    and ELL): local layout == replicated layout, all collectives identity."""
+
+    def __init__(self, sentinel: int, n_valid: jax.Array, k: jax.Array):
+        self.sentinel = sentinel
+        self.local_ids = jnp.arange(sentinel + 1)
+        self.k_local = k
+        valid = self.local_ids < n_valid
+        self.move_valid: Optional[jax.Array] = valid
+        self.frontier_valid = valid
+        self._valid = valid
+
+    def comm_local(self, comm: jax.Array) -> jax.Array:
+        return comm
+
+    def count_ones(self, comm_l: jax.Array) -> jax.Array:
+        return jnp.where(self._valid, 1, 0)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def combine_sigma(self, sigma, add, sub):
+        return sigma + add - sub
+
+    def gather_comm(self, comm_l: jax.Array) -> jax.Array:
+        return comm_l
+
+    def gather_mask(self, mask_l: jax.Array) -> jax.Array:
+        return mask_l
+
+    def scan(self, comm, sigma, frontier) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def mark_neighbors(self, moved: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Delta screening — the streaming seed-frontier policy, shared by every path.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def affected_frontier(touched: jax.Array, membership: jax.Array,
+                      n_valid: jax.Array, mode: str = "community") -> jax.Array:
+    """Seed frontier from a touched-vertex mask, in the replicated layout.
+
+    ``membership`` is (cap + 1,) community ids with the sentinel slot = cap
+    (cap = n_cap single-device, n_pad sharded).  Modes:
+
+    ``"community"`` — touched endpoints plus ALL members of their current
+        communities (the delta-screening set of Zarayeneh et al.; safe and
+        the historical default).
+    ``"vertex"`` — DF-Louvain-style per-vertex affected flags: ONLY the
+        touched endpoints seed the frontier; with vertex pruning on, the
+        frontier then grows outward from actual movers, so the engine
+        re-scans strictly less of the graph per update.
+    """
+    cap = membership.shape[0] - 1
+    idx = jnp.arange(cap + 1)
+    valid = idx < n_valid
+    if mode == "vertex":
+        return touched & valid
+    if mode != "community":
+        raise ValueError(f"unknown screening mode: {mode!r}")
+    comm = jnp.where(valid, jnp.minimum(membership, cap), cap)
+    # Mark affected communities, then pull every member of a marked one.
+    mark = jnp.zeros((cap + 1,), bool)
+    mark = mark.at[jnp.where(touched & valid, comm, cap)].set(True)
+    mark = mark.at[cap].set(False)
+    return (touched | mark[comm]) & valid
+
+
+def normalize_screening(screening) -> Optional[str]:
+    """Map the drivers' ``screening`` argument to a frontier mode.
+
+    ``True`` -> ``"community"`` (back-compat), ``False``/``None`` -> ``None``
+    (pure naive-dynamic: warm start over all vertices), strings pass through.
+    """
+    if screening is True:
+        return "community"
+    if screening in (False, None):
+        return None
+    if screening in ("community", "vertex"):
+        return screening
+    raise ValueError(f"screening must be bool, 'community' or 'vertex'; "
+                     f"got {screening!r}")

@@ -1,4 +1,4 @@
-"""Local-moving phase (Algorithm 2) as synchronous data-parallel rounds.
+"""Sort-reduce scanner backend + single-device local-moving adapter.
 
 The paper's asynchronous per-thread moves (OpenMP atomics) have no efficient
 analogue in a bulk-synchronous XLA program, so GVE-Louvain's local-moving is
@@ -6,38 +6,30 @@ recast as rounds: every frontier vertex computes its best move against the
 *same* snapshot of (C, Sigma), then all moves are applied at once (cf. the GPU
 adaptations the paper cites, Naim et al. / Cheong et al.).
 
-The per-thread collision-free Far-KV hashtable of scanCommunities() becomes a
-sort-reduce: edges are grouped by (src, C[dst]) with a lexicographic sort and
-the per-community weights K_{i->c} are segment-sums over the groups.  A Pallas
-ELL kernel implementing the same scan as a dense pairwise compare lives in
-``repro.kernels.louvain_scan`` and is used via the `use_ell_kernel` path.
-
-Safeguards against synchronous oscillation (Vite lineage):
-  - deterministic tie-break to the lowest community id,
-  - the singleton-swap guard: two singleton communities may only merge in the
-    direction of the smaller id.
+The round/sweep loop itself lives in ``repro.core.engine.MoveEngine`` — this
+module contributes only the **scanner**: the per-thread collision-free Far-KV
+hashtable of scanCommunities() becomes a sort-reduce, grouping edges by
+(src, C[dst]) with a lexicographic sort and segment-summing the per-community
+weights K_{i->c}.  A Pallas ELL kernel implementing the same scan as a dense
+pairwise compare lives in ``repro.core.ell_move`` / ``repro.kernels``.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (EngineConfig, MoveEngine, MoveState,
+                               ReplicatedScannerBase)
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
 
 _NEG_INF = -jnp.inf
 
-
-class MoveState(NamedTuple):
-    comm: jax.Array      # (n_cap + 1,) int32, sentinel slot = n_cap
-    sigma: jax.Array     # (n_cap + 1,) float32 community total weights
-    frontier: jax.Array  # (n_cap + 1,) bool
-    iters: jax.Array     # () int32 — iterations performed
-    dq: jax.Array        # () float32 — total dQ of the last round
-    dq_sum: jax.Array    # () float32 — accumulated dQ over the pass
+__all__ = ["MoveState", "SortReduceScanner", "best_moves", "louvain_move",
+           "scan_communities_sorted"]
 
 
 def scan_communities_sorted(
@@ -101,60 +93,28 @@ def best_moves(
     return best_c, best_dq
 
 
-def apply_moves(
-    graph: CSRGraph,
-    comm: jax.Array,
-    sigma: jax.Array,
-    k: jax.Array,
-    frontier: jax.Array,
-    best_c: jax.Array,
-    best_dq: jax.Array,
-    move_gate: jax.Array | None = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Apply all positive-gain moves at once; returns (C', Sigma', frontier', dQ)."""
-    n_cap = graph.n_cap
-    idx = jnp.arange(n_cap + 1)
-    vertex_valid = idx < graph.n_valid
+class SortReduceScanner(ReplicatedScannerBase):
+    """Engine backend: CSR sort-reduce scan on a single device.
 
-    # Singleton-swap guard (Vite): two singleton communities merge only
-    # towards the smaller id, breaking symmetric A<->B oscillation.
-    comm_size = jax.ops.segment_sum(
-        jnp.where(vertex_valid, 1, 0), comm, num_segments=n_cap + 1
-    )
-    own_singleton = comm_size[comm] == 1
-    tgt_singleton = comm_size[best_c] == 1
-    swap_blocked = own_singleton & tgt_singleton & (best_c > comm)
+    Local layout == replicated layout ((n_cap + 1,) with the sentinel slot);
+    all topology hooks are the identities from ``ReplicatedScannerBase``.
+    """
 
-    do_move = (
-        (best_dq > 0.0)
-        & (best_c != comm)
-        & (best_c < n_cap)
-        & frontier
-        & vertex_valid
-        & ~swap_blocked
-    )
-    if move_gate is not None:
-        do_move = do_move & move_gate
+    def __init__(self, graph: CSRGraph, k: jax.Array, m: jax.Array):
+        super().__init__(graph.n_cap, graph.n_valid, k)
+        self.graph = graph
+        self.m = m
 
-    moved_k = jnp.where(do_move, k, 0.0)
-    sigma_new = (
-        sigma
-        + jax.ops.segment_sum(moved_k, jnp.where(do_move, best_c, n_cap),
-                              num_segments=n_cap + 1)
-        - jax.ops.segment_sum(moved_k, jnp.where(do_move, comm, n_cap),
-                              num_segments=n_cap + 1)
-    )
-    comm_new = jnp.where(do_move, best_c, comm)
-    dq_total = jnp.sum(jnp.where(do_move, best_dq, 0.0))
+    def scan(self, comm, sigma, frontier):
+        return best_moves(self.graph, comm, sigma, self.k_local, frontier,
+                          self.m)
 
-    # Vertex pruning: processed vertices leave the frontier; neighbors of
-    # movers re-enter it.
-    moved_src = do_move[graph.src]
-    marked = jax.ops.segment_max(
-        moved_src.astype(jnp.int32), graph.indices, num_segments=n_cap + 1
-    )
-    frontier_new = (marked > 0) & vertex_valid
-    return comm_new, sigma_new, frontier_new, dq_total
+    def mark_neighbors(self, moved: jax.Array) -> jax.Array:
+        g = self.graph
+        marked = jax.ops.segment_max(
+            moved[g.src].astype(jnp.int32), g.indices,
+            num_segments=g.n_cap + 1)
+        return marked > 0
 
 
 def louvain_move(
@@ -170,59 +130,19 @@ def louvain_move(
     gate_fraction: int = 2,
     frontier0: jax.Array | None = None,
 ) -> MoveState:
-    """Algorithm 2: iterate rounds until total dQ <= tolerance or the cap.
+    """Algorithm 2 on the sort-reduce backend — a thin engine adapter.
 
     ``comm``/``sigma`` may be ANY consistent membership + community-weight
     snapshot, not just the singleton start — warm starts (dynamic Louvain)
     pass the previous membership here.  ``frontier0`` optionally restricts
     the first round to a seed set (delta screening); ``None`` means all
-    valid vertices.  With ``use_pruning`` the frontier then grows outward
-    from movers exactly as in the static pruned phase.
-
-    ``gate_fraction > 1`` enables stochastic round gating: each round only a
-    pseudo-random 1/gate_fraction of vertices may move.  This damps the
-    synchronous pile-on/oscillation pathology of bulk-synchronous Louvain at
-    the cost of more (cheaper-converging) rounds; vertices not selected stay
-    in the frontier.  ``gate_fraction=1`` disables the gate (pure greedy).
+    valid vertices.  Sweep/tolerance/gating semantics are the engine's — see
+    ``repro.core.engine.MoveEngine``.
     """
-    n_cap = graph.n_cap
-    idx = jnp.arange(n_cap + 1)
-    valid = idx < graph.n_valid
+    valid = jnp.arange(graph.n_cap + 1) < graph.n_valid
     frontier0 = valid if frontier0 is None else (frontier0 & valid)
-
-    def cond(st: MoveState):
-        return (st.iters < max_iterations) & (st.dq > tolerance)
-
-    def one_round(st: MoveState, round_ix: jax.Array) -> MoveState:
-        frontier = st.frontier if use_pruning else frontier0
-        best_c, best_dq = best_moves(graph, st.comm, st.sigma, k, frontier, m)
-        if gate_fraction > 1:
-            # Cheap per-(vertex, round) hash — Weyl sequence on odd constants.
-            h = (idx.astype(jnp.int32) * jnp.int32(-1640531535)  # 2654435761 as i32
-                 + round_ix.astype(jnp.int32) * jnp.int32(40503))
-            gate = jnp.abs(h >> 13) % gate_fraction == 0
-        else:
-            gate = None
-        comm, sigma, frontier_new, dq = apply_moves(
-            graph, st.comm, st.sigma, k, frontier, best_c, best_dq, gate
-        )
-        if gate is not None:
-            # Unselected frontier vertices were not processed — keep them hot.
-            frontier_new = frontier_new | (frontier & ~gate)
-        return MoveState(comm, sigma, frontier_new, st.iters, st.dq + dq,
-                         st.dq_sum + dq)
-
-    def body(st: MoveState) -> MoveState:
-        # One paper-"iteration" = one sweep = gate_fraction gated rounds, so
-        # that tolerance/iteration-cap semantics match the paper's full sweeps.
-        st = st._replace(dq=jnp.asarray(0.0, jnp.float32))
-        base = st.iters * gate_fraction
-        for r in range(gate_fraction):
-            st = one_round(st, base + r)
-        return st._replace(iters=st.iters + 1)
-
-    # Prime with dq = +inf so the loop always runs at least one sweep.
-    st0 = MoveState(comm, sigma, frontier0, jnp.asarray(0, jnp.int32),
-                    jnp.asarray(jnp.inf, jnp.float32),
-                    jnp.asarray(0.0, jnp.float32))
-    return jax.lax.while_loop(cond, body, st0)
+    engine = MoveEngine(
+        SortReduceScanner(graph, k, m),
+        EngineConfig(max_iterations=max_iterations, use_pruning=use_pruning,
+                     gate_fraction=gate_fraction))
+    return engine.run(comm, sigma, frontier0, tolerance)

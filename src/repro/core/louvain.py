@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregate import aggregate_graph, renumber_communities
+from repro.core.engine import affected_frontier
 from repro.core.graph import CSRGraph
 from repro.core.local_move import louvain_move
 from repro.core.modularity import community_weights, modularity
@@ -83,25 +84,17 @@ def pad_membership(mem, n_cap: int) -> np.ndarray:
     return out
 
 
-@jax.jit
 def screened_frontier(touched: jax.Array, membership: jax.Array,
-                      n_valid: jax.Array) -> jax.Array:
+                      n_valid: jax.Array, mode: str = "community") -> jax.Array:
     """Delta-screened seed frontier from a touched-vertex mask.
 
-    (cap + 1,) bool: touched endpoints + all members of their current
-    communities.  ``membership`` is (cap + 1,) community ids with the
-    sentinel slot = cap; works for both the single-device capacity layout
-    (cap = n_cap) and the replicated sharded layout (cap = n_pad).
+    (cap + 1,) bool; works for both the single-device capacity layout
+    (cap = n_cap) and the replicated sharded layout (cap = n_pad).  Thin
+    alias of the engine-level ``repro.core.engine.affected_frontier`` —
+    ``mode="community"`` (default) expands to whole affected communities,
+    ``mode="vertex"`` is the DF-Louvain-style per-vertex flag set.
     """
-    cap = membership.shape[0] - 1
-    idx = jnp.arange(cap + 1)
-    valid = idx < n_valid
-    comm = jnp.where(valid, jnp.minimum(membership, cap), cap)
-    # Mark affected communities, then pull every member of a marked one.
-    mark = jnp.zeros((cap + 1,), bool)
-    mark = mark.at[jnp.where(touched & valid, comm, cap)].set(True)
-    mark = mark.at[cap].set(False)
-    return (touched | mark[comm]) & valid
+    return affected_frontier(touched, membership, n_valid, mode)
 
 
 @jax.jit

@@ -1,0 +1,343 @@
+"""Batched multi-stream serving: one jitted program, many edge streams.
+
+Serving workloads rarely carry ONE stream: a fleet of tenants (per-user
+interaction graphs, per-region topologies, A/B shadow graphs) each emits
+small edge-batch deltas and wants fresh communities.  Running
+``louvain_dynamic`` per stream pays the full dispatch + host-control-flow
+cost S times; here the engine's move rounds are ``vmap``-ed over a leading
+stream axis instead, so S independent streams ride ONE compiled program:
+
+  * ``stack_graphs`` / ``stack_batches`` stack equal-capacity ``CSRGraph`` /
+    ``EdgeBatch`` pytrees along axis 0 (capacities are the compiled shape,
+    so serving fleets provision one shared (n_cap, e_cap) envelope).
+  * ``louvain_batched`` is the batched pass loop: vmapped warm/singleton
+    init, vmapped engine move phase (the ``lax.while_loop`` batches to a
+    run-until-all-converge loop with masked updates), vmapped renumber +
+    aggregation.  Pass-level decisions stay host-side but are taken ONCE
+    for the fleet: converged streams get ``tolerance = +inf`` (their loop
+    exits immediately) and their state is frozen via an active-mask select,
+    while the rest keep optimizing in lockstep.
+  * ``louvain_dynamic_batched`` is the streaming driver: per step, the
+    edge batches of all streams apply in one vmapped sort-reduce, delta
+    screening (``repro.core.engine.affected_frontier``, community- or
+    vertex-granularity) seeds per-stream frontiers, and the batched pass
+    loop resumes from the per-stream memberships.
+
+The batched driver intentionally has NO capacity growth: re-bucketing one
+stream would recompile the fleet's program, so serving callers provision
+``e_cap`` headroom up front (a batch that would overflow raises).  The
+scanner is the sort-reduce backend (ELL bucketing is per-graph host work
+that does not batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import renumber_communities
+from repro.core.delta import EdgeBatch, _apply_edge_batch
+from repro.core.engine import affected_frontier, normalize_screening
+from repro.core.graph import CSRGraph
+from repro.core.louvain import (LouvainConfig, _aggregate_phase, _move_phase,
+                                _renumber_and_fold, pad_membership,
+                                singleton_init, warm_init)
+from repro.core.modularity import modularity
+
+
+def stack_graphs(graphs: Sequence[CSRGraph]) -> CSRGraph:
+    """Stack equal-capacity graphs along a new leading stream axis."""
+    g0 = graphs[0]
+    for g in graphs[1:]:
+        if g.n_cap != g0.n_cap or g.e_cap != g0.e_cap:
+            raise ValueError(
+                f"stream capacities differ: ({g.n_cap}, {g.e_cap}) vs "
+                f"({g0.n_cap}, {g0.e_cap}) — provision one shared envelope")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *graphs)
+
+
+def stack_batches(batches: Sequence[EdgeBatch]) -> EdgeBatch:
+    """Stack equal-capacity edge batches along a new leading stream axis."""
+    b0 = batches[0]
+    for b in batches[1:]:
+        if b.b_cap != b0.b_cap:
+            raise ValueError(
+                f"batch capacities differ: {b.b_cap} vs {b0.b_cap}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+@dataclasses.dataclass
+class BatchedLouvainResult:
+    membership: jax.Array        # (S, n_cap) padded per-stream membership
+    n_communities: np.ndarray    # (S,) int
+    n_passes: int                # lockstep passes run (max over streams)
+
+
+@dataclasses.dataclass
+class BatchedDynamicResult:
+    graphs: CSRGraph             # stacked graphs after all steps
+    membership: np.ndarray       # (S, n_cap) final padded membership
+    n_communities: np.ndarray    # (S,) int
+    frontier_sizes: np.ndarray   # (n_steps, S) delta-screened seed sizes
+    modularity: Optional[np.ndarray]  # (S,) final Q per stream (if tracked)
+    total_seconds: float
+
+    def stream_membership(self, s: int) -> np.ndarray:
+        n = int(np.asarray(self.graphs.n_valid)[s])
+        return np.asarray(self.membership[s, :n])
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
+                tolerance: float, screen_mode: Optional[str], backend: str):
+    """ONE jitted vmapped program for a whole serving step: batch apply ->
+    delta screen -> warm init -> engine move -> renumber.
+
+    This is the fast path of ``louvain_dynamic_batched``: warm streaming
+    updates almost always converge in a single pass (``iters <= 1``), so the
+    per-step host cost collapses to one dispatch + one scalar fetch for the
+    fleet.  The returned ``iters``/``e_new`` let the host detect the rare
+    step that needs the general pass loop (or overflowed capacity) and
+    redo it off the fast path — results stay exactly equal to the
+    sequential drivers either way.
+    """
+
+    def one(g: CSRGraph, mem_row: jax.Array, b: EdgeBatch):
+        n_cap = g.n_cap
+        g2, touched, e_new = _apply_edge_batch(g, b, backend=backend)
+        mem_pad = jnp.concatenate(
+            [mem_row[:n_cap], jnp.full((1,), n_cap, jnp.int32)])
+        if screen_mode is not None:
+            frontier = affected_frontier(touched, mem_pad, g2.n_valid,
+                                         screen_mode)
+        else:
+            frontier = jnp.arange(n_cap + 1) < g2.n_valid
+        comm0, sigma0, frontier0 = warm_init(g2, mem_pad, frontier)
+        comm, iters, _ = _move_phase(
+            g2, comm0, sigma0, frontier0, jnp.float32(tolerance),
+            max_iterations=max_iterations, use_pruning=use_pruning,
+            gate_fraction=gate_fraction)
+        comm_ren, _ = renumber_communities(comm, g2.n_valid, n_cap)
+        return (g2, comm_ren[:n_cap], frontier, iters, e_new,
+                jnp.sum(frontier))
+
+    return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_phases(max_iterations: int, use_pruning: bool,
+                    gate_fraction: int):
+    """vmapped jit'd phases for one static move configuration."""
+    move = jax.vmap(functools.partial(
+        _move_phase, max_iterations=max_iterations, use_pruning=use_pruning,
+        gate_fraction=gate_fraction))
+    return (move, jax.vmap(singleton_init), jax.vmap(warm_init),
+            jax.vmap(_renumber_and_fold), jax.vmap(_aggregate_phase))
+
+
+def louvain_batched(
+    gb: CSRGraph,
+    config: LouvainConfig = LouvainConfig(),
+    *,
+    init_membership: Optional[jax.Array] = None,
+    init_frontier: Optional[jax.Array] = None,
+) -> BatchedLouvainResult:
+    """Batched pass loop over stacked graphs; see the module docstring.
+
+    ``init_membership`` ((S, n_cap) or (S, n_cap + 1)) warm-starts pass 0
+    per stream; ``init_frontier`` ((S, n_cap + 1) bool) seeds delta
+    screening.  Streams converge independently: a finished stream's
+    tolerance flips to +inf (its batched while_loop lane exits immediately)
+    and its membership is frozen while the fleet finishes.
+    """
+    if config.use_ell_kernel:
+        raise ValueError("louvain_batched uses the sort-reduce scanner; "
+                         "ELL bucketing is per-graph host work")
+    S, n_cap = gb.indptr.shape[0], gb.indptr.shape[1] - 1
+    move, v_singleton, v_warm, v_renumber, v_aggregate = _batched_phases(
+        config.max_iterations, config.use_pruning, config.gate_fraction)
+
+    global_comm = jnp.tile(jnp.arange(n_cap, dtype=jnp.int32)[None], (S, 1))
+    active = np.ones(S, bool)
+    tol = float(config.initial_tolerance)
+    n_comms_final = np.asarray(gb.n_valid).copy()
+    warm = init_membership is not None
+    if warm:
+        mem = jnp.asarray(init_membership, jnp.int32)
+        if mem.shape[1] < n_cap + 1:
+            mem = jnp.concatenate(
+                [mem, jnp.full((S, n_cap + 1 - mem.shape[1]), n_cap,
+                               jnp.int32)], axis=1)
+    fr = (jnp.ones((S, n_cap + 1), bool) if init_frontier is None
+          else jnp.asarray(init_frontier, bool))
+
+    passes = 0
+    for p in range(config.max_passes):
+        if p == 0 and warm:
+            comm0, sigma0, frontier0 = v_warm(gb, mem, fr)
+        else:
+            comm0, sigma0, frontier0 = v_singleton(gb)
+            if p == 0 and init_frontier is not None:
+                frontier0 = frontier0 & fr
+        tols = jnp.where(jnp.asarray(active), jnp.float32(tol), jnp.inf)
+        comm, iters, _ = move(gb, comm0, sigma0, frontier0, tols)
+        comm_ren, n_comms, folded = v_renumber(
+            comm, gb.n_valid, jnp.zeros((S,), jnp.int32), global_comm)
+        mask = jnp.asarray(active)
+        global_comm = jnp.where(mask[:, None], folded, global_comm)
+        passes = p + 1
+
+        iters_np = np.asarray(iters)
+        n_comms_np = np.asarray(n_comms)
+        n_valid_np = np.asarray(gb.n_valid)
+        n_comms_final = np.where(active, n_comms_np, n_comms_final)
+        converged = iters_np <= 1
+        low_shrink = (n_comms_np / np.maximum(n_valid_np, 1)
+                      > config.aggregation_tolerance)
+        next_active = active & ~converged & ~low_shrink
+        if p == config.max_passes - 1 or not next_active.any():
+            break
+        gb_new = v_aggregate(gb, comm_ren, n_comms)
+        sel = jnp.asarray(next_active)
+        gb = jax.tree.map(
+            lambda new, old: jnp.where(
+                sel.reshape((S,) + (1,) * (new.ndim - 1)), new, old),
+            gb_new, gb)
+        active = next_active
+        tol /= config.tolerance_drop
+
+    return BatchedLouvainResult(membership=global_comm,
+                                n_communities=n_comms_final.astype(int),
+                                n_passes=passes)
+
+
+def louvain_dynamic_batched(
+    graphs: Sequence[CSRGraph],
+    streams: Sequence[Sequence[EdgeBatch]],
+    prevs: Optional[Sequence[np.ndarray]] = None,
+    config: LouvainConfig = LouvainConfig(),
+    *,
+    screening=True,
+    track_modularity: bool = False,
+    apply_backend: str = "xla",
+) -> BatchedDynamicResult:
+    """Serve S independent edge streams through ONE batched dynamic program.
+
+    ``streams[s]`` is stream s's batch sequence; all streams must have the
+    same number of steps and per-step ``b_cap`` (serving fleets share one
+    compiled envelope — pad short streams with empty batches).  ``prevs``
+    are the per-stream memberships before the stream; ``None`` runs one
+    batched cold start.  Per step: one vmapped batch apply, one vmapped
+    delta screen (``screening`` as in ``louvain_dynamic``), one batched
+    warm pass loop.  Raises on capacity overflow (no growth — see module
+    docstring).
+    """
+    t_start = time.perf_counter()
+    S = len(graphs)
+    if len(streams) != S:
+        raise ValueError(f"{S} graphs but {len(streams)} streams")
+    n_steps = len(streams[0])
+    if any(len(s) != n_steps for s in streams):
+        raise ValueError("all streams must have the same number of steps")
+    screen_mode = normalize_screening(screening)
+    gb = stack_graphs(list(graphs))
+    n_cap, e_cap = gb.indptr.shape[1] - 1, gb.indices.shape[1]
+
+    fused = _fused_step(config.max_iterations, config.use_pruning,
+                        config.gate_fraction,
+                        float(config.initial_tolerance), screen_mode,
+                        apply_backend)
+
+    if prevs is None:
+        mem = louvain_batched(gb, config).membership
+    else:
+        # pad_membership accepts (n,), (n_cap,) and sentinel-padded
+        # (n_cap + 1,) inputs alike — same contract as louvain_dynamic.
+        mem = jnp.stack([
+            jnp.asarray(pad_membership(
+                np.asarray(p, np.int32)[:n_cap], n_cap)[:n_cap])
+            for p in prevs])
+
+    bbs = [stack_batches([streams[s][step] for s in range(S)])
+           for step in range(n_steps)]
+
+    def serve_carefully(gb, mem):
+        """Per-step validated loop: check overflow/convergence every step,
+        routing non-converged steps through the general batched pass loop
+        — results stay exactly equal to the sequential driver."""
+        frontier_sizes: List[jax.Array] = []
+        for step in range(n_steps):
+            gb_new, mem_new, frontier, iters, e_new, fsize = fused(
+                gb, mem, bbs[step])
+            e_max, iters_max = jax.device_get(
+                (jnp.max(e_new), jnp.max(iters)))
+            if int(e_max) > e_cap:
+                raise ValueError(
+                    f"batched step {step} overflows capacity: a stream "
+                    f"needs {int(e_max)} live directed slots > "
+                    f"e_cap={e_cap}; provision headroom up front (batched "
+                    "serving does not grow)")
+            if int(iters_max) > 1:
+                res = louvain_batched(
+                    gb_new, config, init_membership=mem,
+                    init_frontier=(frontier if screen_mode is not None
+                                   else None))
+                mem_new = res.membership
+            gb, mem = gb_new, mem_new
+            frontier_sizes.append(fsize if screen_mode is not None
+                                  else gb.n_valid)
+        return gb, mem, frontier_sizes
+
+    # Optimistic pipelined pass: enqueue every fused step back-to-back with
+    # NO host round-trip, then validate the collected per-step scalars
+    # once.  Warm serving updates virtually always satisfy both checks; a
+    # violation redoes the stream through the per-step validated loop (so
+    # overflow raises with its step index and non-converged steps get the
+    # full pass loop) — results are identical either way.
+    gb_t, mem_t = gb, mem
+    fsz_t: List[jax.Array] = []
+    its_t: List[jax.Array] = []
+    enew_t: List[jax.Array] = []
+    for step in range(n_steps):
+        gb_t, mem_t, _, iters, e_new, fsize = fused(gb_t, mem_t, bbs[step])
+        fsz_t.append(fsize if screen_mode is not None else gb_t.n_valid)
+        its_t.append(iters)
+        enew_t.append(e_new)
+    if n_steps == 0:
+        frontier_sizes = []          # idle fleet: warm membership unchanged
+    else:
+        e_max, iters_max = jax.device_get(
+            (jnp.max(jnp.stack(enew_t)), jnp.max(jnp.stack(its_t))))
+        if int(e_max) > e_cap or int(iters_max) > 1:
+            gb, mem, frontier_sizes = serve_carefully(gb, mem)
+        else:
+            gb, mem, frontier_sizes = gb_t, mem_t, fsz_t
+
+    q = None
+    if track_modularity:
+        q = np.asarray(jax.vmap(modularity)(gb, _pad_sentinel(mem)))
+    return BatchedDynamicResult(
+        graphs=gb,
+        membership=np.asarray(mem),
+        n_communities=np.asarray(
+            [len(np.unique(np.asarray(mem[s, :int(np.asarray(gb.n_valid)[s])])))
+             for s in range(S)]),
+        frontier_sizes=(np.asarray(jnp.stack(frontier_sizes))
+                        if frontier_sizes else np.zeros((0, S), int)),
+        modularity=q,
+        total_seconds=time.perf_counter() - t_start,
+    )
+
+
+@jax.jit
+def _pad_sentinel(mem: jax.Array) -> jax.Array:
+    """(S, n_cap) membership -> (S, n_cap + 1) with the sentinel column."""
+    S, n_cap = mem.shape[0], mem.shape[1]
+    return jnp.concatenate(
+        [mem, jnp.full((S, 1), n_cap, jnp.int32)], axis=1)

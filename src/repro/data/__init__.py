@@ -1,7 +1,8 @@
 from repro.data.graphs import (lfr_graph, powerlaw_cluster, rmat_graph,
-                               sbm_graph)
+                               sbm_graph, sbm_holdout_stream)
 from repro.data.tokens import synthetic_token_batches
 from repro.data.recsys import synthetic_click_batches
 
-__all__ = ["rmat_graph", "sbm_graph", "lfr_graph", "powerlaw_cluster",
+__all__ = ["rmat_graph", "sbm_graph", "sbm_holdout_stream", "lfr_graph",
+           "powerlaw_cluster",
            "synthetic_token_batches", "synthetic_click_batches"]

@@ -64,6 +64,41 @@ def sbm_graph(n_communities: int, size: int, p_in: float, p_out: float,
     return build_csr(src, dst, w, n, symmetrize=True, dedup=True), labels
 
 
+def sbm_holdout_stream(seed: int, *, n_communities: int = 8, size: int = 16,
+                       p_in: float = 0.4, p_out: float = 0.01,
+                       n_cap: int | None = None, e_cap: int | None = None,
+                       n_hold: int = 32, n_steps: int = 4, b_cap: int = 8):
+    """One streaming-Louvain scenario: an SBM with held-out edges fed back
+    as ``n_steps`` edge batches (round-robin striding over the holdout).
+
+    Returns (initial_graph, batches, full_graph).  The shared builder of
+    the dynamic/multistream tests, benchmarks and examples — the holdout
+    logic exists ONCE so they all measure the same stream.
+    """
+    from repro.core.delta import make_edge_batch
+
+    full, _ = sbm_graph(n_communities, size, p_in, p_out, seed=seed)
+    e = int(full.e_valid)
+    src = np.asarray(full.src)[:e]
+    dst = np.asarray(full.indices)[:e]
+    w = np.asarray(full.weights)[:e]
+    und = src < dst
+    us, ud, uw = src[und], dst[und], w[und]
+    rng = np.random.default_rng(seed)
+    hold = rng.choice(len(us), n_hold, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.concatenate([uw[keep], uw[keep]]),
+                     int(full.n_valid), n_cap=n_cap,
+                     e_cap=e_cap if e_cap is not None else e + 8)
+    batches = [make_edge_batch(us[hold[i::n_steps]], ud[hold[i::n_steps]],
+                               uw[hold[i::n_steps]], init.n_cap, b_cap=b_cap)
+               for i in range(n_steps)]
+    return init, batches, full
+
+
 def lfr_graph(n: int = 1000, seed: int = 42):
     """LFR benchmark via networkx; returns (CSRGraph, networkx graph)."""
     import networkx as nx

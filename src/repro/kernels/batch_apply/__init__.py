@@ -1,0 +1,5 @@
+"""Pallas kernel for the edge-batch sort-reduce group-resolve."""
+
+from repro.kernels.batch_apply.resolve import resolve_groups_pallas
+
+__all__ = ["resolve_groups_pallas"]

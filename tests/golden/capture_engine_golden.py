@@ -1,0 +1,88 @@
+"""Capture per-path golden memberships for the engine-equivalence tests.
+
+Run ONCE against a known-good tree (it was run against the pre-engine-refactor
+tree to freeze its exact outputs) and commit the resulting
+``tests/golden/engine_memberships.npz``:
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python tests/golden/capture_engine_golden.py
+
+``tests/test_engine_equiv.py`` then asserts every execution path still
+reproduces these memberships BIT-FOR-BIT on CPU.  Regenerating the file is a
+deliberate act (a semantics change), not part of the test run.
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from _oracle import oracle_graph_slots  # noqa: E402
+
+from repro.compat import make_mesh  # noqa: E402
+from repro.core.delta import make_edge_batch  # noqa: E402
+from repro.core.distributed import distributed_louvain  # noqa: E402
+from repro.core.dynamic import louvain_dynamic  # noqa: E402
+from repro.core.graph import build_csr  # noqa: E402
+from repro.core.louvain import LouvainConfig, louvain  # noqa: E402
+from repro.data import sbm_graph  # noqa: E402
+
+
+def corpora():
+    import networkx as nx
+    from repro.core.graph import from_networkx
+
+    lesmis = from_networkx(nx.les_miserables_graph())
+    sbm, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=2)
+    ring = from_networkx(nx.ring_of_cliques(8, 6))
+    return {"lesmis": lesmis, "sbm": sbm, "ring_of_cliques": ring}
+
+
+def dynamic_stream():
+    """The deterministic held-out SBM stream of test_oracle_golden."""
+    full, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=2)
+    e = int(full.e_valid)
+    src, dst, w, _ = oracle_graph_slots(full)
+    und = src < dst
+    us, ud, uw = src[und], dst[und], w[und]
+    rng = np.random.default_rng(0)
+    hold = rng.choice(len(us), 40, replace=False)
+    keep = np.ones(len(us), bool)
+    keep[hold] = False
+    init = build_csr(np.concatenate([us[keep], ud[keep]]),
+                     np.concatenate([ud[keep], us[keep]]),
+                     np.concatenate([uw[keep], uw[keep]]),
+                     int(full.n_valid), e_cap=e + 8)
+    batches = [make_edge_batch(us[hold[i::8]], ud[hold[i::8]],
+                               uw[hold[i::8]], init.n_cap, b_cap=8)
+               for i in range(8)]
+    return init, batches
+
+
+def main():
+    out = {}
+    for name, g in corpora().items():
+        out[f"single__{name}"] = louvain(g).membership
+        out[f"ell__{name}"] = louvain(
+            g, LouvainConfig(use_ell_kernel=True)).membership
+        mesh = make_mesh((1,), ("shard",))
+        mem, _, _ = distributed_louvain(g, mesh, ("shard",))
+        out[f"sharded__{name}"] = mem
+    init, batches = dynamic_stream()
+    out["dynamic__sbm_stream"] = louvain_dynamic(init, batches).membership
+    from repro.core.distributed_dynamic import louvain_dynamic_sharded
+    init, batches = dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    out["sharded_dynamic__sbm_stream"] = louvain_dynamic_sharded(
+        init, mesh, ("shard",), batches).membership
+
+    path = os.path.join(os.path.dirname(__file__), "engine_memberships.npz")
+    np.savez_compressed(path, **out)
+    for k, v in sorted(out.items()):
+        print(f"{k}: n={len(v)} n_comms={len(np.unique(v))}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

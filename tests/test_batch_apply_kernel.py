@@ -1,0 +1,154 @@
+"""Pallas batch-apply group-resolve kernel vs the XLA sort-reduce reference.
+
+The kernel (``repro.kernels.batch_apply``) replaces the post-sort resolve of
+``repro.core.delta.sort_reduce_apply_slots`` with one carry-chained scan; it
+must be BIT-identical to the XLA path — weights are selected, never summed,
+so equality is exact, not approximate.  Runs in interpret mode on CPU (the
+CI kernel step); the same code path compiles on TPU.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.delta import (_apply_edge_batch, make_edge_batch,
+                              sort_reduce_apply_slots)
+from repro.core.distributed import ShardedGraphSpec
+from repro.core.distributed_dynamic import apply_batch_shard
+from repro.core.graph import build_csr
+
+
+def _random_graph(rng, n=32, e_und=80, e_slack=64, self_loops=True):
+    us = rng.integers(0, n, e_und)
+    ud = rng.integers(0, n, e_und)
+    if not self_loops:
+        ud = np.where(us == ud, (ud + 1) % n, ud)
+    w = rng.uniform(0.25, 4.0, e_und).astype(np.float32)
+    off = us != ud
+    src = np.concatenate([us, ud[off]])
+    dst = np.concatenate([ud, us[off]])
+    ww = np.concatenate([w, w[off]])
+    return build_csr(src, dst, ww, n, e_cap=len(src) + e_slack)
+
+
+def _random_batch(rng, n_cap, bs, b_cap):
+    bsrc = rng.integers(0, n_cap, bs)
+    bdst = rng.integers(0, n_cap, bs)
+    bw = np.where(rng.random(bs) < 0.3, 0.0,
+                  rng.uniform(0.25, 4.0, bs)).astype(np.float32)
+    return make_edge_batch(bsrc, bdst, bw, n_cap, b_cap=b_cap)
+
+
+def _assert_graphs_equal(g1, g2):
+    for name, a, b in zip(g1._fields, g1, g2):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 31))
+def test_apply_backends_bit_identical(seed):
+    """graph', touched, e_new agree exactly across a random stream."""
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng)
+    for _ in range(3):
+        batch = _random_batch(rng, g.n_cap, int(rng.integers(1, 12)), 16)
+        g_x, t_x, e_x = _apply_edge_batch(g, batch, backend="xla")
+        g_p, t_p, e_p = _apply_edge_batch(g, batch, backend="pallas")
+        _assert_graphs_equal(g_x, g_p)
+        assert np.array_equal(np.asarray(t_x), np.asarray(t_p))
+        assert int(e_x) == int(e_p)
+        g = g_x
+
+
+def test_apply_backends_agree_on_deletes_and_reweights():
+    rng = np.random.default_rng(7)
+    g = _random_graph(rng, n=16, e_und=30, self_loops=True)
+    e = int(g.e_valid)
+    src = np.asarray(g.src)[:e]
+    dst = np.asarray(g.indices)[:e]
+    # delete 3 existing edges, reweight 3, insert 2, one self loop
+    bsrc = np.concatenate([src[:3], src[3:6], [1, 2], [5]])
+    bdst = np.concatenate([dst[:3], dst[3:6], [9, 10], [5]])
+    bw = np.concatenate([np.zeros(3), [9.0, 8.0, 7.0],
+                         [1.5, 2.5], [3.0]]).astype(np.float32)
+    batch = make_edge_batch(bsrc, bdst, bw, g.n_cap, b_cap=12)
+    g_x, t_x, e_x = _apply_edge_batch(g, batch, backend="xla")
+    g_p, t_p, e_p = _apply_edge_batch(g, batch, backend="pallas")
+    _assert_graphs_equal(g_x, g_p)
+    assert np.array_equal(np.asarray(t_x), np.asarray(t_p))
+    assert int(e_x) == int(e_p)
+
+
+def test_sharded_apply_backends_bit_identical():
+    """Per-shard apply (no collectives) agrees across backends shard-by-shard."""
+    rng = np.random.default_rng(3)
+    spec = ShardedGraphSpec(n_shards=4, v_per_shard=8, e_per_shard=48,
+                            n_pad=32)
+    sent = spec.sentinel
+    # per-shard slot arrays owned by shard 1
+    shard_ix = jnp.int32(1)
+    e_src = rng.integers(8, 16, 30).astype(np.int32)       # owned by shard 1
+    e_dst = rng.integers(0, 32, 30).astype(np.int32)
+    e_w = rng.uniform(0.5, 2.0, 30).astype(np.float32)
+    pad = np.full(spec.e_per_shard - 30, sent, np.int32)
+    src_l = jnp.asarray(np.concatenate([e_src, pad]))
+    dst_l = jnp.asarray(np.concatenate([e_dst, pad]))
+    w_l = jnp.asarray(np.concatenate([e_w, np.zeros(len(pad), np.float32)]))
+    b_src = jnp.asarray(rng.integers(0, 32, 8).astype(np.int32))
+    b_dst = jnp.asarray(rng.integers(0, 32, 8).astype(np.int32))
+    b_w = jnp.asarray(np.where(rng.random(8) < 0.4, 0.0,
+                               rng.uniform(0.5, 2.0, 8)).astype(np.float32))
+    outs = {}
+    for backend in ("xla", "pallas"):
+        outs[backend] = apply_batch_shard(
+            spec, shard_ix, src_l, dst_l, w_l, b_src, b_dst, b_w,
+            jnp.int32(8), None, backend)
+    for a, b in zip(outs["xla"], outs["pallas"]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resolve_handles_full_capacity_no_dead_slots():
+    """The kernel's trailing pad slot finalizes the last group even when
+    every input slot is live (no sentinel slot inside the array)."""
+    sent = 8
+    # 4 live groups, last group runs to the very end of the slot list
+    s_src = jnp.asarray([0, 0, 1, 2, 2, 3], jnp.int32)
+    s_dst = jnp.asarray([1, 1, 0, 2, 2, 3], jnp.int32)
+    s_w = jnp.asarray([1.0, 2.0, 1.0, 0.5, 3.0, 4.0], jnp.float32)
+    rank = jnp.asarray([0, 1, 0, 0, 1, 1], jnp.int32)
+    is_batch = jnp.asarray([False, True, False, False, True, True])
+    out = {}
+    for backend in ("xla", "pallas"):
+        out[backend] = sort_reduce_apply_slots(
+            s_src, s_dst, s_w, rank, is_batch, sent, 6, backend)
+    # graph outputs + e_new identical
+    for a, b in zip(out["xla"][:4], out["pallas"][:4]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert int(out["xla"][3]) == 4
+    # changed endpoints scatter to the same touched set
+    def touched(chg_src, chg_dst):
+        t = np.zeros(sent + 1, bool)
+        t[np.asarray(chg_src)] = True
+        t[np.asarray(chg_dst)] = True
+        t[sent] = False
+        return t
+    assert np.array_equal(touched(*out["xla"][4:]),
+                          touched(*out["pallas"][4:]))
+
+
+def test_kernel_multi_tile_carry():
+    """Slot lists longer than one kernel tile exercise the SMEM carry chain
+    (group spanning a tile boundary included)."""
+    rng = np.random.default_rng(11)
+    n = 700                     # > _BLOCK=512 -> at least two tiles
+    g = _random_graph(rng, n=64, e_und=n, e_slack=128)
+    batch = _random_batch(rng, g.n_cap, 40, 64)
+    g_x, t_x, e_x = _apply_edge_batch(g, batch, backend="xla")
+    g_p, t_p, e_p = _apply_edge_batch(g, batch, backend="pallas")
+    _assert_graphs_equal(g_x, g_p)
+    assert np.array_equal(np.asarray(t_x), np.asarray(t_p))
+    assert int(e_x) == int(e_p)

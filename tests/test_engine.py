@@ -1,0 +1,105 @@
+"""Unit tests for the unified move engine (repro.core.engine).
+
+Covers the satellite asks of the engine refactor: the Weyl gate hash lives
+in ONE place and selects ~1/gate_fraction of vertices per round, and the
+engine-level delta screening (community vs DF-style per-vertex granularity)
+behaves as documented.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine
+from repro.core.engine import (affected_frontier, gate_hash,
+                               normalize_screening, round_gate)
+
+
+def test_gate_constants_single_home():
+    """The magic constants exist only in engine.py (the dedup satellite)."""
+    import pathlib
+    root = pathlib.Path(engine.__file__).parents[1]   # src/repro
+    offenders = []
+    for py in root.rglob("*.py"):
+        if py.name == "engine.py":
+            continue
+        text = py.read_text()
+        if "-1640531535" in text or "40503" in text:
+            offenders.append(py.name)
+    assert not offenders, f"gate constants pasted outside engine.py: {offenders}"
+
+
+@pytest.mark.parametrize("gate_fraction", [2, 3, 4])
+def test_round_gate_selects_expected_fraction(gate_fraction):
+    """Each round selects ~1/gate_fraction of vertices (+-25% relative)."""
+    ids = jnp.arange(1 << 14)
+    for r in range(6):
+        frac = float(jnp.mean(round_gate(ids, jnp.int32(r), gate_fraction)))
+        expect = 1.0 / gate_fraction
+        assert abs(frac - expect) < 0.25 * expect, (r, frac, expect)
+
+
+def test_round_gate_covers_vertices_across_rounds():
+    """Over a few rounds nearly every vertex gets selected at least once."""
+    ids = jnp.arange(4096)
+    seen = np.zeros(4096, bool)
+    for r in range(8):
+        seen |= np.asarray(round_gate(ids, jnp.int32(r), 2))
+    assert seen.mean() > 0.95
+
+
+def test_round_gate_decorrelated_across_rounds():
+    """Adjacent rounds select materially different vertex sets: the round
+    increment rotates the Weyl sequence, so round r+1 mostly picks vertices
+    round r skipped (low overlap, near-complete union — a sweep of
+    gate_fraction rounds processes nearly everyone)."""
+    ids = jnp.arange(1 << 14)
+    g0 = np.asarray(round_gate(ids, jnp.int32(0), 2))
+    g1 = np.asarray(round_gate(ids, jnp.int32(1), 2))
+    overlap = (g0 & g1).mean() / max(g0.mean(), 1e-9)
+    assert overlap < 0.5, overlap         # not the same set again
+    assert (g0 | g1).mean() > 0.85        # a sweep covers nearly everyone
+
+
+def test_gate_hash_matches_weyl_form():
+    ids = jnp.asarray([0, 1, 17], jnp.int32)
+    h = np.asarray(gate_hash(ids, jnp.int32(3)))
+    expect = (np.asarray(ids, np.int32) * np.int32(-1640531535)
+              + np.int32(3) * np.int32(40503))
+    assert np.array_equal(h, expect)
+
+
+def test_affected_frontier_vertex_subset_of_community():
+    n_cap = 16
+    membership = jnp.asarray(
+        [0, 0, 0, 1, 1, 2, 2, 2, 3, 3, 4, 4, 4, 4, 5, 5, n_cap], jnp.int32)
+    touched = jnp.zeros(n_cap + 1, bool).at[jnp.asarray([1, 8])].set(True)
+    fv = affected_frontier(touched, membership, jnp.int32(16), "vertex")
+    fc = affected_frontier(touched, membership, jnp.int32(16), "community")
+    fv, fc = np.asarray(fv), np.asarray(fc)
+    # vertex mode: exactly the touched endpoints
+    assert np.array_equal(np.where(fv)[0], [1, 8])
+    # community mode: all members of communities 0 and 3
+    assert np.array_equal(np.where(fc)[0], [0, 1, 2, 8, 9])
+    assert not fv[-1] and not fc[-1]          # sentinel never seeds
+    assert np.all(fc[fv])                     # vertex ⊆ community
+
+
+def test_affected_frontier_respects_n_valid():
+    n_cap = 8
+    membership = jnp.zeros(n_cap + 1, jnp.int32)
+    touched = jnp.ones(n_cap + 1, bool)
+    for mode in ("vertex", "community"):
+        f = np.asarray(affected_frontier(touched, membership, jnp.int32(5),
+                                         mode))
+        assert np.array_equal(np.where(f)[0], np.arange(5)), mode
+
+
+def test_normalize_screening():
+    assert normalize_screening(True) == "community"
+    assert normalize_screening(False) is None
+    assert normalize_screening(None) is None
+    assert normalize_screening("vertex") == "vertex"
+    assert normalize_screening("community") == "community"
+    with pytest.raises(ValueError):
+        normalize_screening("bogus")

@@ -1,0 +1,93 @@
+"""Engine-equivalence: the refactored adapters reproduce the PRE-refactor
+memberships BIT-FOR-BIT on the seed corpora.
+
+``tests/golden/engine_memberships.npz`` was captured by running
+``tests/golden/capture_engine_golden.py`` against the tree as it stood
+before the three divergent round loops were unified behind
+``repro.core.engine.MoveEngine``.  These tests assert that every execution
+path — single-device sort-reduce, ELL (Pallas interpret on CPU), sharded
+static, single-device dynamic stream, and sharded dynamic stream — still
+produces exactly those memberships, element for element.
+
+If an INTENTIONAL semantics change lands (new tie-break, different gating),
+regenerate the goldens with the capture script and say so in the commit.
+All comparisons are CPU-deterministic: fixed corpora, fixed seeds, one
+device (the sharded paths run on a 1-shard mesh).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from golden import capture_engine_golden as capture
+
+from repro.compat import make_mesh
+from repro.core.distributed import distributed_louvain
+from repro.core.distributed_dynamic import louvain_dynamic_sharded
+from repro.core.dynamic import louvain_dynamic
+from repro.core.louvain import LouvainConfig, louvain
+
+_GOLD_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                          "engine_memberships.npz")
+
+
+@pytest.fixture(scope="module")
+def gold():
+    return np.load(_GOLD_PATH)
+
+
+@pytest.fixture(scope="module")
+def corpora():
+    return capture.corpora()
+
+
+# Tier-1 pins every path on ONE corpus each (compiles dominate the cost);
+# the remaining corpora run with --runslow.
+_slow = pytest.mark.slow
+
+
+@pytest.mark.parametrize("name", ["lesmis", "sbm", "ring_of_cliques"])
+def test_single_device_bit_for_bit(gold, corpora, name):
+    mem = louvain(corpora[name]).membership
+    assert np.array_equal(mem, gold[f"single__{name}"])
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_ell_kernel_bit_for_bit(gold, corpora, name):
+    mem = louvain(corpora[name],
+                  LouvainConfig(use_ell_kernel=True)).membership
+    assert np.array_equal(mem, gold[f"ell__{name}"])
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_sharded_static_bit_for_bit(gold, corpora, name):
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora[name], mesh, ("shard",))
+    assert np.array_equal(mem, gold[f"sharded__{name}"])
+
+
+def test_dynamic_stream_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    mem = louvain_dynamic(init, batches).membership
+    assert np.array_equal(mem, gold["dynamic__sbm_stream"])
+
+
+def test_sharded_dynamic_stream_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    mem = louvain_dynamic_sharded(init, mesh, ("shard",), batches).membership
+    assert np.array_equal(mem, gold["sharded_dynamic__sbm_stream"])
+
+
+def test_pallas_apply_backend_bit_for_bit_through_stream(gold):
+    """The Pallas batch-apply backend leaves the whole dynamic stream's
+    final membership unchanged (apply is bit-identical, so everything
+    downstream is too)."""
+    init, batches = capture.dynamic_stream()
+    mem = louvain_dynamic(init, batches, apply_backend="pallas").membership
+    assert np.array_equal(mem, gold["dynamic__sbm_stream"])

@@ -1,0 +1,152 @@
+"""Batched multi-stream serving (repro.core.multistream).
+
+The batched driver must be a pure batching transform: each stream's result
+through ``louvain_dynamic_batched`` equals what that stream would get alone,
+and the batched pass loop handles per-stream convergence (tolerance
+freezing) and capacity discipline (loud overflow, no silent growth).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.delta import make_edge_batch
+from repro.core.dynamic import louvain_dynamic
+from repro.core.graph import build_csr
+from repro.core.louvain import (LouvainConfig, louvain,
+                                membership_modularity, pad_membership)
+from repro.core.multistream import (louvain_batched, louvain_dynamic_batched,
+                                    stack_batches, stack_graphs)
+from repro.data import sbm_graph, sbm_holdout_stream
+
+
+def _stream_case(seed, n_cap=128, e_cap=1400, n_hold=32, n_steps=4,
+                 b_cap=8):
+    init, batches, _ = sbm_holdout_stream(
+        seed, n_cap=n_cap, e_cap=e_cap, n_hold=n_hold, n_steps=n_steps,
+        b_cap=b_cap)
+    return init, batches
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    cases = [_stream_case(seed) for seed in (10, 11, 12, 13)]
+    return [c[0] for c in cases], [c[1] for c in cases]
+
+
+def test_stack_graphs_rejects_mixed_capacities():
+    g1, _ = _stream_case(0, e_cap=1400)
+    g2, _ = _stream_case(1, e_cap=1500)
+    with pytest.raises(ValueError, match="capacities differ"):
+        stack_graphs([g1, g2])
+
+
+def test_stack_batches_rejects_mixed_capacities():
+    _, b1 = _stream_case(0, b_cap=8)
+    _, b2 = _stream_case(1, b_cap=16)
+    with pytest.raises(ValueError, match="capacities differ"):
+        stack_batches([b1[0], b2[0]])
+
+
+def test_batched_cold_matches_per_stream_louvain(fleet):
+    """Cold batched pass loop == per-stream louvain(), membership for
+    membership (identical engine, identical rounds — the vmap must be
+    semantics-preserving)."""
+    graphs, _ = fleet
+    res = louvain_batched(stack_graphs(graphs))
+    for s, g in enumerate(graphs):
+        solo = louvain(g)
+        n = int(g.n_valid)
+        assert np.array_equal(np.asarray(res.membership[s, :n]),
+                              solo.membership), s
+        assert int(res.n_communities[s]) == solo.n_communities
+
+
+def test_batched_dynamic_matches_sequential_dynamic(fleet):
+    """louvain_dynamic_batched == S independent louvain_dynamic runs."""
+    graphs, streams = fleet
+    res = louvain_dynamic_batched(graphs, streams, track_modularity=True)
+    for s in range(len(graphs)):
+        solo = louvain_dynamic(graphs[s], streams[s])
+        assert np.array_equal(res.stream_membership(s), solo.membership), s
+        q = membership_modularity(solo.graph, solo.membership)
+        assert abs(float(res.modularity[s]) - q) < 1e-5
+
+
+def test_batched_dynamic_vertex_screening(fleet):
+    """Per-vertex affected flags flow through the batched path too and
+    produce strictly smaller seed frontiers."""
+    graphs, streams = fleet
+    res_c = louvain_dynamic_batched(graphs, streams, screening="community",
+                                    track_modularity=True)
+    res_v = louvain_dynamic_batched(graphs, streams, screening="vertex",
+                                    track_modularity=True)
+    assert np.all(res_v.frontier_sizes <= res_c.frontier_sizes)
+    assert np.all(res_v.frontier_sizes.sum(0) <
+                  res_c.frontier_sizes.sum(0))
+    # quality stays at the community-screened level on these corpora
+    assert np.all(res_v.modularity > res_c.modularity - 0.02)
+
+
+def test_batched_fallback_path_matches_sequential(fleet):
+    """A deliberately bad warm start (all singletons) makes step 0's move
+    run >1 sweep, forcing the optimistic pipeline to redo the stream
+    through the per-step validated loop + general pass loop — results must
+    still equal the sequential driver exactly."""
+    graphs, streams = fleet
+    prevs = [np.arange(int(g.n_valid), dtype=np.int32) for g in graphs]
+    res = louvain_dynamic_batched(graphs, streams, prevs=prevs)
+    for s in range(len(graphs)):
+        solo = louvain_dynamic(graphs[s], streams[s], prev=prevs[s])
+        assert np.array_equal(res.stream_membership(s), solo.membership), s
+
+
+def test_batched_zero_step_streams(fleet):
+    """An idle fleet (no pending updates) returns the warm memberships
+    unchanged, like louvain_dynamic(graph, [])."""
+    graphs, _ = fleet
+    prevs = [louvain(g).membership for g in graphs]
+    res = louvain_dynamic_batched(graphs, [[] for _ in graphs], prevs=prevs)
+    assert res.frontier_sizes.shape[0] == 0
+    for s, p in enumerate(prevs):
+        assert np.array_equal(res.stream_membership(s), p)
+
+
+def test_batched_accepts_sentinel_padded_prevs(fleet):
+    """prevs in the (n_cap + 1,) sentinel layout (pad_membership output)
+    are accepted, same contract as louvain_dynamic."""
+    graphs, streams = fleet
+    flat = [louvain(g).membership for g in graphs]
+    padded = [pad_membership(p, graphs[0].n_cap) for p in flat]
+    res_flat = louvain_dynamic_batched(graphs, streams, prevs=flat)
+    res_pad = louvain_dynamic_batched(graphs, streams, prevs=padded)
+    assert np.array_equal(res_flat.membership, res_pad.membership)
+
+
+def test_batched_dynamic_pallas_apply_matches(fleet):
+    graphs, streams = fleet
+    res_x = louvain_dynamic_batched(graphs, streams)
+    res_p = louvain_dynamic_batched(graphs, streams, apply_backend="pallas")
+    assert np.array_equal(res_x.membership, res_p.membership)
+
+
+def test_batched_overflow_is_loud():
+    full, _ = sbm_graph(n_communities=4, size=8, p_in=0.5, p_out=0.05,
+                        seed=1)
+    e = int(full.e_valid)
+    g = build_csr(np.asarray(full.src)[:e], np.asarray(full.indices)[:e],
+                  np.asarray(full.weights)[:e], int(full.n_valid),
+                  e_cap=e + 2)   # almost no headroom
+    # a batch of brand-new edges that cannot fit
+    batch = make_edge_batch([0, 1, 2, 3], [17, 18, 19, 20],
+                            [1.0, 1.0, 1.0, 1.0], g.n_cap, b_cap=4)
+    with pytest.raises(ValueError, match="overflows capacity"):
+        louvain_dynamic_batched([g, g], [[batch], [batch]],
+                                prevs=[louvain(g).membership] * 2)
+
+
+def test_batched_rejects_ell_config(fleet):
+    graphs, _ = fleet
+    with pytest.raises(ValueError, match="sort-reduce"):
+        louvain_batched(stack_graphs(graphs),
+                        LouvainConfig(use_ell_kernel=True))

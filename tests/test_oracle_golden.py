@@ -32,7 +32,36 @@ def _graphs():
     lesmis = from_networkx(nx.les_miserables_graph())
     sbm, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=2)
     ring = from_networkx(nx.ring_of_cliques(8, 6))
-    return {"lesmis": lesmis, "sbm": sbm, "ring_of_cliques": ring}
+
+    # Weighted corpus: the SBM topology with deterministic non-uniform
+    # weights (intra-community edges heavier on average, so the planted
+    # structure survives reweighting).
+    e = int(sbm.e_valid)
+    s_src = np.asarray(sbm.src)[:e]
+    s_dst = np.asarray(sbm.indices)[:e]
+    und = s_src < s_dst
+    us, ud = s_src[und], s_dst[und]
+    rng = np.random.default_rng(7)
+    uw = rng.uniform(0.5, 3.0, len(us)).astype(np.float32)
+    weighted = build_csr(np.concatenate([us, ud]), np.concatenate([ud, us]),
+                         np.concatenate([uw, uw]), int(sbm.n_valid))
+
+    # Self-loop-heavy corpus: ring of cliques with a weighted self loop on
+    # every other vertex (self loops stress the K_i / 2m conventions: one
+    # directed slot, excluded from K_{i->c}).
+    e = int(ring.e_valid)
+    r_src = np.asarray(ring.src)[:e]
+    r_dst = np.asarray(ring.indices)[:e]
+    r_w = np.asarray(ring.weights)[:e]
+    loops = np.arange(0, int(ring.n_valid), 2, dtype=np.int64)
+    selfloops = build_csr(np.concatenate([r_src, loops]),
+                          np.concatenate([r_dst, loops]),
+                          np.concatenate([r_w, np.full(len(loops), 2.0,
+                                                       np.float32)]),
+                          int(ring.n_valid))
+
+    return {"lesmis": lesmis, "sbm": sbm, "ring_of_cliques": ring,
+            "sbm_weighted": weighted, "ring_selfloops": selfloops}
 
 
 @pytest.fixture(scope="module", params=list(_graphs()))
