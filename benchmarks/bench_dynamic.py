@@ -15,18 +15,35 @@ The ``pallas`` column re-runs the dynamic stream with the Pallas batch-apply
 kernel (``apply_backend="pallas"``, interpret mode on CPU) and asserts its
 final membership is BIT-IDENTICAL to the sort-reduce apply — the kernel
 acceptance gate, recorded per row as ``pallas_match``.
+
+Scan-backend coverage (``BENCH_dynamic.json``):
+
+  * stream rows compare the full-scan and frontier-compacted scanners end
+    to end (``updates_per_s_compact`` / ``compact_speedup`` /
+    ``compact_match`` — the compacted backend must be bit-identical);
+  * ``kind="scan"`` rows time ONE move-round scan per backend at swept
+    frontier fractions — the acceptance artifact that per-round scan time
+    scales DOWN with |F| (compact beats the full e_cap scan at
+    |F|/n <= ~10%; past the work cap it falls back and merely matches).
 """
 
 from __future__ import annotations
 
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit_csv, time_fn
+from repro.configs.louvain_arch import compact_work_cap
 from repro.core.delta import make_edge_batch
 from repro.core.dynamic import louvain_dynamic
 from repro.core.graph import build_csr
+from repro.core.local_move import best_moves, compact_best_moves
 from repro.core.louvain import (LouvainConfig, louvain, louvain_modularity,
-                                membership_modularity as _q)
+                                membership_modularity as _q, pad_membership)
+from repro.core.modularity import community_weights
 from repro.data import sbm_graph
 
 
@@ -53,8 +70,59 @@ def _holdout_stream(small: bool, seed: int = 0):
     return init, (us[hold], ud[hold], uw[hold]), e
 
 
+def scan_round_timings(graph, prev, fracs=(0.02, 0.05, 0.10, 0.25, 1.0),
+                       repeats: int = 5):
+    """Time ONE best-move scan per backend at swept frontier fractions.
+
+    This isolates exactly what the compacted scanner changes — the
+    per-round scan — from pass-loop effects.  Uses the converged membership
+    as the (C, Sigma) snapshot (the streaming regime's actual state).
+    """
+    n_cap = graph.n_cap
+    n = int(graph.n_valid)
+    k = graph.vertex_weights()
+    m = graph.total_weight()
+    comm = jnp.asarray(pad_membership(prev, n_cap))
+    sigma = community_weights(graph, comm)
+    work_cap = compact_work_cap(graph.e_cap)
+
+    full = jax.jit(lambda fr: best_moves(graph, comm, sigma, k, fr, m))
+    comp = jax.jit(lambda fr: compact_best_moves(graph, comm, sigma, k, fr,
+                                                 m, work_cap))
+
+    def best_ms(fn, fr):
+        jax.block_until_ready(fn(fr))          # warm / compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(fr))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for frac in fracs:
+        fr = np.zeros(n_cap + 1, bool)
+        fr[rng.choice(n, max(1, int(frac * n)), replace=False)] = True
+        fr = jnp.asarray(fr)
+        t_full = best_ms(full, fr)
+        t_comp = best_ms(comp, fr)
+        overflow = bool(comp(fr)[2])
+        rows.append({
+            "kind": "scan",
+            "frontier_frac": frac,
+            "frontier_size": int(jnp.sum(fr)),
+            "t_scan_full_ms": round(t_full, 4),
+            "t_scan_compact_ms": round(t_comp, 4),
+            "compact_speedup": round(t_full / max(t_comp, 1e-9), 2),
+            "work_cap": work_cap,
+            "overflow_fallback": overflow,
+        })
+    return rows
+
+
 def run(small: bool = True, repeats: int = 2,
-        batch_sizes=(1, 4, 16, 64)) -> None:
+        batch_sizes=(1, 4, 16, 64)) -> list:
     init, (us, ud, uw), _ = _holdout_stream(small)
     prev = louvain(init).membership
     rows = []
@@ -68,8 +136,21 @@ def run(small: bool = True, repeats: int = 2,
                    for i in range(n_batches)]
 
         t_dyn, dyn = time_fn(louvain_dynamic, init, batches, prev=prev,
+                             config=LouvainConfig(scan_backend="full"),
                              repeats=repeats)
         q_dyn = _q(dyn.graph, dyn.membership)
+
+        # Frontier-compacted scanner: the same stream, scan work
+        # proportional to |F|.  Must be bit-identical (compact_match) —
+        # the hard gate lives in tests/test_engine_equiv.py.
+        t_cmp, dyn_cmp = time_fn(louvain_dynamic, init, batches, prev=prev,
+                                 config=LouvainConfig(scan_backend="compact"),
+                                 repeats=repeats)
+        compact_match = bool(np.array_equal(dyn.membership,
+                                            dyn_cmp.membership))
+        if not compact_match:
+            print(f"WARNING: compact scan backend diverged from full scan "
+                  f"at batch_size={bs}")
 
         # Pallas batch-apply: must reproduce the stream bit-for-bit.  A
         # divergence is recorded (pallas_match=False survives into the
@@ -98,27 +179,44 @@ def run(small: bool = True, repeats: int = 2,
 
         fr = [s.frontier_fraction for s in dyn.batch_stats]
         rows.append({
+            "kind": "stream",
             "batch_size": bs, "n_batches": n_batches,
             "updates_per_s_dynamic": round(used / t_dyn, 1),
             "updates_per_s_recompute": round(used / t_cold, 1),
             "updates_per_s_pallas_apply": round(used / t_pal, 1),
+            "updates_per_s_compact": round(used / t_cmp, 1),
             "speedup": round(t_cold / t_dyn, 2),
+            "compact_speedup": round(t_dyn / t_cmp, 2),
             "pallas_match": pallas_match,
+            "compact_match": compact_match,
             "frontier_frac_mean": round(float(np.mean(fr)), 4),
             "q_dynamic": round(q_dyn, 4),
             "q_recompute": round(q_cold, 4),
         })
     emit_csv(rows, ["batch_size", "n_batches", "updates_per_s_dynamic",
                     "updates_per_s_recompute", "updates_per_s_pallas_apply",
-                    "speedup", "pallas_match",
+                    "updates_per_s_compact", "speedup", "compact_speedup",
+                    "pallas_match", "compact_match",
                     "frontier_frac_mean", "q_dynamic", "q_recompute"])
-    return rows
+
+    # Per-round scan timings per backend (the |F|-scaling acceptance rows).
+    scan_rows = scan_round_timings(init, prev,
+                                   repeats=5 if small else 7)
+    emit_csv(scan_rows, ["frontier_frac", "frontier_size", "t_scan_full_ms",
+                         "t_scan_compact_ms", "compact_speedup", "work_cap",
+                         "overflow_fallback"])
+    return rows + scan_rows
 
 
 if __name__ == "__main__":
     import argparse
 
+    from benchmarks.common import emit_json
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
-    run(small=not args.full, repeats=3 if args.full else 2)
+    t0 = time.perf_counter()
+    all_rows = run(small=not args.full, repeats=3 if args.full else 2)
+    emit_json("dynamic", all_rows, seconds=time.perf_counter() - t0,
+              small=not args.full)

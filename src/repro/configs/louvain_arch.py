@@ -33,6 +33,72 @@ from repro.core.engine import round_gate
 
 F32, I32 = jnp.float32, jnp.int32
 
+# ---------------------------------------------------------------------------
+# Scanner-backend policy (the ``LouvainConfig.scan_backend`` knob).
+# ---------------------------------------------------------------------------
+
+#: Accepted values of ``LouvainConfig.scan_backend``.
+SCAN_BACKENDS = ("auto", "full", "compact", "ell", "ell_fused")
+
+#: ``"auto"`` picks the frontier-compacted sort-reduce scanner when the seed
+#: frontier covers at most this fraction of the vertices (the measured
+#: crossover regime: compact beats the full e_cap scan comfortably at
+#: |F|/n <= ~10%, and its overflow fallback makes larger frontiers merely
+#: neutral, not wrong).
+AUTO_COMPACT_MAX_FRONTIER_FRAC = 0.10
+
+#: Compact work-buffer capacity as a fraction of ``e_cap``.  Frontier edge
+#: slots beyond the cap trigger the in-program fallback to the full scan,
+#: so this bounds compact-scan memory/compile shape, not correctness.
+COMPACT_WORK_FRAC = 0.25
+
+#: Work-buffer floor — tiny graphs keep a sortable minimum.
+COMPACT_WORK_MIN = 64
+
+
+def compact_work_cap(e_cap: int, frac: float = COMPACT_WORK_FRAC) -> int:
+    """Static work-buffer capacity for the compacted scanner on ``e_cap``."""
+    return max(1, min(int(e_cap), max(COMPACT_WORK_MIN, int(e_cap * frac))))
+
+
+def resolve_scan_backend(backend: str, *, use_ell_kernel: bool = False,
+                         frontier_frac: float | None = None) -> str:
+    """Map the ``scan_backend`` knob to a concrete scanner for ONE pass.
+
+    ``frontier_frac`` is the seed-frontier fraction |F|/n of the pass when a
+    delta-screened / warm frontier is active, ``None`` for a cold full-
+    frontier pass.  Returns one of ``"full" | "compact" | "ell" |
+    "ell_fused"``:
+
+      * explicit values pass through (``"compact"`` still only engages when
+        a frontier is active — a cold pass re-scans everything anyway);
+      * ``"auto"`` + ELL family -> the fused kernel (it replaces the
+        scan-then-apply round-trip, bit-identically);
+      * ``"auto"`` + active small frontier -> ``"compact"``;
+      * otherwise the full sort-reduce scan.
+    """
+    if backend not in SCAN_BACKENDS:
+        raise ValueError(f"scan_backend must be one of {SCAN_BACKENDS}; "
+                         f"got {backend!r}")
+    if use_ell_kernel or backend in ("ell", "ell_fused"):
+        if backend == "compact":
+            raise ValueError(
+                "scan_backend='compact' contradicts use_ell_kernel=True — "
+                "the compacted scanner is a sort-reduce backend; use "
+                "scan_backend='auto'/'ell_fused' for the ELL family or "
+                "drop use_ell_kernel")
+        if backend in ("auto", "ell_fused"):
+            return "ell_fused"
+        return "ell"
+    if backend == "compact":
+        return "compact" if frontier_frac is not None else "full"
+    if backend == "auto":
+        if (frontier_frac is not None
+                and frontier_frac <= AUTO_COMPACT_MAX_FRONTIER_FRAC):
+            return "compact"
+        return "full"
+    return "full"
+
 # name -> (|V|, |E| directed slots, phase)
 LOUVAIN_SHAPES: Dict[str, Tuple[int, int, str]] = {
     "web_3.8B_move": (50_636_154, 3_800_000_000, "move"),

@@ -222,8 +222,9 @@ def louvain_dynamic_sharded(
     one cold sharded pass loop to produce it.  Batches of equal ``b_cap``
     reuse one compiled apply; mixed capacities recompile per distinct size.
     ``screening`` picks the seed-frontier policy (``True``/``"community"``,
-    ``"vertex"`` for DF-style per-vertex flags, ``False`` for pure
-    naive-dynamic); ``apply_backend`` the batch-apply group-resolve.
+    ``"vertex"`` for DF-style per-vertex flags, ``"auto"`` to pick per
+    batch from the touched-set size, ``False`` for pure naive-dynamic);
+    ``apply_backend`` the batch-apply group-resolve.
     """
     t_start = time.perf_counter()
     screen_mode = normalize_screening(screening)

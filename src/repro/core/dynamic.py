@@ -103,7 +103,13 @@ def louvain_dynamic(
     seed-frontier policy: ``True``/``"community"`` (touched endpoints plus
     their whole communities), ``"vertex"`` (DF-Louvain-style per-vertex
     affected flags — finer; pruning grows the frontier from actual movers),
-    or ``False`` (pure naive-dynamic: warm start over ALL vertices).  With
+    ``"auto"`` (per-batch granularity from the touched-set size — vertex
+    for small deltas, community for bulky ones; an on-device select, no
+    per-batch host sync), or ``False`` (pure naive-dynamic: warm start over
+    ALL vertices).  ``config.scan_backend`` additionally routes the move
+    phase through the frontier-compacted scanner when the screened frontier
+    is small (``"auto"``/``"compact"`` — bit-identical results, scan work
+    proportional to |F|).  With
     ``grow_capacity`` (the default) a batch that would overflow ``e_cap``
     re-buckets host-side into doubled capacity instead of raising — one
     recompile per growth step, then the stream continues in capacity.

@@ -21,7 +21,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import EngineConfig, MoveEngine, MoveState
+from repro.core.engine import (EngineConfig, MoveEngine, MoveState,
+                               gated_move_mask, round_gate)
 from repro.core.graph import CSRGraph, to_ell_blocks
 from repro.core.local_move import SortReduceScanner, best_moves
 from repro.core.modularity import community_weights
@@ -70,9 +71,66 @@ class ELLScanner(SortReduceScanner):
         return best_c, best_dq
 
 
+class FusedELLScanner(ELLScanner):
+    """Engine backend: the FUSED Pallas scan+apply round on ELL tiles.
+
+    Supplies the engine's optional ``decide_moves`` hook: each tile leaves
+    the fused kernel with its whole move decision made (scan + improvement
+    test + in-kernel round gate + singleton guard + frontier mask), so the
+    engine skips its generic gate/guard recompute — one kernel trip per tile
+    instead of scan kernel + XLA apply round-trip.  Hub vertices beyond the
+    widest ELL tile take the sort-reduce scan + the engine's own
+    ``gated_move_mask`` — the same boolean the kernel computes, so the two
+    halves compose bit-identically with the scan-only path.
+    """
+
+    def __init__(self, graph: CSRGraph, blocks, leftover, k, m, *,
+                 use_pallas: bool, interpret: bool, gate_fraction: int):
+        super().__init__(graph, blocks, leftover, k, m,
+                         use_pallas=use_pallas, interpret=interpret)
+        self.gate_fraction = gate_fraction
+
+    def decide_moves(self, comm, sigma, frontier, comm_l, sizes, round_ix):
+        graph, k, m = self.graph, self.k_local, self.m
+        n_cap = graph.n_cap
+        front = frontier & self._valid          # frontier & move-valid
+        best_c = jnp.full((n_cap + 1,), n_cap, jnp.int32)
+        best_dq = jnp.full((n_cap + 1,), -jnp.inf, jnp.float32)
+        do_move = jnp.zeros((n_cap + 1,), bool)
+
+        for block in self.blocks:
+            ins = scan_ops.prepare_fused_inputs(block, comm, sigma, sizes,
+                                                k, front, n_cap)
+            bc, bdq, mv = scan_ops.louvain_fused(
+                *ins, m, round_ix, gate_fraction=self.gate_fraction,
+                sentinel=n_cap, use_pallas=self.use_pallas,
+                interpret=self.interpret)
+            # Pad rows carry vertex id n_cap -> land in the sentinel slot.
+            best_c = best_c.at[block.rows].set(bc)
+            best_dq = best_dq.at[block.rows].set(bdq)
+            do_move = do_move.at[block.rows].set(mv > 0)
+
+        if self.leftover.shape[0]:
+            sc, sdq = best_moves(graph, comm, sigma, k, frontier, m)
+            gate = (round_gate(self.local_ids, round_ix, self.gate_fraction)
+                    if self.gate_fraction > 1 else None)
+            mv_all = gated_move_mask(sc, sdq, comm_l, sizes, frontier, n_cap,
+                                     self.move_valid, gate)
+            best_c = best_c.at[self.leftover].set(sc[self.leftover])
+            best_dq = best_dq.at[self.leftover].set(
+                jnp.where(front[self.leftover], sdq[self.leftover],
+                          -jnp.inf))
+            do_move = do_move.at[self.leftover].set(mv_all[self.leftover])
+
+        best_c = best_c.at[n_cap].set(n_cap)
+        do_move = do_move.at[n_cap].set(False)
+        return do_move, best_c, best_dq
+
+
 @functools.lru_cache(maxsize=None)
 def _ell_runner(n_blocks: int, use_pallas: bool, interpret: bool,
-                max_iterations: int, use_pruning: bool, gate_fraction: int):
+                max_iterations: int, use_pruning: bool, gate_fraction: int,
+                fused: bool = False):
     """One jit'd engine loop per static config; graph/blocks are arguments
     (not closure constants), so calls with equal shapes share the executable."""
     config = EngineConfig(max_iterations=max_iterations,
@@ -82,8 +140,14 @@ def _ell_runner(n_blocks: int, use_pallas: bool, interpret: bool,
     @jax.jit
     def run(graph, blocks, leftover, k, m, comm0, sigma0, frontier0,
             tolerance):
-        scanner = ELLScanner(graph, blocks, leftover, k, m,
-                             use_pallas=use_pallas, interpret=interpret)
+        if fused:
+            scanner = FusedELLScanner(graph, blocks, leftover, k, m,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret,
+                                      gate_fraction=gate_fraction)
+        else:
+            scanner = ELLScanner(graph, blocks, leftover, k, m,
+                                 use_pallas=use_pallas, interpret=interpret)
         st = MoveEngine(scanner, config).run(comm0, sigma0, frontier0,
                                              tolerance)
         return st.comm, st.iters, st.dq_sum
@@ -104,6 +168,7 @@ def move_phase_ell(
     comm0: jax.Array | None = None,
     sigma0: jax.Array | None = None,
     frontier0: jax.Array | None = None,
+    fused: bool = False,
 ):
     """ELL-kernel local-moving phase: returns (comm, iters, dq_sum).
 
@@ -111,6 +176,9 @@ def move_phase_ell(
     engine loop.  ``comm0``/``sigma0``/``frontier0`` warm-start the sweep
     from an arbitrary membership snapshot (defaults: singleton start over
     all valid vertices), mirroring the sort-reduce ``_move_phase``.
+    ``fused=True`` runs the fused scan+apply kernel (``FusedELLScanner``)
+    instead of the scan-only kernel + engine apply — same memberships, bit
+    for bit.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -132,6 +200,6 @@ def move_phase_ell(
     frontier0 = valid if frontier0 is None else (frontier0 & valid)
 
     run = _ell_runner(len(blocks), use_pallas, interpret,
-                      max_iterations, use_pruning, gate_fraction)
+                      max_iterations, use_pruning, gate_fraction, fused)
     return run(graph, tuple(blocks), leftover, k, m, comm0, sigma0,
                frontier0, jnp.float32(tolerance))

@@ -101,6 +101,31 @@ class EngineConfig:
     gate_fraction: int = 2
 
 
+def gated_move_mask(best_c: jax.Array, best_dq: jax.Array, comm_l: jax.Array,
+                    sizes: jax.Array, frontier: jax.Array, sent: int,
+                    move_valid: Optional[jax.Array] = None,
+                    gate: Optional[jax.Array] = None) -> jax.Array:
+    """The engine's move decision from a scan result — ONE home.
+
+    Combines the improvement test, the singleton-swap guard (Vite lineage:
+    two singleton communities may only merge towards the smaller id, breaking
+    A<->B oscillation), the frontier/validity masks and the round gate.
+    Scanner backends that fuse the decision into their kernel (the fused ELL
+    round) must reproduce exactly this boolean, and reuse this function for
+    any rows their kernel does not cover.
+    """
+    own_single = sizes[comm_l] == 1
+    tgt_single = sizes[jnp.minimum(best_c, sent)] == 1
+    swap_blocked = own_single & tgt_single & (best_c > comm_l)
+    do_move = ((best_dq > 0.0) & (best_c != comm_l) & (best_c < sent)
+               & frontier & ~swap_blocked)
+    if move_valid is not None:
+        do_move = do_move & move_valid
+    if gate is not None:
+        do_move = do_move & gate
+    return do_move
+
+
 class MoveEngine:
     """The one BSP round loop.  ``scanner`` supplies the backend surface:
 
@@ -120,6 +145,13 @@ class MoveEngine:
       ``gather_comm(comm_l)``         -> (sent + 1,) replicated membership
       ``gather_mask(mask_l)``         -> (sent + 1,) replicated bool
       ``mark_neighbors(moved)``       -> (L,) bool neighbors-of-movers
+
+    optional method
+      ``decide_moves(comm, sigma, frontier, comm_l, sizes, round_ix)``
+          -> (do_move (L,) bool, best_c (L,), best_dq (L,)) — a backend that
+          fuses scan + gate + guard into one kernel (the fused Pallas ELL
+          round) supplies the whole decision; it must equal what
+          ``scan`` + ``gated_move_mask`` would produce, bit for bit.
     """
 
     def __init__(self, scanner, config: EngineConfig):
@@ -132,27 +164,21 @@ class MoveEngine:
         sc, cfg = self.scanner, self.config
         sent = sc.sentinel
         frontier = st.frontier if cfg.use_pruning else frontier0
-
-        best_c, best_dq = sc.scan(st.comm, st.sigma, frontier)
         comm_l = sc.comm_local(st.comm)
 
         gate = (round_gate(sc.local_ids, round_ix, cfg.gate_fraction)
                 if cfg.gate_fraction > 1 else None)
-
-        # Singleton-swap guard (Vite lineage): two singleton communities may
-        # only merge towards the smaller id, breaking A<->B oscillation.
         sizes = sc.psum(jax.ops.segment_sum(
             sc.count_ones(comm_l), comm_l, num_segments=sent + 1))
-        own_single = sizes[comm_l] == 1
-        tgt_single = sizes[jnp.minimum(best_c, sent)] == 1
-        swap_blocked = own_single & tgt_single & (best_c > comm_l)
 
-        do_move = ((best_dq > 0.0) & (best_c != comm_l) & (best_c < sent)
-                   & frontier & ~swap_blocked)
-        if sc.move_valid is not None:
-            do_move = do_move & sc.move_valid
-        if gate is not None:
-            do_move = do_move & gate
+        decide = getattr(sc, "decide_moves", None)
+        if decide is not None:
+            do_move, best_c, best_dq = decide(st.comm, st.sigma, frontier,
+                                              comm_l, sizes, round_ix)
+        else:
+            best_c, best_dq = sc.scan(st.comm, st.sigma, frontier)
+            do_move = gated_move_mask(best_c, best_dq, comm_l, sizes,
+                                      frontier, sent, sc.move_valid, gate)
 
         moved_k = jnp.where(do_move, sc.k_local, 0.0)
         sigma = sc.combine_sigma(
@@ -249,6 +275,16 @@ class ReplicatedScannerBase:
 # ---------------------------------------------------------------------------
 
 
+#: ``screening="auto"`` uses DF-style per-vertex flags while the touched set
+#: stays at or below n_valid / AUTO_SCREEN_TOUCHED_DENOM, and falls back to
+#: the community-granular set for bulkier batches.  Small deltas are where
+#: the ~8x-smaller vertex frontiers pay off (pruning re-grows them from
+#: actual movers); a batch that perturbs a sizable fraction of the graph
+#: shifts whole communities, where the coarser, safer set converges in
+#: fewer sweeps for the same scan bill.
+AUTO_SCREEN_TOUCHED_DENOM = 16
+
+
 @functools.partial(jax.jit, static_argnames=("mode",))
 def affected_frontier(touched: jax.Array, membership: jax.Array,
                       n_valid: jax.Array, mode: str = "community") -> jax.Array:
@@ -264,33 +300,44 @@ def affected_frontier(touched: jax.Array, membership: jax.Array,
         touched endpoints seed the frontier; with vertex pruning on, the
         frontier then grows outward from actual movers, so the engine
         re-scans strictly less of the graph per update.
+    ``"auto"`` — pick per batch from the touched-set size (an on-device
+        select, so streaming drivers stay free of per-batch host syncs):
+        vertex granularity when |touched| <= n_valid /
+        ``AUTO_SCREEN_TOUCHED_DENOM``, community granularity above.
     """
     cap = membership.shape[0] - 1
     idx = jnp.arange(cap + 1)
     valid = idx < n_valid
+    fv = touched & valid
     if mode == "vertex":
-        return touched & valid
-    if mode != "community":
+        return fv
+    if mode not in ("community", "auto"):
         raise ValueError(f"unknown screening mode: {mode!r}")
     comm = jnp.where(valid, jnp.minimum(membership, cap), cap)
     # Mark affected communities, then pull every member of a marked one.
     mark = jnp.zeros((cap + 1,), bool)
-    mark = mark.at[jnp.where(touched & valid, comm, cap)].set(True)
+    mark = mark.at[jnp.where(fv, comm, cap)].set(True)
     mark = mark.at[cap].set(False)
-    return (touched | mark[comm]) & valid
+    fc = (touched | mark[comm]) & valid
+    if mode == "community":
+        return fc
+    small = (jnp.sum(fv.astype(jnp.int32)) * AUTO_SCREEN_TOUCHED_DENOM
+             <= n_valid.astype(jnp.int32))
+    return jnp.where(small, fv, fc)
 
 
 def normalize_screening(screening) -> Optional[str]:
     """Map the drivers' ``screening`` argument to a frontier mode.
 
     ``True`` -> ``"community"`` (back-compat), ``False``/``None`` -> ``None``
-    (pure naive-dynamic: warm start over all vertices), strings pass through.
+    (pure naive-dynamic: warm start over all vertices), strings
+    (``"community"``, ``"vertex"``, ``"auto"``) pass through.
     """
     if screening is True:
         return "community"
     if screening in (False, None):
         return None
-    if screening in ("community", "vertex"):
+    if screening in ("community", "vertex", "auto"):
         return screening
-    raise ValueError(f"screening must be bool, 'community' or 'vertex'; "
-                     f"got {screening!r}")
+    raise ValueError(f"screening must be bool, 'community', 'vertex' or "
+                     f"'auto'; got {screening!r}")

@@ -28,7 +28,9 @@ from repro.core.modularity import delta_modularity
 
 _NEG_INF = -jnp.inf
 
-__all__ = ["MoveState", "SortReduceScanner", "best_moves", "louvain_move",
+__all__ = ["CompactSortReduceScanner", "MoveState", "SortReduceScanner",
+           "best_moves", "best_moves_slots", "compact_best_moves",
+           "gather_frontier_slots", "louvain_move",
            "scan_communities_sorted"]
 
 
@@ -40,7 +42,12 @@ def scan_communities_sorted(
     Returns (order, s_src, s_c, k_i_to_c) where arrays are in sorted slot
     order.  Self-loop slots contribute 0 (K_{i->c} excludes self edges).
     """
-    src, dst, w = graph.src, graph.indices, graph.weights
+    return _scan_communities_slots(graph.src, graph.indices, graph.weights,
+                                   comm)
+
+
+def _scan_communities_slots(src, dst, w, comm):
+    """``scan_communities_sorted`` over arbitrary directed-slot arrays."""
     cdst = comm[dst]
     order = jnp.lexsort((cdst, src))  # primary: src, secondary: community
     s_src = src[order]
@@ -52,29 +59,37 @@ def scan_communities_sorted(
     prev_c = jnp.concatenate([jnp.full((1,), -1, jnp.int32), s_c[:-1]])
     new_group = (s_src != prev_src) | (s_c != prev_c)
     gid = jnp.cumsum(new_group.astype(jnp.int32)) - 1
-    group_w = jax.ops.segment_sum(s_w, gid, num_segments=graph.e_cap)
+    group_w = jax.ops.segment_sum(s_w, gid, num_segments=src.shape[0])
     return order, s_src, s_c, group_w[gid]
 
 
-def best_moves(
-    graph: CSRGraph,
+def best_moves_slots(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
     comm: jax.Array,
     sigma: jax.Array,
     k: jax.Array,
     frontier: jax.Array,
     m: jax.Array,
+    n_cap: int,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Per-vertex (best community, best dQ) from one snapshot (sort-reduce path)."""
-    n_cap = graph.n_cap
-    src, dst, w = graph.src, graph.indices, graph.weights
+    """Per-vertex (best community, best dQ) from a directed-slot list.
 
+    The slot arrays may be the graph's full ``e_cap`` layout or any
+    compacted subset of it (dead slots hold the sentinel ``n_cap``); a
+    vertex whose live slots are ALL present gets exactly the full-scan
+    answer — compaction preserves slot order, the lexsort is stable, and
+    the per-group reductions therefore add the same weights in the same
+    order, so the result is bit-identical, not just numerically close.
+    """
     # K_{i -> own community} — direct segment-sum, no sort needed.
     own = (comm[dst] == comm[src]) & (dst != src)
     k_to_own = jax.ops.segment_sum(
         jnp.where(own, w, 0.0), src, num_segments=n_cap + 1
     )
 
-    order, s_src, s_c, k_i_to_c = scan_communities_sorted(graph, comm)
+    _, s_src, s_c, k_i_to_c = _scan_communities_slots(src, dst, w, comm)
     c_own = comm[s_src]
     dq = delta_modularity(
         k_i_to_c, k_to_own[s_src], k[s_src], sigma[s_c], sigma[c_own], m
@@ -91,6 +106,84 @@ def best_moves(
     # Empty segments yield iinfo.max — clamp into the sentinel slot.
     best_c = jnp.minimum(best_c, n_cap)
     return best_c, best_dq
+
+
+def best_moves(
+    graph: CSRGraph,
+    comm: jax.Array,
+    sigma: jax.Array,
+    k: jax.Array,
+    frontier: jax.Array,
+    m: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-vertex (best community, best dQ) from one snapshot (sort-reduce path)."""
+    return best_moves_slots(graph.src, graph.indices, graph.weights, comm,
+                            sigma, k, frontier, m, graph.n_cap)
+
+
+def gather_frontier_slots(
+    graph: CSRGraph, frontier: jax.Array, work_cap: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Compact the frontier vertices' edge slots into a (work_cap,) buffer.
+
+    Order-preserving: slot i of the output is the i-th edge slot (in CSR
+    order) whose src is in the frontier, so downstream sort-reduce results
+    are bit-identical to the full scan.  Slots past ``work_cap`` are dropped
+    — ``overflow`` reports whether any were, in which case the caller must
+    fall back to the full scan (the compact result would be missing edges).
+
+    Returns (src, dst, w, overflow) with dead slots = (n_cap, n_cap, 0).
+    """
+    n_cap = graph.n_cap
+    src, dst, w = graph.src, graph.indices, graph.weights
+    in_f = frontier[src]                       # pad slots: frontier[n_cap]=F
+    rank = jnp.cumsum(in_f.astype(jnp.int32)) - 1
+    keep = in_f & (rank < work_cap)
+    slot = jnp.where(keep, rank, work_cap)
+    out_src = jnp.full((work_cap + 1,), n_cap, jnp.int32).at[slot].set(
+        jnp.where(keep, src, n_cap))[:work_cap]
+    out_dst = jnp.full((work_cap + 1,), n_cap, jnp.int32).at[slot].set(
+        jnp.where(keep, dst, n_cap))[:work_cap]
+    out_w = jnp.zeros((work_cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, w, 0.0))[:work_cap]
+    overflow = jnp.sum(in_f.astype(jnp.int32)) > work_cap
+    return out_src, out_dst, out_w, overflow
+
+
+def compact_best_moves(
+    graph: CSRGraph,
+    comm: jax.Array,
+    sigma: jax.Array,
+    k: jax.Array,
+    frontier: jax.Array,
+    m: jax.Array,
+    work_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Frontier-proportional best-move scan with measured-overflow fallback.
+
+    Gathers only the frontier vertices' edge slots into a static
+    ``(work_cap,)`` buffer and scans that, so per-round scan cost is
+    O(work_cap log work_cap) instead of O(e_cap log e_cap) — the
+    DF-Louvain-style payoff when |F| << n.  When the frontier's slots
+    exceed the cap, ``lax.cond`` dispatches the full e_cap scan instead
+    (shapes stay static; one compiled program handles both regimes).
+
+    Returns (best_c, best_dq, overflowed); the first two are bit-identical
+    to ``best_moves`` either way.
+    """
+    c_src, c_dst, c_w, overflow = gather_frontier_slots(graph, frontier,
+                                                        work_cap)
+
+    def full_scan(_):
+        return best_moves(graph, comm, sigma, k, frontier, m)
+
+    def compact_scan(_):
+        return best_moves_slots(c_src, c_dst, c_w, comm, sigma, k, frontier,
+                                m, graph.n_cap)
+
+    best_c, best_dq = jax.lax.cond(overflow, full_scan, compact_scan,
+                                   operand=None)
+    return best_c, best_dq, overflow
 
 
 class SortReduceScanner(ReplicatedScannerBase):
@@ -117,6 +210,32 @@ class SortReduceScanner(ReplicatedScannerBase):
         return marked > 0
 
 
+class CompactSortReduceScanner(SortReduceScanner):
+    """Engine backend: frontier-compacted CSR sort-reduce scan.
+
+    Same topology surface as ``SortReduceScanner`` — only the scan differs:
+    per round it gathers the CURRENT frontier's edge slots into a static
+    ``(work_cap,)`` buffer and sort-reduces that, falling back to the full
+    ``e_cap`` scan inside the same compiled program when the frontier's
+    slots overflow the cap.  Results are bit-identical to the full scan;
+    only the work is frontier-proportional (ROADMAP "Unified move engine ->
+    Next": scan ONLY frontier vertices' edge slots).
+    """
+
+    def __init__(self, graph: CSRGraph, k: jax.Array, m: jax.Array,
+                 work_cap: int):
+        super().__init__(graph, k, m)
+        if not 0 < work_cap:
+            raise ValueError(f"work_cap must be positive, got {work_cap}")
+        self.work_cap = int(min(work_cap, graph.e_cap))
+
+    def scan(self, comm, sigma, frontier):
+        best_c, best_dq, _ = compact_best_moves(
+            self.graph, comm, sigma, self.k_local, frontier, self.m,
+            self.work_cap)
+        return best_c, best_dq
+
+
 def louvain_move(
     graph: CSRGraph,
     comm: jax.Array,
@@ -129,6 +248,7 @@ def louvain_move(
     use_pruning: bool = True,
     gate_fraction: int = 2,
     frontier0: jax.Array | None = None,
+    work_cap: int = 0,
 ) -> MoveState:
     """Algorithm 2 on the sort-reduce backend — a thin engine adapter.
 
@@ -136,13 +256,17 @@ def louvain_move(
     snapshot, not just the singleton start — warm starts (dynamic Louvain)
     pass the previous membership here.  ``frontier0`` optionally restricts
     the first round to a seed set (delta screening); ``None`` means all
-    valid vertices.  Sweep/tolerance/gating semantics are the engine's — see
+    valid vertices.  ``work_cap > 0`` selects the frontier-compacted
+    scanner with that (static) work-buffer capacity; 0 keeps the full-scan
+    backend.  Sweep/tolerance/gating semantics are the engine's — see
     ``repro.core.engine.MoveEngine``.
     """
     valid = jnp.arange(graph.n_cap + 1) < graph.n_valid
     frontier0 = valid if frontier0 is None else (frontier0 & valid)
+    scanner = (CompactSortReduceScanner(graph, k, m, work_cap) if work_cap
+               else SortReduceScanner(graph, k, m))
     engine = MoveEngine(
-        SortReduceScanner(graph, k, m),
+        scanner,
         EngineConfig(max_iterations=max_iterations, use_pruning=use_pruning,
                      gate_fraction=gate_fraction))
     return engine.run(comm, sigma, frontier0, tolerance)

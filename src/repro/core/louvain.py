@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.louvain_arch import (COMPACT_WORK_FRAC, compact_work_cap,
+                                        resolve_scan_backend)
 from repro.core.aggregate import aggregate_graph, renumber_communities
 from repro.core.engine import affected_frontier
 from repro.core.graph import CSRGraph
@@ -49,6 +51,15 @@ class LouvainConfig:
     use_ell_kernel: bool = False      # Pallas scan kernel for the move phase
     ell_widths: tuple = (16, 64, 256)
     track_modularity: bool = False    # record Q after every pass (debugging)
+    #: Scanner backend for the move phase (configs.louvain_arch policy):
+    #: "auto" (frontier-compacted sort-reduce when a small seed frontier is
+    #: active; the fused kernel on the ELL family), "full", "compact",
+    #: "ell", "ell_fused".  All backends are bit-identical in results —
+    #: this knob trades work, never memberships.
+    scan_backend: str = "auto"
+    #: Compact work-buffer capacity as a fraction of e_cap (default: the
+    #: configs.louvain_arch.COMPACT_WORK_FRAC policy — ONE home).
+    compact_cap_frac: float = COMPACT_WORK_FRAC
 
 
 @dataclasses.dataclass
@@ -135,18 +146,23 @@ def warm_init(graph: CSRGraph, membership: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("max_iterations", "use_pruning",
-                                             "gate_fraction"))
+                                             "gate_fraction", "work_cap"))
 def _move_phase(graph: CSRGraph, comm0, sigma0, frontier0, tolerance, *,
                 max_iterations: int, use_pruning: bool,
-                gate_fraction: int = 2):
-    """One local-moving phase from an arbitrary (C, Sigma, frontier) start."""
+                gate_fraction: int = 2, work_cap: int = 0):
+    """One local-moving phase from an arbitrary (C, Sigma, frontier) start.
+
+    ``work_cap > 0`` runs the frontier-compacted scanner with that static
+    work-buffer capacity (bit-identical results, frontier-proportional
+    work); 0 is the full e_cap scan.
+    """
     k = graph.vertex_weights()
     m = graph.total_weight()
     st = louvain_move(
         graph, comm0, sigma0, k, m,
         tolerance=tolerance, max_iterations=max_iterations,
         use_pruning=use_pruning, gate_fraction=gate_fraction,
-        frontier0=frontier0,
+        frontier0=frontier0, work_cap=work_cap,
     )
     return st.comm, st.iters, st.dq_sum
 
@@ -181,6 +197,13 @@ def louvain(
     vertex mask (delta screening — see ``repro.core.dynamic``), with or
     without a warm membership.  Later passes (after aggregation) always
     restart from singletons on the coarse graph, as in static Louvain.
+
+    ``config.scan_backend`` picks the move-phase scanner per pass
+    (``configs.louvain_arch.resolve_scan_backend``): with an active seed
+    frontier the compacted sort-reduce scanner makes scan work proportional
+    to |F| instead of e_cap; on the ELL family the fused Pallas kernel makes
+    the whole round one kernel trip.  Memberships are bit-identical across
+    backends.
     """
     t_start = time.perf_counter()
     n_cap = graph.n_cap
@@ -192,7 +215,9 @@ def louvain(
     passes: List[PassStats] = []
     n_comms_final = n
 
-    if config.use_ell_kernel:
+    ell_family = (config.use_ell_kernel
+                  or config.scan_backend in ("ell", "ell_fused"))
+    if ell_family:
         from repro.core import ell_move  # lazy: pulls in Pallas
 
     warm_comm0 = warm_sigma0 = warm_frontier0 = None
@@ -227,18 +252,28 @@ def louvain(
         else:
             comm0, sigma0, frontier0 = singleton_init(g)
             pass_frontier = None
-        if config.use_ell_kernel:
+        # A *screened* frontier is active only on pass 0 with init_frontier;
+        # warm-only starts re-scan all vertices, so compaction buys nothing.
+        frontier_frac = (frontier_size0 / max(n, 1)
+                         if p == 0 and fr is not None else None)
+        backend = resolve_scan_backend(
+            config.scan_backend, use_ell_kernel=config.use_ell_kernel,
+            frontier_frac=frontier_frac)
+        if ell_family:
             comm, iters, dq_sum = ell_move.move_phase_ell(
                 g, jnp.float32(tol), max_iterations=config.max_iterations,
                 use_pruning=config.use_pruning,
                 gate_fraction=config.gate_fraction, widths=config.ell_widths,
-                comm0=comm0, sigma0=sigma0, frontier0=frontier0)
+                comm0=comm0, sigma0=sigma0, frontier0=frontier0,
+                fused=backend == "ell_fused")
         else:
             comm, iters, dq_sum = _move_phase(
                 g, comm0, sigma0, frontier0, jnp.float32(tol),
                 max_iterations=config.max_iterations,
                 use_pruning=config.use_pruning,
-                gate_fraction=config.gate_fraction)
+                gate_fraction=config.gate_fraction,
+                work_cap=(compact_work_cap(g.e_cap, config.compact_cap_frac)
+                          if backend == "compact" else 0))
         iters = int(iters)
         t1 = time.perf_counter()
 

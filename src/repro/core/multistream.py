@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.louvain_arch import compact_work_cap
 from repro.core.aggregate import renumber_communities
 from repro.core.delta import EdgeBatch, _apply_edge_batch
 from repro.core.engine import affected_frontier, normalize_screening
@@ -95,7 +96,8 @@ class BatchedDynamicResult:
 
 @functools.lru_cache(maxsize=None)
 def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
-                tolerance: float, screen_mode: Optional[str], backend: str):
+                tolerance: float, screen_mode: Optional[str], backend: str,
+                work_cap: int = 0):
     """ONE jitted vmapped program for a whole serving step: batch apply ->
     delta screen -> warm init -> engine move -> renumber.
 
@@ -105,7 +107,12 @@ def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
     fleet.  The returned ``iters``/``e_new`` let the host detect the rare
     step that needs the general pass loop (or overflowed capacity) and
     redo it off the fast path — results stay exactly equal to the
-    sequential drivers either way.
+    sequential drivers either way.  ``work_cap > 0`` routes the move phase
+    through the frontier-compacted scanner (bit-identical; note that under
+    ``vmap`` its overflow ``cond`` lowers to a select that evaluates both
+    scans, so this is a correctness-preserving knob here, not a speedup —
+    which is why ``scan_backend="auto"`` resolves to the full scan for the
+    batched driver).
     """
 
     def one(g: CSRGraph, mem_row: jax.Array, b: EdgeBatch):
@@ -122,7 +129,7 @@ def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
         comm, iters, _ = _move_phase(
             g2, comm0, sigma0, frontier0, jnp.float32(tolerance),
             max_iterations=max_iterations, use_pruning=use_pruning,
-            gate_fraction=gate_fraction)
+            gate_fraction=gate_fraction, work_cap=work_cap)
         comm_ren, _ = renumber_communities(comm, g2.n_valid, n_cap)
         return (g2, comm_ren[:n_cap], frontier, iters, e_new,
                 jnp.sum(frontier))
@@ -132,11 +139,11 @@ def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
 
 @functools.lru_cache(maxsize=None)
 def _batched_phases(max_iterations: int, use_pruning: bool,
-                    gate_fraction: int):
+                    gate_fraction: int, work_cap: int = 0):
     """vmapped jit'd phases for one static move configuration."""
     move = jax.vmap(functools.partial(
         _move_phase, max_iterations=max_iterations, use_pruning=use_pruning,
-        gate_fraction=gate_fraction))
+        gate_fraction=gate_fraction, work_cap=work_cap))
     return (move, jax.vmap(singleton_init), jax.vmap(warm_init),
             jax.vmap(_renumber_and_fold), jax.vmap(_aggregate_phase))
 
@@ -156,12 +163,21 @@ def louvain_batched(
     tolerance flips to +inf (its batched while_loop lane exits immediately)
     and its membership is frozen while the fleet finishes.
     """
-    if config.use_ell_kernel:
+    if config.use_ell_kernel or config.scan_backend in ("ell", "ell_fused"):
         raise ValueError("louvain_batched uses the sort-reduce scanner; "
                          "ELL bucketing is per-graph host work")
     S, n_cap = gb.indptr.shape[0], gb.indptr.shape[1] - 1
     move, v_singleton, v_warm, v_renumber, v_aggregate = _batched_phases(
         config.max_iterations, config.use_pruning, config.gate_fraction)
+    # Pass 0 with a seed frontier may use the compacted scanner (explicit
+    # "compact" only — "auto" keeps the full scan under vmap, where the
+    # overflow cond lowers to a both-branches select).
+    move0 = move
+    if config.scan_backend == "compact" and init_frontier is not None:
+        move0 = _batched_phases(
+            config.max_iterations, config.use_pruning, config.gate_fraction,
+            compact_work_cap(gb.indices.shape[1],
+                             config.compact_cap_frac))[0]
 
     global_comm = jnp.tile(jnp.arange(n_cap, dtype=jnp.int32)[None], (S, 1))
     active = np.ones(S, bool)
@@ -186,7 +202,8 @@ def louvain_batched(
             if p == 0 and init_frontier is not None:
                 frontier0 = frontier0 & fr
         tols = jnp.where(jnp.asarray(active), jnp.float32(tol), jnp.inf)
-        comm, iters, _ = move(gb, comm0, sigma0, frontier0, tols)
+        comm, iters, _ = (move0 if p == 0 else move)(
+            gb, comm0, sigma0, frontier0, tols)
         comm_ren, n_comms, folded = v_renumber(
             comm, gb.n_valid, jnp.zeros((S,), jnp.int32), global_comm)
         mask = jnp.asarray(active)
@@ -234,9 +251,12 @@ def louvain_dynamic_batched(
     compiled envelope — pad short streams with empty batches).  ``prevs``
     are the per-stream memberships before the stream; ``None`` runs one
     batched cold start.  Per step: one vmapped batch apply, one vmapped
-    delta screen (``screening`` as in ``louvain_dynamic``), one batched
-    warm pass loop.  Raises on capacity overflow (no growth — see module
-    docstring).
+    delta screen (``screening`` as in ``louvain_dynamic``, including
+    ``"auto"``), one batched warm pass loop.  ``config.scan_backend=
+    "compact"`` routes the vmapped move phase through the frontier-
+    compacted scanner (bit-identical; under vmap the overflow cond lowers
+    to a both-branches select, so ``"auto"`` keeps the full scan here).
+    Raises on capacity overflow (no growth — see module docstring).
     """
     t_start = time.perf_counter()
     S = len(graphs)
@@ -249,10 +269,16 @@ def louvain_dynamic_batched(
     gb = stack_graphs(list(graphs))
     n_cap, e_cap = gb.indptr.shape[1] - 1, gb.indices.shape[1]
 
+    if config.use_ell_kernel or config.scan_backend in ("ell", "ell_fused"):
+        raise ValueError("louvain_dynamic_batched uses the sort-reduce "
+                         "scanner; ELL bucketing is per-graph host work")
+    work_cap = (compact_work_cap(e_cap, config.compact_cap_frac)
+                if config.scan_backend == "compact"
+                and screen_mode is not None else 0)
     fused = _fused_step(config.max_iterations, config.use_pruning,
                         config.gate_fraction,
                         float(config.initial_tolerance), screen_mode,
-                        apply_backend)
+                        apply_backend, work_cap)
 
     if prevs is None:
         mem = louvain_batched(gb, config).membership

@@ -1,0 +1,178 @@
+"""Fused Pallas TPU kernel: Louvain ELL scan + gated move decision.
+
+The scan-only kernel (``louvain_scan.py``) returns per-row (best_c, best_dq)
+and leaves the move *decision* — improvement test, round gate, singleton-swap
+guard, frontier/validity masks — to the engine, which re-reads the tile
+results from HBM to compute it.  This kernel fuses the whole Algorithm-2 row
+body into the tile's single VMEM residency: each row leaves the kernel with
+its decision made (``do_move``) and its target chosen, so the engine's apply
+collapses to two cheap segment-sums (Sigma) and a scatter (C) with no second
+pass over the scan output.
+
+Decision inputs that are per-community lookups (|community| for the guard)
+are pre-gathered per slot outside the kernel, like Sigma — XLA owns gathers,
+the kernel stays dense.  The round gate is computed IN-kernel from the
+vertex ids via the engine's own ``round_gate`` (pure jnp, one home for the
+Weyl constants), so the fused decision is bit-identical to the engine's
+generic path by construction — and pinned to it by tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import engine
+from repro.kernels.louvain_scan.louvain_scan import dense_scan_tile
+
+# The Weyl gate constants live in engine.py (their ONE home); Pallas kernels
+# cannot close over device arrays, so rebind them as Python ints here — the
+# in-kernel gate hash inlines them as literals and stays bit-identical to
+# ``engine.round_gate``.
+_GATE_MUL = int(engine.GATE_MUL)
+_GATE_INC = int(engine.GATE_INC)
+
+
+def fused_decision_tile(c, size_nbr, size_own, best_c, best_dq, c_own,
+                        rows, front, round_ix, *, gate_fraction: int,
+                        sentinel: int):
+    """The gated move decision on one tile — pure jnp, shared kernel/ref.
+
+    Mirrors ``repro.core.engine.gated_move_mask`` exactly, with the
+    community-size lookups replaced by the pre-gathered per-slot ``size_nbr``
+    / per-row ``size_own`` (``sizes[best_c]`` becomes a masked row-min over
+    the slots holding the best community).  Returns (best_c mapped to
+    ``sentinel`` when none, best_dq masked to -inf off-frontier, do_move).
+    """
+    found = best_c >= 0
+    bc = jnp.where(found, best_c, jnp.int32(sentinel))
+
+    # sizes[best_c] without a gather: every live slot in the best community
+    # carries that community's size — min over them (big when none found).
+    valid = (c >= 0) & (c != c_own)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    size_best = jnp.min(
+        jnp.where((c == bc) & valid, size_nbr, big), axis=1, keepdims=True)
+
+    own_single = size_own == 1
+    tgt_single = size_best == 1
+    swap_blocked = own_single & tgt_single & (bc > c_own)
+    do_move = ((best_dq > 0.0) & (bc != c_own) & (bc < sentinel)
+               & front & ~swap_blocked)
+    if gate_fraction > 1:
+        # engine.round_gate, inlined with the int-rebound Weyl constants.
+        h = (rows.astype(jnp.int32) * jnp.int32(_GATE_MUL)
+             + round_ix.astype(jnp.int32) * jnp.int32(_GATE_INC))
+        do_move = do_move & (jnp.abs(h >> 13) % gate_fraction == 0)
+    best_dq = jnp.where(front, best_dq, jnp.float32(-jnp.inf))
+    return bc, best_dq, do_move
+
+
+def _make_fused_kernel(gate_fraction: int, sentinel: int):
+    def kernel(
+        c_ref,        # (B, D) int32 — neighbor communities, -1 dead
+        w_ref,        # (B, D) f32  — neighbor edge weights, 0 dead
+        sig_ref,      # (B, D) f32  — Sigma[target community]
+        size_ref,     # (B, D) int32 — |target community|, 0 dead
+        ki_ref,       # (B, 1) f32  — K_i
+        cown_ref,     # (B, 1) int32
+        sigown_ref,   # (B, 1) f32
+        sizeown_ref,  # (B, 1) int32 — |own community|
+        rows_ref,     # (B, 1) int32 — global vertex id (pad = sentinel)
+        front_ref,    # (B, 1) int32 — frontier & move-valid (0/1)
+        m_ref,        # (1, 1) f32  — total weight (broadcast)
+        round_ref,    # (1, 1) int32 — round index (broadcast)
+        bestc_ref,    # out (B, 1) int32 — sentinel-mapped best community
+        bestdq_ref,   # out (B, 1) f32
+        domove_ref,   # out (B, 1) int32 (0/1)
+    ):
+        c = c_ref[...]
+        best_c, best_dq = dense_scan_tile(
+            c, w_ref[...], sig_ref[...], ki_ref[...], cown_ref[...],
+            sigown_ref[...], m_ref[0, 0])
+        bc, bdq, do_move = fused_decision_tile(
+            c, size_ref[...], sizeown_ref[...], best_c, best_dq,
+            cown_ref[...], rows_ref[...], front_ref[...] > 0,
+            round_ref[0, 0], gate_fraction=gate_fraction, sentinel=sentinel)
+        bestc_ref[...] = bc
+        bestdq_ref[...] = bdq
+        domove_ref[...] = do_move.astype(jnp.int32)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gate_fraction", "sentinel", "block_rows", "interpret"))
+def louvain_fused_pallas(
+    c_nbr: jax.Array,      # (R, D) int32
+    w_nbr: jax.Array,      # (R, D) f32
+    sigma_nbr: jax.Array,  # (R, D) f32
+    size_nbr: jax.Array,   # (R, D) int32
+    k_i: jax.Array,        # (R, 1) f32
+    c_own: jax.Array,      # (R, 1) int32
+    sigma_own: jax.Array,  # (R, 1) f32
+    size_own: jax.Array,   # (R, 1) int32
+    rows: jax.Array,       # (R, 1) int32
+    front: jax.Array,      # (R, 1) int32
+    m: jax.Array,          # () or (1, 1) f32
+    round_ix: jax.Array,   # () or (1, 1) int32
+    *,
+    gate_fraction: int,
+    sentinel: int,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    r, d = c_nbr.shape
+    assert r % block_rows == 0, (r, block_rows)
+    m2d = jnp.reshape(m.astype(jnp.float32), (1, 1))
+    r2d = jnp.reshape(round_ix.astype(jnp.int32), (1, 1))
+
+    grid = (r // block_rows,)
+    row_spec = lambda width: pl.BlockSpec((block_rows, width), lambda i: (i, 0))
+    bcast = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out_shape = (
+        jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        jax.ShapeDtypeStruct((r, 1), jnp.int32),
+    )
+    return pl.pallas_call(
+        _make_fused_kernel(gate_fraction, sentinel),
+        grid=grid,
+        in_specs=[
+            row_spec(d),                                   # c_nbr
+            row_spec(d),                                   # w_nbr
+            row_spec(d),                                   # sigma_nbr
+            row_spec(d),                                   # size_nbr
+            row_spec(1),                                   # k_i
+            row_spec(1),                                   # c_own
+            row_spec(1),                                   # sigma_own
+            row_spec(1),                                   # size_own
+            row_spec(1),                                   # rows
+            row_spec(1),                                   # front
+            bcast,                                         # m
+            bcast,                                         # round_ix
+        ],
+        out_specs=[row_spec(1), row_spec(1), row_spec(1)],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(c_nbr, w_nbr, sigma_nbr, size_nbr, k_i, c_own, sigma_own, size_own,
+      rows, front, m2d, r2d)
+
+
+def louvain_fused_ref(
+    c_nbr, w_nbr, sigma_nbr, size_nbr, k_i, c_own, sigma_own, size_own,
+    rows, front, m, round_ix, *, gate_fraction: int, sentinel: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pure-jnp oracle of the fused kernel (same tile math, no grid)."""
+    best_c, best_dq = dense_scan_tile(c_nbr, w_nbr, sigma_nbr, k_i, c_own,
+                                      sigma_own, jnp.asarray(m, jnp.float32))
+    bc, bdq, do_move = fused_decision_tile(
+        c_nbr, size_nbr, size_own, best_c, best_dq, c_own, rows, front > 0,
+        jnp.asarray(round_ix, jnp.int32), gate_fraction=gate_fraction,
+        sentinel=sentinel)
+    return bc[:, 0], bdq[:, 0], do_move[:, 0].astype(jnp.int32)

@@ -27,24 +27,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _scan_kernel(
-    c_ref,          # (B, D) int32 — neighbor communities, -1 dead
-    w_ref,          # (B, D) f32  — neighbor edge weights, 0 dead
-    sig_ref,        # (B, D) f32  — Sigma[target community]
-    ki_ref,         # (B, 1) f32  — K_i
-    cown_ref,       # (B, 1) int32
-    sigown_ref,     # (B, 1) f32
-    m_ref,          # (1, 1) f32  — total weight (broadcast to every program)
-    bestc_ref,      # out (B, 1) int32
-    bestdq_ref,     # out (B, 1) f32
-):
-    c = c_ref[...]
-    w = w_ref[...].astype(jnp.float32)
-    sig = sig_ref[...].astype(jnp.float32)
-    k_i = ki_ref[...].astype(jnp.float32)          # (B, 1)
-    c_own = cown_ref[...]
-    sig_own = sigown_ref[...].astype(jnp.float32)
-    m = m_ref[0, 0]
+def dense_scan_tile(c, w, sig, k_i, c_own, sig_own, m):
+    """The dense best-move scan of one (B, D) tile — pure jnp.
+
+    Shared by the scan-only kernel below and the fused scan+apply kernel
+    (``fused.py``): both must produce bit-identical (best_c, best_dq), so
+    the math lives exactly once.  Returns ((B, 1) int32 best community with
+    -1 = none, (B, 1) f32 best dQ with -inf = none).
+    """
+    w = w.astype(jnp.float32)
+    sig = sig.astype(jnp.float32)
+    k_i = k_i.astype(jnp.float32)                   # (B, 1)
+    sig_own = sig_own.astype(jnp.float32)
 
     # Collision-free community scan: dense pairwise equality, then a batched
     # matvec against the weights (MXU-friendly: (B*D, D) x (D,) contractions).
@@ -68,8 +62,26 @@ def _scan_kernel(
     big = jnp.int32(jnp.iinfo(jnp.int32).max)
     best_c = jnp.min(jnp.where(is_best, c, big), axis=1, keepdims=True)
     found = jnp.isfinite(best_dq)
-    bestc_ref[...] = jnp.where(found, best_c, jnp.int32(-1))
-    bestdq_ref[...] = jnp.where(found, best_dq, neg_inf)
+    return (jnp.where(found, best_c, jnp.int32(-1)),
+            jnp.where(found, best_dq, neg_inf))
+
+
+def _scan_kernel(
+    c_ref,          # (B, D) int32 — neighbor communities, -1 dead
+    w_ref,          # (B, D) f32  — neighbor edge weights, 0 dead
+    sig_ref,        # (B, D) f32  — Sigma[target community]
+    ki_ref,         # (B, 1) f32  — K_i
+    cown_ref,       # (B, 1) int32
+    sigown_ref,     # (B, 1) f32
+    m_ref,          # (1, 1) f32  — total weight (broadcast to every program)
+    bestc_ref,      # out (B, 1) int32
+    bestdq_ref,     # out (B, 1) f32
+):
+    best_c, best_dq = dense_scan_tile(
+        c_ref[...], w_ref[...], sig_ref[...], ki_ref[...], cown_ref[...],
+        sigown_ref[...], m_ref[0, 0])
+    bestc_ref[...] = best_c
+    bestdq_ref[...] = best_dq
 
 
 @functools.partial(

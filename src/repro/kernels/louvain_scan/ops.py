@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import ELLBlock
+from repro.kernels.louvain_scan.fused import (louvain_fused_pallas,
+                                              louvain_fused_ref)
 from repro.kernels.louvain_scan.louvain_scan import louvain_scan_pallas
 from repro.kernels.louvain_scan.ref import louvain_scan_ref
 
@@ -47,6 +49,73 @@ def prepare_ell_inputs(
     c_own = comm[rows][:, None]
     sigma_own = sigma[c_own[:, 0]][:, None].astype(jnp.float32)
     return c_nbr, w_nbr, sigma_nbr, k_i, c_own, sigma_own
+
+
+def prepare_fused_inputs(
+    block: ELLBlock,
+    comm: jax.Array,       # (n_cap + 1,) int32
+    sigma: jax.Array,      # (n_cap + 1,) f32
+    sizes: jax.Array,      # (n_cap + 1,) int32 — |community| per id
+    k: jax.Array,          # (n_cap + 1,) f32
+    front: jax.Array,      # (n_cap + 1,) bool — frontier & move-valid
+    n_cap: int,
+) -> Tuple[jax.Array, ...]:
+    """Per-slot state for the fused scan+apply kernel (gathers stay in XLA).
+
+    Extends ``prepare_ell_inputs`` with the decision inputs: per-slot and
+    per-row community sizes (the singleton-swap guard), the row's global
+    vertex id (the in-kernel round gate) and its frontier/validity bit.
+    """
+    c_nbr, w_nbr, sigma_nbr, k_i, c_own, sigma_own = prepare_ell_inputs(
+        block, comm, sigma, k, n_cap)
+    dead = c_nbr < 0
+    size_nbr = jnp.where(dead, 0,
+                         sizes[jnp.maximum(c_nbr, 0)]).astype(jnp.int32)
+    size_own = sizes[c_own[:, 0]][:, None].astype(jnp.int32)
+    rows = block.rows[:, None].astype(jnp.int32)
+    front_rows = front[block.rows][:, None].astype(jnp.int32)
+    return (c_nbr, w_nbr, sigma_nbr, size_nbr, k_i, c_own, sigma_own,
+            size_own, rows, front_rows)
+
+
+def louvain_fused(
+    c_nbr: jax.Array,
+    w_nbr: jax.Array,
+    sigma_nbr: jax.Array,
+    size_nbr: jax.Array,
+    k_i: jax.Array,
+    c_own: jax.Array,
+    sigma_own: jax.Array,
+    size_own: jax.Array,
+    rows: jax.Array,
+    front: jax.Array,
+    m: jax.Array,
+    round_ix: jax.Array,
+    *,
+    gate_fraction: int,
+    sentinel: int,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    block_rows: int | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused (best_c, best_dq, do_move) per ELL row.  See fused.py."""
+    if not use_pallas:
+        return louvain_fused_ref(
+            c_nbr, w_nbr, sigma_nbr, size_nbr, k_i, c_own, sigma_own,
+            size_own, rows, front, m, round_ix,
+            gate_fraction=gate_fraction, sentinel=sentinel)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r, d = c_nbr.shape
+    rows_per = block_rows or block_rows_for_width(d)
+    rows_per = max(1, min(rows_per, r))
+    while r % rows_per:  # shrink to a divisor of R (rows are align-padded)
+        rows_per -= 1
+    out_c, out_dq, out_mv = louvain_fused_pallas(
+        c_nbr, w_nbr, sigma_nbr, size_nbr, k_i, c_own, sigma_own, size_own,
+        rows, front, m, round_ix, gate_fraction=gate_fraction,
+        sentinel=sentinel, block_rows=rows_per, interpret=interpret)
+    return out_c[:, 0], out_dq[:, 0], out_mv[:, 0]
 
 
 def louvain_scan(

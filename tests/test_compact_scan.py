@@ -1,0 +1,191 @@
+"""Frontier compaction property tests: the compacted sort-reduce scan must
+equal the full-scan backend per vertex — bit for bit — for ANY frontier
+(empty, full, random, and frontiers overflowing the static work cap), and
+the measured-overflow fallback must actually trigger when it should.
+
+Uses ``hypothesis`` when installed, ``tests/_hypothesis_fallback`` otherwise.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.louvain_arch import (AUTO_COMPACT_MAX_FRONTIER_FRAC,
+                                        SCAN_BACKENDS, compact_work_cap,
+                                        resolve_scan_backend)
+from repro.core.graph import build_csr
+from repro.core.local_move import (CompactSortReduceScanner,
+                                   SortReduceScanner, best_moves,
+                                   compact_best_moves, gather_frontier_slots)
+from repro.core.modularity import community_weights
+from repro.data import sbm_graph
+
+
+def _random_graph(rng, n, e0):
+    src = rng.integers(0, n, e0)
+    dst = rng.integers(0, n, e0)
+    w = (rng.random(e0) + 0.1).astype(np.float32)
+    # Fixed capacities across draws: one compiled scan per shape.
+    return build_csr(src, dst, w, n, symmetrize=True, dedup=True,
+                     n_cap=24, e_cap=256)
+
+
+def _snapshot(rng, g, n_comms):
+    n_cap = g.n_cap
+    comm = np.full(n_cap + 1, n_cap, np.int32)
+    comm[: int(g.n_valid)] = rng.integers(0, n_comms, int(g.n_valid))
+    comm = jnp.asarray(comm)
+    return comm, community_weights(g, comm)
+
+
+def _assert_scan_equal(g, comm, sigma, frontier, work_cap):
+    k = g.vertex_weights()
+    m = g.total_weight()
+    bc_full, bdq_full = best_moves(g, comm, sigma, k, frontier, m)
+    bc_c, bdq_c, overflow = compact_best_moves(g, comm, sigma, k, frontier,
+                                               m, work_cap)
+    np.testing.assert_array_equal(np.asarray(bc_full), np.asarray(bc_c))
+    # -inf == -inf under array_equal; bit-for-bit incl. the dead slots.
+    np.testing.assert_array_equal(np.asarray(bdq_full), np.asarray(bdq_c))
+    # The overflow flag is exact, not conservative.
+    n_slots = int(np.asarray(frontier)[np.asarray(g.src)].sum())
+    assert bool(overflow) == (n_slots > work_cap)
+    return bool(overflow)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.05, 0.3, 1.0]),
+       st.sampled_from([16, 64, 256]))
+def test_compact_matches_full_scan_property(seed, frac, work_cap):
+    """Random graphs x random frontiers x caps: per-vertex (best_c, best_dq)
+    must be bit-identical to the full scan, overflowing or not."""
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, int(rng.integers(8, 24)), int(rng.integers(8, 64)))
+    comm, sigma = _snapshot(rng, g, n_comms=6)
+    fr = np.zeros(g.n_cap + 1, bool)
+    n = int(g.n_valid)
+    fr[:n] = rng.random(n) < frac
+    _assert_scan_equal(g, comm, sigma, jnp.asarray(fr), work_cap)
+
+
+def test_compact_empty_frontier():
+    rng = np.random.default_rng(0)
+    g = _random_graph(rng, 16, 40)
+    comm, sigma = _snapshot(rng, g, 4)
+    fr = jnp.zeros(g.n_cap + 1, bool)
+    overflow = _assert_scan_equal(g, comm, sigma, fr, 32)
+    assert not overflow
+
+
+def test_compact_full_frontier_overflows_and_falls_back():
+    """A full frontier over a graph with more live slots than the cap MUST
+    take the fallback branch — and still match the full scan exactly."""
+    rng = np.random.default_rng(1)
+    g = _random_graph(rng, 20, 60)
+    assert int(g.e_valid) > 16
+    comm, sigma = _snapshot(rng, g, 4)
+    fr = np.zeros(g.n_cap + 1, bool)
+    fr[: int(g.n_valid)] = True
+    overflow = _assert_scan_equal(g, comm, sigma, jnp.asarray(fr), 16)
+    assert overflow, "fallback path was not exercised"
+
+
+def test_compact_sub_cap_frontier_stays_compact():
+    """A frontier whose slots fit the cap must NOT take the fallback."""
+    rng = np.random.default_rng(2)
+    g = _random_graph(rng, 16, 30)
+    comm, sigma = _snapshot(rng, g, 4)
+    fr = np.zeros(g.n_cap + 1, bool)
+    fr[0] = True          # one vertex; degree < e_cap cap for sure
+    overflow = _assert_scan_equal(g, comm, sigma, jnp.asarray(fr), 64)
+    assert not overflow
+
+
+def test_gather_frontier_slots_order_preserving():
+    """Compaction keeps CSR slot order (the bit-for-bit precondition) and
+    pads with sentinels."""
+    rng = np.random.default_rng(3)
+    g = _random_graph(rng, 12, 30)
+    fr = np.zeros(g.n_cap + 1, bool)
+    fr[[1, 5, 9]] = True
+    src_c, dst_c, w_c, overflow = gather_frontier_slots(g, jnp.asarray(fr),
+                                                        64)
+    src_np = np.asarray(g.src)
+    sel = fr[src_np]
+    exp_src = src_np[sel]
+    n_live = len(exp_src)
+    np.testing.assert_array_equal(np.asarray(src_c)[:n_live], exp_src)
+    np.testing.assert_array_equal(np.asarray(dst_c)[:n_live],
+                                  np.asarray(g.indices)[sel])
+    np.testing.assert_array_equal(np.asarray(w_c)[:n_live],
+                                  np.asarray(g.weights)[sel])
+    assert np.all(np.asarray(src_c)[n_live:] == g.n_cap)
+    assert np.all(np.asarray(w_c)[n_live:] == 0)
+    assert not bool(overflow)
+
+
+def test_compact_scanner_through_engine_rounds():
+    """End-to-end: the compact scanner's full move phase equals the full-scan
+    scanner's on a delta-screened frontier (engine semantics preserved, not
+    just one scan call)."""
+    from repro.core.local_move import louvain_move
+
+    g, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=3)
+    n_cap = g.n_cap
+    k = g.vertex_weights()
+    m = g.total_weight()
+    comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
+    sigma0 = k
+    fr = np.zeros(n_cap + 1, bool)
+    fr[:16] = True
+    fr = jnp.asarray(fr)
+    st_full = louvain_move(g, comm0, sigma0, k, m,
+                           tolerance=jnp.float32(0.01), frontier0=fr)
+    st_comp = louvain_move(g, comm0, sigma0, k, m,
+                           tolerance=jnp.float32(0.01), frontier0=fr,
+                           work_cap=compact_work_cap(g.e_cap))
+    np.testing.assert_array_equal(np.asarray(st_full.comm),
+                                  np.asarray(st_comp.comm))
+    assert int(st_full.iters) == int(st_comp.iters)
+    assert float(st_full.dq_sum) == float(st_comp.dq_sum)
+
+
+def test_compact_scanner_caps_work_buffer_at_e_cap():
+    rng = np.random.default_rng(4)
+    g = _random_graph(rng, 10, 20)
+    sc = CompactSortReduceScanner(g, g.vertex_weights(), g.total_weight(),
+                                  work_cap=10 * g.e_cap)
+    assert sc.work_cap == g.e_cap
+    with pytest.raises(ValueError):
+        CompactSortReduceScanner(g, g.vertex_weights(), g.total_weight(),
+                                 work_cap=0)
+
+
+def test_resolve_scan_backend_policy():
+    """The configs.louvain_arch routing table, pinned."""
+    assert resolve_scan_backend("full") == "full"
+    assert resolve_scan_backend("compact") == "full"          # no frontier
+    assert resolve_scan_backend("compact", frontier_frac=0.9) == "compact"
+    assert resolve_scan_backend("auto") == "full"
+    assert resolve_scan_backend(
+        "auto", frontier_frac=AUTO_COMPACT_MAX_FRONTIER_FRAC) == "compact"
+    assert resolve_scan_backend(
+        "auto", frontier_frac=AUTO_COMPACT_MAX_FRONTIER_FRAC + 0.01) == "full"
+    assert resolve_scan_backend("auto", use_ell_kernel=True) == "ell_fused"
+    assert resolve_scan_backend("full", use_ell_kernel=True) == "ell"
+    with pytest.raises(ValueError):                    # contradictory ask
+        resolve_scan_backend("compact", use_ell_kernel=True)
+    assert resolve_scan_backend("ell") == "ell"
+    assert resolve_scan_backend("ell_fused") == "ell_fused"
+    with pytest.raises(ValueError):
+        resolve_scan_backend("bogus")
+    assert set(SCAN_BACKENDS) == {"auto", "full", "compact", "ell",
+                                  "ell_fused"}
+    assert compact_work_cap(1000, 0.25) == 250
+    assert compact_work_cap(100, 0.25) == 64    # COMPACT_WORK_MIN floor
+    assert compact_work_cap(40, 0.25) == 40     # ... clamped to e_cap

@@ -101,5 +101,50 @@ def test_normalize_screening():
     assert normalize_screening(None) is None
     assert normalize_screening("vertex") == "vertex"
     assert normalize_screening("community") == "community"
+    assert normalize_screening("auto") == "auto"
     with pytest.raises(ValueError):
         normalize_screening("bogus")
+
+
+def test_affected_frontier_auto_picks_granularity_by_touched_size():
+    """screening="auto": a small touched set yields the per-vertex frontier,
+    a bulky one the community-granular frontier — selected on device from
+    |touched| vs n_valid / AUTO_SCREEN_TOUCHED_DENOM."""
+    n_cap = 64
+    n_valid = jnp.int32(64)
+    membership = jnp.asarray(
+        np.concatenate([np.repeat(np.arange(8) * 8, 8), [n_cap]])
+        .astype(np.int32))
+
+    # 2 touched of 64 valid: 2 * 16 <= 64 -> vertex granularity.
+    touched = jnp.zeros(n_cap + 1, bool).at[jnp.asarray([3, 40])].set(True)
+    fa = affected_frontier(touched, membership, n_valid, "auto")
+    fv = affected_frontier(touched, membership, n_valid, "vertex")
+    fc = affected_frontier(touched, membership, n_valid, "community")
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fv))
+    assert np.asarray(fc).sum() > np.asarray(fa).sum()
+
+    # 8 touched of 64 valid: 8 * 16 > 64 -> community granularity.
+    touched = jnp.zeros(n_cap + 1, bool).at[jnp.arange(0, 64, 8)].set(True)
+    fa = affected_frontier(touched, membership, n_valid, "auto")
+    fc = affected_frontier(touched, membership, n_valid, "community")
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fc))
+
+
+def test_affected_frontier_auto_threshold_boundary():
+    """Exactly n_valid / DENOM touched vertices still selects vertex mode
+    (the policy is <=), one more tips it to community."""
+    from repro.core.engine import AUTO_SCREEN_TOUCHED_DENOM as DENOM
+    n_cap = DENOM * 4
+    n_valid = jnp.int32(n_cap)
+    membership = jnp.zeros(n_cap + 1, jnp.int32).at[n_cap].set(n_cap)
+
+    at_limit = jnp.zeros(n_cap + 1, bool).at[jnp.arange(4)].set(True)
+    fa = affected_frontier(at_limit, membership, n_valid, "auto")
+    fv = affected_frontier(at_limit, membership, n_valid, "vertex")
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fv))
+
+    over = jnp.zeros(n_cap + 1, bool).at[jnp.arange(5)].set(True)
+    fa = affected_frontier(over, membership, n_valid, "auto")
+    fc = affected_frontier(over, membership, n_valid, "community")
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fc))

@@ -91,3 +91,71 @@ def test_pallas_apply_backend_bit_for_bit_through_stream(gold):
     init, batches = capture.dynamic_stream()
     mem = louvain_dynamic(init, batches, apply_backend="pallas").membership
     assert np.array_equal(mem, gold["dynamic__sbm_stream"])
+
+
+# -- the scan-backend matrix: every new scanner reproduces the SAME goldens.
+#
+# The frontier-compacted sort-reduce scanner and the fused Pallas ELL round
+# are work optimizations, not semantics changes — each must land on the
+# committed pre-refactor memberships element for element, on both the cold
+# static paths and the streaming path where the compaction actually engages.
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_compact_backend_static_bit_for_bit(gold, corpora, name):
+    """Cold start: no seed frontier, so "compact" resolves to the full scan
+    — the knob must be a no-op on the static path."""
+    mem = louvain(corpora[name],
+                  LouvainConfig(scan_backend="compact")).membership
+    assert np.array_equal(mem, gold[f"single__{name}"])
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_fused_ell_backend_bit_for_bit(gold, corpora, name):
+    """The fused scan+apply kernel reproduces the scan-only ELL goldens."""
+    mem = louvain(corpora[name],
+                  LouvainConfig(scan_backend="ell_fused")).membership
+    assert np.array_equal(mem, gold[f"ell__{name}"])
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_ell_default_auto_routes_fused_bit_for_bit(gold, corpora, name):
+    """use_ell_kernel under the default scan_backend="auto" now runs the
+    FUSED round — and must still land on the scan-only goldens."""
+    mem = louvain(corpora[name],
+                  LouvainConfig(use_ell_kernel=True)).membership
+    assert np.array_equal(mem, gold[f"ell__{name}"])
+
+
+@pytest.mark.parametrize("backend", [
+    "compact", pytest.param("auto", marks=_slow), "full"])
+def test_dynamic_stream_scan_backends_bit_for_bit(gold, backend):
+    """The streaming path — where the compacted scanner actually engages
+    (delta-screened frontiers) — is pinned for every backend value."""
+    init, batches = capture.dynamic_stream()
+    mem = louvain_dynamic(init, batches,
+                          config=LouvainConfig(scan_backend=backend)
+                          ).membership
+    assert np.array_equal(mem, gold["dynamic__sbm_stream"])
+
+
+def test_batched_stream_compact_bit_for_bit(gold):
+    """One-stream batched serving with the compacted scanner equals the
+    sequential compact driver exactly (vmapped cond/select semantics must
+    not perturb results)."""
+    from repro.core.multistream import louvain_dynamic_batched
+
+    init, batches = capture.dynamic_stream()
+    prev = louvain(init).membership
+    bat = louvain_dynamic_batched(
+        [init], [batches], prevs=[prev],
+        config=LouvainConfig(scan_backend="compact"))
+    seq = louvain_dynamic(init, batches, prev=prev,
+                          config=LouvainConfig(scan_backend="compact"))
+    assert np.array_equal(bat.stream_membership(0), seq.membership)

@@ -1,0 +1,171 @@
+"""Fused Pallas ELL scan+apply kernel vs its pure-jnp oracle and vs the
+engine's generic scan-then-decide path (interpret=True executes the kernel
+body on CPU).  The fused round is pinned BIT-FOR-BIT: same best moves, same
+gated decision, same memberships after full engine rounds."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dev dep — see tests/_hypothesis_fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import ell_move
+from repro.core.engine import (EngineConfig, MoveEngine, round_gate)
+from repro.core.graph import to_ell_blocks
+from repro.core.louvain import singleton_init
+from repro.data import sbm_graph
+from repro.kernels.louvain_scan import ops
+from repro.kernels.louvain_scan.fused import louvain_fused_ref
+
+
+def _random_fused_inputs(rng, r, d, n_comms=8, sentinel=64):
+    c = rng.integers(-1, n_comms, (r, d)).astype(np.int32)
+    w = (rng.random((r, d)) + 0.1).astype(np.float32)
+    w = np.where(c >= 0, w, 0).astype(np.float32)
+    sig = (rng.random((r, d)) * 5).astype(np.float32)
+    # Community sizes must be CONSISTENT per community id (the kernel takes
+    # a row-min over slots of the best community).
+    comm_sizes = rng.integers(1, 5, sentinel + 1).astype(np.int32)
+    size = np.where(c >= 0, comm_sizes[np.maximum(c, 0)], 0).astype(np.int32)
+    ki = (rng.random((r, 1)) * 3 + 0.1).astype(np.float32)
+    cown = rng.integers(0, n_comms, (r, 1)).astype(np.int32)
+    sigown = (rng.random((r, 1)) * 5).astype(np.float32)
+    sizeown = comm_sizes[cown[:, 0]][:, None].astype(np.int32)
+    rows = rng.permutation(sentinel)[:r].astype(np.int32)[:, None]
+    front = rng.integers(0, 2, (r, 1)).astype(np.int32)
+    m = np.float32(10.0)
+    return tuple(jnp.asarray(x) for x in
+                 (c, w, sig, size, ki, cown, sigown, sizeown, rows, front,
+                  m))
+
+
+@pytest.mark.parametrize("r,d", [(8, 4), (8, 16), (16, 16), (32, 64)])
+@pytest.mark.parametrize("gate_fraction", [1, 2])
+def test_fused_pallas_matches_ref(r, d, gate_fraction):
+    rng = np.random.default_rng(r * 1000 + d + gate_fraction)
+    ins = _random_fused_inputs(rng, r, d)
+    round_ix = jnp.int32(3)
+    out_p = ops.louvain_fused(*ins, round_ix, gate_fraction=gate_fraction,
+                              sentinel=64, use_pallas=True, interpret=True)
+    out_r = louvain_fused_ref(*ins, round_ix, gate_fraction=gate_fraction,
+                              sentinel=64)
+    for a, b, what in zip(out_p, out_r, ("best_c", "best_dq", "do_move")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), what)
+
+
+@pytest.mark.parametrize("block_rows", [1, 2, 4, 8])
+def test_fused_block_rows_invariant(block_rows):
+    """Grid tiling must not change the fused decision."""
+    rng = np.random.default_rng(11)
+    ins = _random_fused_inputs(rng, 16, 8)
+    round_ix = jnp.int32(1)
+    ref = louvain_fused_ref(*ins, round_ix, gate_fraction=2, sentinel=64)
+    out = ops.louvain_fused(*ins, round_ix, gate_fraction=2, sentinel=64,
+                            use_pallas=True, interpret=True,
+                            block_rows=block_rows)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 8, 16]),
+       st.sampled_from([4, 8, 32]), st.integers(0, 7))
+def test_fused_pallas_matches_ref_property(seed, r, d, round_ix):
+    rng = np.random.default_rng(seed)
+    ins = _random_fused_inputs(rng, r, d, n_comms=max(2, d // 2))
+    out_p = ops.louvain_fused(*ins, jnp.int32(round_ix), gate_fraction=2,
+                              sentinel=64, use_pallas=True, interpret=True)
+    out_r = louvain_fused_ref(*ins, jnp.int32(round_ix), gate_fraction=2,
+                              sentinel=64)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_in_kernel_gate_matches_engine_round_gate():
+    """The kernel's inlined Weyl gate equals engine.round_gate for the same
+    (vertex id, round) — the constants have ONE home and one behavior."""
+    rng = np.random.default_rng(5)
+    r, d = 32, 8
+    ins = list(_random_fused_inputs(rng, r, d))
+    # Rig every row to an unambiguous improving move with no guard blocks:
+    # all moves pass except where the gate says no.
+    ins[3] = jnp.full((r, d), 3, jnp.int32)           # sizes > 1
+    ins[7] = jnp.full((r, 1), 3, jnp.int32)           # own size > 1
+    ins[9] = jnp.ones((r, 1), jnp.int32)              # frontier on
+    rows = ins[8]
+    for round_ix in range(6):
+        _, _, mv = ops.louvain_fused(
+            *ins, jnp.int32(round_ix), gate_fraction=2, sentinel=64,
+            use_pallas=True, interpret=True)
+        _, ref_dq, ref_mv = louvain_fused_ref(
+            *ins, jnp.int32(round_ix), gate_fraction=2, sentinel=64)
+        gate = np.asarray(round_gate(rows[:, 0], jnp.int32(round_ix), 2))
+        moved = np.asarray(mv) > 0
+        np.testing.assert_array_equal(moved, np.asarray(ref_mv) > 0)
+        # every mover passed the engine's gate — no kernel-side drift
+        assert not np.any(moved & ~gate)
+        # and on gated-off rows with a found improving move, the gate is
+        # the ONLY thing that blocked (dq > 0, frontier on, guard off)
+        blocked_only_by_gate = (~gate) & (np.asarray(ref_dq) > 0)
+        assert not np.any(moved[blocked_only_by_gate])
+
+
+def _engine_rounds(g, fused):
+    """One full engine move phase over SBM, via the requested scanner.
+
+    Narrow ELL widths on purpose: every vertex of degree > 16 must land in
+    the leftover set so the sort-reduce/gated_move_mask composition path of
+    ``FusedELLScanner.decide_moves`` actually runs.
+    """
+    blocks, leftover_np = to_ell_blocks(g, (16,))      # force a leftover set
+    leftover = jnp.asarray(leftover_np)
+    k = g.vertex_weights()
+    m = g.total_weight()
+    comm0, sigma0, frontier0 = singleton_init(g)
+    if fused:
+        scanner = ell_move.FusedELLScanner(
+            g, tuple(blocks), leftover, k, m, use_pallas=True,
+            interpret=True, gate_fraction=2)
+    else:
+        scanner = ell_move.ELLScanner(
+            g, tuple(blocks), leftover, k, m, use_pallas=True,
+            interpret=True)
+    st = MoveEngine(scanner, EngineConfig()).run(
+        comm0, sigma0, frontier0, jnp.float32(0.01))
+    return st
+
+
+def test_fused_engine_rounds_bit_for_bit_with_hub_leftovers():
+    """Full engine phase, fused vs scan-only, on a graph whose hubs exceed
+    the widest ELL tile (the leftover/sort-reduce composition path)."""
+    g, _ = sbm_graph(n_communities=4, size=24, p_in=0.5, p_out=0.02, seed=7)
+    _, leftover_np = to_ell_blocks(g, (16,))           # same widths as below
+    assert len(leftover_np) > 0, "corpus has no hub leftovers; widen test"
+    st_ell = _engine_rounds(g, fused=False)
+    st_fused = _engine_rounds(g, fused=True)
+    np.testing.assert_array_equal(np.asarray(st_ell.comm),
+                                  np.asarray(st_fused.comm))
+    assert int(st_ell.iters) == int(st_fused.iters)
+    assert float(st_ell.dq_sum) == float(st_fused.dq_sum)
+
+
+def test_fused_move_phase_warm_start_bit_for_bit():
+    """Warm start + seed frontier through move_phase_ell(fused=True) equals
+    the scan-only phase (the streaming entry into the fused round)."""
+    g, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=2)
+    n_cap = g.n_cap
+    rng = np.random.default_rng(0)
+    comm0 = jnp.asarray(np.concatenate(
+        [rng.integers(0, 16, n_cap), [n_cap]]).astype(np.int32))
+    fr = np.zeros(n_cap + 1, bool)
+    fr[:24] = True
+    fr = jnp.asarray(fr)
+    c0, i0, d0 = ell_move.move_phase_ell(g, jnp.float32(0.01), comm0=comm0,
+                                         frontier0=fr)
+    c1, i1, d1 = ell_move.move_phase_ell(g, jnp.float32(0.01), comm0=comm0,
+                                         frontier0=fr, fused=True)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    assert (int(i0), float(d0)) == (int(i1), float(d1))
