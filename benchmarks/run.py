@@ -70,8 +70,10 @@ def main() -> None:
                 lambda: bench_fig5_runtime.run(small=small, repeats=repeats))
     if want("fig6"):
         from benchmarks import bench_fig6_phase_split
-        section("fig6", "phase and pass split",
-                lambda: bench_fig6_phase_split.run(small=small))
+        section("fig6", "phase and pass split "
+                "(per agg backend x capacity ladder)",
+                lambda: bench_fig6_phase_split.run(small=small,
+                                                   repeats=repeats))
     if want("fig7"):
         from benchmarks import bench_fig7_edge_factor
         section("fig7", "runtime per edge",

@@ -61,6 +61,83 @@ def compact_work_cap(e_cap: int, frac: float = COMPACT_WORK_FRAC) -> int:
     return max(1, min(int(e_cap), max(COMPACT_WORK_MIN, int(e_cap * frac))))
 
 
+# ---------------------------------------------------------------------------
+# Aggregation-backend policy (the ``LouvainConfig.agg_backend`` knob).
+# ---------------------------------------------------------------------------
+
+#: Accepted values of ``LouvainConfig.agg_backend``.
+AGG_BACKENDS = ("auto", "sort", "pallas")
+
+
+def resolve_agg_backend(backend: str) -> str:
+    """Map the ``agg_backend`` knob to a concrete aggregation backend.
+
+    ``"sort"`` is the XLA lexsort -> segment_sum -> scatter chain;
+    ``"pallas"`` fuses the post-sort group-detect + weight-accumulate +
+    emit into one carry-chained kernel sweep (``repro.kernels.aggregate``).
+    ``"auto"`` picks the kernel on TPU and the XLA chain elsewhere (the
+    interpreter is a correctness tool, not a fast path).
+    """
+    if backend not in AGG_BACKENDS:
+        raise ValueError(f"agg_backend must be one of {AGG_BACKENDS}; "
+                         f"got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "sort"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Coarse-pass capacity ladder (the ``LouvainConfig.use_ladder`` knob).
+#
+# Aggregation shrinks the live graph 10-100x, but buffers keep their original
+# capacity — so every later pass scans, renumbers and sorts e_cap slots that
+# are almost all padding.  The ladder re-buckets the coarse graph down to the
+# smallest power-of-two tier that fits ``(n_comms, e_valid)`` with slack, so
+# pass cost follows |V'|, |E'|.  Power-of-two tiers bound the number of
+# distinct compiled shapes at log2(e_cap) per phase (each tier's phases are
+# jit-cached by shape, the same reuse trick as the PR 3 ELL runner).
+# ---------------------------------------------------------------------------
+
+#: Vertex-capacity floor — below this, shrinking buys dispatch overhead, not
+#: scan time, so the ladder stops.
+LADDER_MIN_N_CAP = 64
+
+#: Edge-capacity floor (same rationale; keeps the sort non-trivial).
+LADDER_MIN_E_CAP = 256
+
+#: Headroom multiplier applied to the live counts before tier rounding, so a
+#: tier is never an exact fit (renumber/scatter scratch slots stay cheap).
+LADDER_SLACK = 1.25
+
+#: Hysteresis: a pass only re-buckets when the candidate tier is at least
+#: this factor below the current capacity.  A < 2x shrink would re-jit every
+#: phase to save less than half the scan — not worth the compile.
+LADDER_HYSTERESIS = 2
+
+
+def _pow2_at_least(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def resolve_coarse_capacity(n_comms: int, e_valid: int,
+                            n_cap: int, e_cap: int) -> Tuple[int, int]:
+    """Ladder tier for the NEXT pass of a coarse graph.
+
+    Returns ``(n_cap_new, e_cap_new)``: each dimension independently drops
+    to the smallest power-of-two tier >= ``LADDER_SLACK`` x its live count
+    (floored at ``LADDER_MIN_*``), but only when that tier undercuts the
+    current capacity by at least ``LADDER_HYSTERESIS`` — otherwise the
+    dimension keeps its current capacity (never grows).  ``(n_cap, e_cap)``
+    back means "don't re-bucket".
+    """
+    n_tier = max(_pow2_at_least(int(n_comms * LADDER_SLACK)), LADDER_MIN_N_CAP)
+    e_tier = max(_pow2_at_least(int(e_valid * LADDER_SLACK)), LADDER_MIN_E_CAP)
+    n_new = n_tier if n_tier * LADDER_HYSTERESIS <= n_cap else n_cap
+    e_new = e_tier if e_tier * LADDER_HYSTERESIS <= e_cap else e_cap
+    return n_new, e_new
+
+
 def resolve_scan_backend(backend: str, *, use_ell_kernel: bool = False,
                          frontier_frac: float | None = None) -> str:
     """Map the ``scan_backend`` knob to a concrete scanner for ONE pass.

@@ -6,11 +6,28 @@ edge slots:
 
     (i, j, w)  ->  (C[i], C[j], w)  --lexsort--> groups --segment_sum--> G''
 
-The sort yields *exact* per-super-vertex degrees, so our preallocated coarse
-CSR is dense rather than holey — the over-estimation the paper needs for its
-hashtable path is unnecessary under sort-reduce (see DESIGN.md §2).  The
-coarse graph is written into a preallocated buffer of the same capacity as the
-input (coarsening never grows |E|), giving the paper's two-buffer ping-pong.
+**Why sort-reduce instead of the paper's holey CSR.**  GVE-Louvain cannot
+know a super-vertex's degree before merging its members' adjacency lists, so
+it over-allocates each coarse row (sum of member degrees), writes into the
+holes via per-thread hashtables, and lives with a "holey" CSR whose rows are
+padded internally.  Under XLA, dynamic per-row hashing is hostile and padded
+holes would poison every downstream ``segment_*`` with garbage slots.  The
+sort-reduce reverses the order of discovery: lexsorting the relabeled slots
+makes duplicate coarse edges adjacent, so one pass yields *exact* per-super-
+vertex degrees and the coarse CSR is written dense — the paper's
+over-estimation is unnecessary because the sort IS the merge.  The coarse
+graph lands in a preallocated buffer of at most the input's capacity
+(coarsening never grows |E|), giving the paper's two-buffer ping-pong; the
+capacity ladder (``repro.configs.louvain_arch.resolve_coarse_capacity``)
+then re-buckets it down so later passes pay coarse-graph cost.
+
+Two interchangeable backends resolve the post-sort groups
+(``LouvainConfig.agg_backend``): the XLA chain (global cumsum group ids ->
+``segment_sum`` weights -> three scatters) and the fused Pallas sweep
+(``repro.kernels.aggregate``, one carry-chained kernel trip over the sorted
+slots).  Group keys/positions agree exactly; weight sums agree bit-for-bit
+for integer-valued weights (exact float32 sums — all golden corpora) and to
+float32 rounding otherwise.
 """
 
 from __future__ import annotations
@@ -61,10 +78,15 @@ def community_vertices_csr(
     return offsets.astype(jnp.int32), order.astype(jnp.int32)
 
 
-def aggregate_graph(graph: CSRGraph, comm: jax.Array, n_comms: jax.Array) -> CSRGraph:
+def aggregate_graph(graph: CSRGraph, comm: jax.Array, n_comms: jax.Array,
+                    backend: str = "sort") -> CSRGraph:
     """Algorithm 3 as sort-reduce; returns the coarse graph at equal capacity.
 
     ``comm`` must be renumbered (dense ids in [0, n_comms), sentinel n_cap).
+    ``backend`` resolves the post-sort groups: ``"sort"`` (XLA cumsum +
+    segment_sum + scatters) or ``"pallas"`` (one fused carry-chained kernel
+    sweep, ``repro.kernels.aggregate``) — see the module docstring for the
+    exactness contract.
     """
     n_cap, e_cap = graph.n_cap, graph.e_cap
     ci = comm[graph.src]       # padding slots -> sentinel
@@ -74,29 +96,49 @@ def aggregate_graph(graph: CSRGraph, comm: jax.Array, n_comms: jax.Array) -> CSR
     order = jnp.lexsort((cj, ci))
     s_ci, s_cj, s_w = ci[order], cj[order], w[order]
 
-    prev_i = jnp.concatenate([jnp.full((1,), -1, jnp.int32), s_ci[:-1]])
-    prev_j = jnp.concatenate([jnp.full((1,), -1, jnp.int32), s_cj[:-1]])
-    new_group = (s_ci != prev_i) | (s_cj != prev_j)
-    gid = jnp.cumsum(new_group.astype(jnp.int32)) - 1
-    group_w = jax.ops.segment_sum(s_w, gid, num_segments=e_cap)
+    if backend == "pallas":
+        from repro.kernels.aggregate import coarsen_groups_pallas
+        emit, gpos, g_src, g_dst, g_w = coarsen_groups_pallas(
+            s_ci, s_cj, s_w, sent=n_cap)
+        # One record per live group, at the same dense position the sort
+        # path uses (live groups precede sentinel padding in sort order).
+        pos = jnp.where(emit, gpos, e_cap)
+        coarse_src = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(
+            jnp.where(emit, g_src, n_cap))[:e_cap]
+        coarse_dst = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(
+            jnp.where(emit, g_dst, n_cap))[:e_cap]
+        coarse_w = jnp.zeros((e_cap + 1,), jnp.float32).at[pos].set(
+            jnp.where(emit, g_w, 0.0))[:e_cap]
+    elif backend == "sort":
+        prev_i = jnp.concatenate([jnp.full((1,), -1, jnp.int32), s_ci[:-1]])
+        prev_j = jnp.concatenate([jnp.full((1,), -1, jnp.int32), s_cj[:-1]])
+        new_group = (s_ci != prev_i) | (s_cj != prev_j)
+        gid = jnp.cumsum(new_group.astype(jnp.int32)) - 1
+        group_w = jax.ops.segment_sum(s_w, gid, num_segments=e_cap)
 
-    # First slot of each group scatters the coarse edge to position gid.
-    # Sentinel-src groups (padding) are redirected to a scratch slot.
-    live = new_group & (s_ci != n_cap)
-    pos = jnp.where(live, gid, e_cap)
-    group_total = group_w[gid]  # per-slot view of its group's summed weight
-    coarse_src = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(s_ci)[:e_cap]
-    coarse_dst = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(s_cj)[:e_cap]
-    coarse_w = jnp.zeros((e_cap + 1,), jnp.float32).at[pos].set(group_total)[:e_cap]
+        # First slot of each group scatters the coarse edge to position gid.
+        # Sentinel-src groups (padding) are redirected to a scratch slot.
+        live = new_group & (s_ci != n_cap)
+        pos = jnp.where(live, gid, e_cap)
+        group_total = group_w[gid]  # per-slot view of its group's sum
+        coarse_src = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(
+            s_ci)[:e_cap]
+        coarse_dst = jnp.full((e_cap + 1,), n_cap, jnp.int32).at[pos].set(
+            s_cj)[:e_cap]
+        coarse_w = jnp.zeros((e_cap + 1,), jnp.float32).at[pos].set(
+            group_total)[:e_cap]
+    else:
+        raise ValueError(f"unknown aggregation backend: {backend!r}")
 
+    live_rows = coarse_src < n_cap
     counts = jax.ops.segment_sum(
-        jnp.where(live, 1, 0), jnp.where(live, s_ci, n_cap),
+        jnp.where(live_rows, 1, 0), jnp.where(live_rows, coarse_src, n_cap),
         num_segments=n_cap + 1,
     )
     indptr = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts[:n_cap]).astype(jnp.int32)]
     )
-    e_valid = jnp.sum(jnp.where(live, 1, 0)).astype(jnp.int32)
+    e_valid = jnp.sum(jnp.where(live_rows, 1, 0)).astype(jnp.int32)
     return CSRGraph(
         indptr=indptr,
         indices=coarse_dst,

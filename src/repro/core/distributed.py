@@ -14,8 +14,8 @@ of the distributed implementations it benchmarks (Vite / Ghosh et al.):
   - **Distributed aggregation**: local sort-reduce partially deduplicates each
     shard's relabeled edges, an `all_gather` shares the partials, and each
     shard re-reduces the rows it owns in the coarse partition.  (The gather is
-    the faithful baseline; EXPERIMENTS.md §Perf explores the all_to_all
-    variant.)
+    the faithful baseline; the all_to_all variant lives in
+    ``repro.configs.louvain_arch`` as a dry-run cell.)
 
 Everything here is shape-static and lowers AOT on the production meshes — see
 launch/dryrun.py.
@@ -23,6 +23,7 @@ launch/dryrun.py.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -313,6 +314,23 @@ def make_distributed_move(
     return jax.jit(phase)
 
 
+def make_tier_phases(mesh: Mesh, axes: Tuple[str, ...], *,
+                     max_iterations: int = 20, gate_fraction: int = 2,
+                     use_pruning: bool = True):
+    """The capacity-ladder phase factory: ``spec -> (move, agg)``, cached so
+    every tier's phases compile once and are reused across passes/batches
+    (static and streaming drivers share this ONE builder)."""
+
+    @functools.lru_cache(maxsize=None)
+    def phases_for(spec_: ShardedGraphSpec):
+        return (make_distributed_move(
+                    mesh, axes, spec_, max_iterations=max_iterations,
+                    gate_fraction=gate_fraction, use_pruning=use_pruning),
+                make_distributed_aggregate(mesh, axes, spec_))
+
+    return phases_for
+
+
 def make_distributed_aggregate(mesh: Mesh, axes: Tuple[str, ...],
                                spec: ShardedGraphSpec):
     """Distributed coarsening: local sort-reduce, all_gather partials,
@@ -423,6 +441,31 @@ def sharded_modularity(src_g, dst_g, w_g, comm):
     return internal / (2.0 * m) - jnp.sum((sig / (2.0 * m)) ** 2)
 
 
+def _rebucket_live_host(src_g, dst_g, w_g, old_sent: int,
+                        spec_new: ShardedGraphSpec):
+    """Pull live slots host-side and re-bucket them into ``spec_new``'s
+    layout, doubling ``e_per_shard`` until the ownership fits (the ladder's
+    shrink can concentrate coarse edges on few shards).  A VERTEX id beyond
+    the layout is a caller bug doubling can never fix — checked up front so
+    the retry loop only ever sees edge-capacity overflow (and terminates:
+    ``e_per_shard >= len(src)`` always fits)."""
+    src = np.asarray(src_g)
+    dst = np.asarray(dst_g)
+    w = np.asarray(w_g)
+    live = src < old_sent
+    src, dst, w = src[live], dst[live], w[live]
+    if len(src) and int(src.max()) >= spec_new.n_pad:
+        raise ValueError(
+            f"live vertex id {int(src.max())} does not fit the target "
+            f"layout (n_pad={spec_new.n_pad})")
+    while True:
+        try:
+            return (*bucket_slots_host(src, dst, w, spec_new), spec_new)
+        except ValueError:
+            spec_new = spec_new._replace(
+                e_per_shard=2 * spec_new.e_per_shard)
+
+
 def sharded_louvain_passes(
     src_g, dst_g, w_g,
     spec: ShardedGraphSpec,
@@ -435,6 +478,8 @@ def sharded_louvain_passes(
     initial_tolerance: float = 0.01,
     tolerance_drop: float = 10.0,
     aggregation_tolerance: float = 0.8,
+    phases_for=None,
+    use_ladder: bool = False,
 ):
     """Host pass loop over prebuilt jit'd phases on partitioned edge arrays.
 
@@ -445,9 +490,22 @@ def sharded_louvain_passes(
     arrays are never mutated (aggregation emits fresh coarse arrays), so
     streaming callers can keep them resident across calls.
 
-    Returns (global_comm (n_pad,) device array, n_communities, stats).
+    With ``use_ladder`` (requires ``phases_for``, a ``spec -> (move, agg)``
+    factory — callers cache it so tiers reuse compiled phases), coarse
+    graphs are re-bucketed down through the same host-side machinery the
+    streaming driver uses to GROW capacity (``bucket_slots_host``): after
+    each aggregation the layout shrinks to the power-of-two tier fitting
+    the coarse graph, so later passes' collectives and per-shard sorts run
+    at coarse capacity.  Memberships are invariant to the layout.
+
+    Returns (global_comm (n_pad,) device array, n_communities, stats);
+    ``global_comm`` stays at the ORIGINAL ``spec.n_pad`` length.
     """
+    from repro.configs.louvain_arch import (LADDER_SLACK, _pow2_at_least,
+                                            resolve_coarse_capacity)
+
     n_pad, sent = spec.n_pad, spec.sentinel
+    e_per0 = spec.e_per_shard      # caller capacity: the overflow contract
     idx = np.arange(n_pad + 1)
     shape_token = jnp.zeros((n_pad + 1,), jnp.float32)
     global_comm = jnp.arange(n_pad, dtype=jnp.int32)
@@ -472,17 +530,66 @@ def sharded_louvain_passes(
             src_g, dst_g, w_g, comm0, sigma0, k, frontier0, m,
             jnp.float32(tol))
         comm_ren, n_comms = replicated_renumber(comm)
-        global_comm = comm_ren[global_comm]
+        global_comm = comm_ren[jnp.minimum(global_comm, sent)]
         iters_i, n_comms_i = int(iters), int(n_comms)
         stats.append({"iterations": iters_i, "n_communities": n_comms_i,
-                      "n_vertices": n_live, "dq_sum": float(dq_sum)})
+                      "n_vertices": n_live, "n_pad": sent,
+                      "e_per_shard": spec.e_per_shard,
+                      "dq_sum": float(dq_sum)})
         converged = iters_i <= 1
         low_shrink = n_comms_i / max(n_live, 1) > aggregation_tolerance
         if converged or low_shrink or p == max_passes - 1:
             break
-        src_g, dst_g, w_g, _, owned_max = agg(src_g, dst_g, w_g, comm_ren)
-        if int(owned_max) > spec.e_per_shard:
-            raise AggregationOverflow(int(owned_max), spec.e_per_shard)
+        while True:
+            a_src, a_dst, a_w, e_valid, owned_max = agg(src_g, dst_g, w_g,
+                                                        comm_ren)
+            owned = int(owned_max)
+            if owned <= spec.e_per_shard:
+                src_g, dst_g, w_g = a_src, a_dst, a_w
+                break
+            # A shrunk tier can under-provision a skewed shard the next
+            # aggregation concentrates coarse edges onto.  If the shortfall
+            # is the LADDER's doing (current tier below the caller's
+            # capacity), grow the fine layout back and retry — only a skew
+            # beyond the caller's own e_per_shard raises, exactly as
+            # before the ladder existed.
+            if (not use_ladder or phases_for is None
+                    or spec.e_per_shard >= e_per0):
+                raise AggregationOverflow(owned, spec.e_per_shard)
+            grow = spec._replace(e_per_shard=min(
+                e_per0, max(owned, 2 * spec.e_per_shard)))
+            src_g, dst_g, w_g, spec = _rebucket_live_host(
+                src_g, dst_g, w_g, spec.sentinel, grow)
+            move, agg = phases_for(spec)
+        if use_ladder and phases_for is not None:
+            n_new, e_new = resolve_coarse_capacity(
+                n_comms_i, int(e_valid), spec.n_pad,
+                spec.e_per_shard * spec.n_shards)
+            if (n_new, e_new) != (spec.n_pad,
+                                  spec.e_per_shard * spec.n_shards):
+                old_sent = spec.sentinel
+                # Per-shard edge tier: fair share of the global tier,
+                # floored at the MEASURED worst-shard ownership (plus
+                # slack) — coarse edges concentrate on few shards, and
+                # sizing only by the total would make the re-bucket fail
+                # and walk a doubling retry.  Power-of-two quantized so
+                # data-dependent skew cannot mint a fresh spec (and a
+                # recompile) per pass.  (The bucket retry below stays as
+                # the net: a changed v_per shifts ownership.)
+                e_tier = _pow2_at_least(max(
+                    -(-e_new // spec.n_shards),
+                    int(owned * LADDER_SLACK), 1))
+                tier = ShardedGraphSpec(
+                    spec.n_shards, -(-n_new // spec.n_shards), e_tier,
+                    spec.n_shards * (-(-n_new // spec.n_shards)))
+                if tier != spec:
+                    src_g, dst_g, w_g, spec = _rebucket_live_host(
+                        src_g, dst_g, w_g, old_sent, tier)
+                    move, agg = phases_for(spec)
+                    sent = spec.sentinel
+                    idx = np.arange(spec.n_pad + 1)
+                    shape_token = jnp.zeros((spec.n_pad + 1,), jnp.float32)
+                    ones_frontier = jnp.ones((spec.n_pad + 1,), bool)
         n_live = n_comms_i
         tol /= tolerance_drop
     return global_comm, n_comms_i, stats
@@ -503,6 +610,7 @@ def distributed_louvain(
     init_membership=None,
     init_frontier=None,
     e_per_shard: int | None = None,
+    use_ladder: bool = True,
 ):
     """End-to-end multi-device GVE-Louvain (host pass loop, jit'd phases).
 
@@ -511,7 +619,9 @@ def distributed_louvain(
     ``repro.core.distributed_dynamic`` builds on this).  ``e_per_shard``
     reserves per-shard slot headroom — aggregation can concentrate coarse
     edges on few shards (community skew), which otherwise raises
-    ``AggregationOverflow``.
+    ``AggregationOverflow``.  ``use_ladder`` re-buckets coarse graphs down
+    the capacity ladder between passes (memberships unchanged; per-tier
+    phases are built once and cached for the call).
 
     Returns (membership (n,), n_communities, pass_stats list).
     """
@@ -520,10 +630,10 @@ def distributed_louvain(
         graph, n_shards, e_per_shard=e_per_shard)
     n = int(graph.n_valid)
 
-    move = make_distributed_move(
-        mesh, axes, spec, max_iterations=max_iterations,
+    phases_for = make_tier_phases(
+        mesh, axes, max_iterations=max_iterations,
         gate_fraction=gate_fraction, use_pruning=use_pruning)
-    agg = make_distributed_aggregate(mesh, axes, spec)
+    move, agg = phases_for(spec)
 
     from repro.core.louvain import pad_membership
     mem0 = fr0 = None
@@ -544,7 +654,8 @@ def distributed_louvain(
             init_membership=mem0, init_frontier=fr0,
             max_passes=max_passes, initial_tolerance=initial_tolerance,
             tolerance_drop=tolerance_drop,
-            aggregation_tolerance=aggregation_tolerance)
+            aggregation_tolerance=aggregation_tolerance,
+            phases_for=phases_for, use_ladder=use_ladder)
     membership = np.asarray(global_comm[:n])
     return membership, int(len(np.unique(membership))), stats
 

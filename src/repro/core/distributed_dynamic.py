@@ -43,9 +43,10 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.delta import EdgeBatch, sort_reduce_apply_slots
 from repro.core.distributed import (AggregationOverflow, ShardedGraphSpec,
-                                    _shard_index, bucket_slots_host,
+                                    _rebucket_live_host, _shard_index,
                                     make_distributed_aggregate,
                                     make_distributed_move,
+                                    make_tier_phases,
                                     partition_graph_host,
                                     sharded_louvain_passes,
                                     sharded_modularity)
@@ -160,12 +161,17 @@ def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
 
 
 def _rebucket_host(src_g, dst_g, w_g, spec: ShardedGraphSpec):
-    """Pull live slots to the host and re-bucket into ``spec``'s layout."""
-    src = np.asarray(src_g)
-    dst = np.asarray(dst_g)
-    w = np.asarray(w_g)
-    live = src < spec.sentinel
-    return bucket_slots_host(src[live], dst[live], w[live], spec)
+    """Pull live slots to the host and re-bucket into ``spec``'s layout
+    (the shared ``distributed._rebucket_live_host`` body; growth callers
+    size ``spec`` so the ownership always fits — a layout the slots don't
+    fit is a caller bug, not a retry case)."""
+    src2, dst2, w2, spec2 = _rebucket_live_host(src_g, dst_g, w_g,
+                                                spec.sentinel, spec)
+    if spec2 != spec:
+        raise ValueError(
+            f"slots do not fit the caller-sized layout: needed "
+            f"e_per_shard={spec2.e_per_shard} > {spec.e_per_shard}")
+    return src2, dst2, w2
 
 
 def _build_phases(mesh, axes, spec, config: LouvainConfig,
@@ -244,6 +250,17 @@ def louvain_dynamic_sharded(
                                         apply_backend)
     sent = spec.sentinel
 
+    # Coarse-pass ladder phases: one (move, agg) per tier layout, cached so
+    # every batch's pass loop reuses the compiled phases.  The ladder only
+    # touches the COARSE graphs inside the pass loop — the resident fine
+    # arrays stay at stream capacity (the driver "un-ladders" by
+    # construction: the next batch applies to ``src_g``/``dst_g``/``w_g``,
+    # which the pass loop never mutates).
+    phases_for = make_tier_phases(
+        mesh, axes, max_iterations=config.max_iterations,
+        gate_fraction=config.gate_fraction,
+        use_pruning=config.use_pruning)
+
     pass_kw = dict(
         max_passes=config.max_passes,
         initial_tolerance=config.initial_tolerance,
@@ -274,17 +291,26 @@ def louvain_dynamic_sharded(
             try:
                 return sharded_louvain_passes(
                     src_g, dst_g, w_g, spec, move, agg, n_live_,
+                    phases_for=phases_for, use_ladder=config.use_ladder,
                     **kw, **pass_kw)
             except AggregationOverflow as exc:
                 if not grow_capacity:
                     raise
                 _grow_to(max(2 * spec.e_per_shard, exc.owned_max))
 
+    def _mem_from(global_comm, n_valid):
+        """Replicated membership from a pass-loop result.  Invalid slots are
+        forced to the sentinel: with the coarse-pass ladder they can carry
+        stale SMALL sentinel values (a shrunk tier's n_pad), which a later
+        warm start would misread as real community assignments."""
+        gc = jnp.where(jnp.arange(spec.n_pad) < n_valid, global_comm,
+                       jnp.int32(sent))
+        return jnp.concatenate([gc, jnp.asarray([sent], jnp.int32)])
+
     with mesh:
         if prev is None:
             global_comm, n_comms, _ = _passes_with_growth(n_live)
-            mem = jnp.concatenate(
-                [global_comm, jnp.asarray([sent], jnp.int32)])
+            mem = _mem_from(global_comm, n_live)
         else:
             mem = jnp.asarray(pad_membership(
                 np.asarray(prev, np.int32)[: spec.n_pad], spec.n_pad))
@@ -316,8 +342,7 @@ def louvain_dynamic_sharded(
             n_live = int(n_valid_dev)
             global_comm, n_comms, _ = _passes_with_growth(
                 n_live, init_membership=mem, init_frontier=frontier)
-            mem = jnp.concatenate(
-                [global_comm, jnp.asarray([sent], jnp.int32)])
+            mem = _mem_from(global_comm, n_live)
             t2 = time.perf_counter()
 
             touched_counts.append(jnp.sum(touched))

@@ -116,6 +116,13 @@ def louvain_dynamic(
     ``apply_backend`` selects the batch-apply group-resolve (``"xla"`` or
     the ``"pallas"`` kernel — bit-identical results).
 
+    With ``config.use_ladder`` the warm re-optimizations ride the coarse-
+    pass capacity ladder INSIDE each ``louvain`` call; the ladder never
+    touches the resident stream graph — ``louvain`` re-buckets only its
+    internal coarse graphs, so the next batch always applies at stream
+    capacity (the driver is "un-laddered" by construction) and the
+    compiled apply/screen programs never change shape across the stream.
+
     Returns the final graph/membership plus per-batch stats; the acceptance
     property is that modularity tracks a cold recompute while
     ``frontier_size`` stays a small fraction of n.

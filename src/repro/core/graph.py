@@ -8,7 +8,7 @@ tracked with dynamic scalars.  Invalid slots use the sentinel vertex ``n_cap``
 (all index arrays are addressable up to ``n_cap`` inclusive, so sentinel
 scatters land in a scratch slot).
 
-Conventions (see DESIGN.md §6):
+Conventions (the slot contract every module in ``repro.core`` assumes):
   - undirected edge {i,j}, i != j   -> two directed slots (i,j,w) and (j,i,w)
   - self loop {i,i}                 -> ONE slot (i,i,w)
   - K_i  = sum of slot weights out of i          (row sum of adjacency)
@@ -148,6 +148,76 @@ def from_networkx(g, *, n_cap: int | None = None, e_cap: int | None = None) -> C
             w.append(wt)
     return build_csr(np.array(src or [0][:0]), np.array(dst or [0][:0]),
                      np.array(w or [0.0][:0]), n, n_cap=n_cap, e_cap=e_cap)
+
+
+# Trace-time side-effect counters: jitted phases bump their key ONCE per
+# trace (Python bodies run only while tracing), so tests can assert a
+# bounded compile count across ladder tiers without poking jit internals.
+TRACE_COUNTS: dict = {}
+
+
+def count_trace(name: str) -> None:
+    """Bump a trace counter (call from inside a jitted function body)."""
+    TRACE_COUNTS[name] = TRACE_COUNTS.get(name, 0) + 1
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap_new", "e_cap_new"))
+def rebucket_capacity(graph: CSRGraph, *, n_cap_new: int,
+                      e_cap_new: int) -> CSRGraph:
+    """Copy a graph into buffers of different capacity (shrink OR grow).
+
+    The capacity-ladder primitive: valid data must fit the target
+    (``n_valid <= n_cap_new``, ``e_valid <= e_cap_new``, live edge slots in
+    a compact prefix — all true for ``aggregate_graph`` outputs and
+    ``build_csr``/``apply_edge_batch`` graphs).  Vertex-id arrays rewrite
+    the sentinel (old ``n_cap`` -> new); valid ids are < ``n_valid`` so
+    they survive either direction unchanged.  Callers check fit host-side;
+    see ``repro.configs.louvain_arch.resolve_coarse_capacity`` for the
+    tier policy.
+    """
+    count_trace("rebucket_capacity")
+    n_cap, e_cap = graph.n_cap, graph.e_cap
+
+    def remap(x):
+        # Valid ids < n_valid <= n_cap_new; everything >= min(n_cap,
+        # n_cap_new) is sentinel/padding in either direction.
+        return jnp.where(x >= jnp.int32(min(n_cap, n_cap_new)),
+                         jnp.int32(n_cap_new), x)
+
+    def resize_e(x, fill):
+        if e_cap_new <= e_cap:
+            return x[:e_cap_new]
+        return jnp.concatenate(
+            [x, jnp.full((e_cap_new - e_cap,), fill, x.dtype)])
+
+    if n_cap_new <= n_cap:
+        indptr = graph.indptr[: n_cap_new + 1]
+    else:
+        indptr = jnp.pad(graph.indptr, (0, n_cap_new - n_cap), mode="edge")
+    return CSRGraph(
+        indptr=indptr,
+        indices=remap(resize_e(graph.indices, jnp.int32(n_cap))),
+        weights=resize_e(graph.weights, jnp.float32(0.0)),
+        src=remap(resize_e(graph.src, jnp.int32(n_cap))),
+        n_valid=graph.n_valid,
+        e_valid=graph.e_valid,
+    )
+
+
+def rebucket_graph(graph: CSRGraph, n_cap_new: int,
+                   e_cap_new: int) -> CSRGraph:
+    """Host-checked wrapper over ``rebucket_capacity``: validates that the
+    live data fits the target capacity before re-bucketing (one device
+    sync; the ladder hot path calls the jitted core directly with counts
+    it already fetched)."""
+    n_valid, e_valid = int(graph.n_valid), int(graph.e_valid)
+    if n_valid > n_cap_new or e_valid > e_cap_new:
+        raise ValueError(
+            f"graph does not fit target capacity: n_valid={n_valid} > "
+            f"n_cap_new={n_cap_new} or e_valid={e_valid} > "
+            f"e_cap_new={e_cap_new}")
+    return rebucket_capacity(graph, n_cap_new=int(n_cap_new),
+                             e_cap_new=int(e_cap_new))
 
 
 def empty_like_caps(n_cap: int, e_cap: int) -> CSRGraph:

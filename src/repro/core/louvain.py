@@ -29,10 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.louvain_arch import (COMPACT_WORK_FRAC, compact_work_cap,
+                                        resolve_agg_backend,
+                                        resolve_coarse_capacity,
                                         resolve_scan_backend)
 from repro.core.aggregate import aggregate_graph, renumber_communities
 from repro.core.engine import affected_frontier
-from repro.core.graph import CSRGraph
+from repro.core.graph import CSRGraph, count_trace, rebucket_capacity
 from repro.core.local_move import louvain_move
 from repro.core.modularity import community_weights, modularity
 
@@ -60,6 +62,20 @@ class LouvainConfig:
     #: Compact work-buffer capacity as a fraction of e_cap (default: the
     #: configs.louvain_arch.COMPACT_WORK_FRAC policy — ONE home).
     compact_cap_frac: float = COMPACT_WORK_FRAC
+    #: Aggregation backend ("sort" | "pallas" | "auto"): the XLA
+    #: lexsort -> segment_sum -> scatter chain, or the fused Pallas
+    #: group-detect + accumulate + emit kernel (repro.kernels.aggregate).
+    #: Bit-identical memberships across backends — policy in
+    #: configs.louvain_arch.resolve_agg_backend.
+    agg_backend: str = "auto"
+    #: Coarse-pass capacity ladder: after aggregation, re-bucket the coarse
+    #: graph down to the smallest power-of-two tier fitting (n_comms,
+    #: e_valid), so later passes' scans/renumbers/sorts run at coarse
+    #: capacity instead of the original e_cap.  Memberships are invariant
+    #: to capacity, so this trades work, never results (pinned bit-for-bit
+    #: in tests/test_engine_equiv.py).  Tier policy:
+    #: configs.louvain_arch.resolve_coarse_capacity.
+    use_ladder: bool = True
 
 
 @dataclasses.dataclass
@@ -72,6 +88,8 @@ class PassStats:
     phase_seconds: dict
     modularity: Optional[float] = None
     frontier_size: Optional[int] = None  # seed-frontier size (delta screening)
+    n_cap: Optional[int] = None          # capacities the pass ran at
+    e_cap: Optional[int] = None          # (ladder tier when use_ladder)
 
 
 @dataclasses.dataclass
@@ -156,6 +174,7 @@ def _move_phase(graph: CSRGraph, comm0, sigma0, frontier0, tolerance, *,
     work-buffer capacity (bit-identical results, frontier-proportional
     work); 0 is the full e_cap scan.
     """
+    count_trace("move_phase")
     k = graph.vertex_weights()
     m = graph.total_weight()
     st = louvain_move(
@@ -169,17 +188,26 @@ def _move_phase(graph: CSRGraph, comm0, sigma0, frontier0, tolerance, *,
 
 @jax.jit
 def _renumber_and_fold(comm, n_valid, n_cap_arr, global_comm):
-    """Renumber pass-level communities and fold into the dendrogram lookup."""
+    """Renumber pass-level communities and fold into the dendrogram lookup.
+
+    ``comm`` may live at a laddered (shrunk) capacity while ``global_comm``
+    stays at the ORIGINAL vertex capacity; invalid original slots carry
+    stale sentinel values that clamp on the gather — they are sliced off
+    before the membership is returned.
+    """
     n_cap = global_comm.shape[0]  # == original n_cap (static via shape)
     del n_cap_arr
+    count_trace("renumber_and_fold")
     comm_new, n_comms = renumber_communities(comm, n_valid, comm.shape[0] - 1)
     folded = comm_new[global_comm]
     return comm_new, n_comms, folded
 
 
-@jax.jit
-def _aggregate_phase(graph: CSRGraph, comm_renumbered, n_comms):
-    return aggregate_graph(graph, comm_renumbered, n_comms)
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _aggregate_phase(graph: CSRGraph, comm_renumbered, n_comms,
+                     backend: str = "sort"):
+    count_trace("aggregate_phase")
+    return aggregate_graph(graph, comm_renumbered, n_comms, backend=backend)
 
 
 def louvain(
@@ -204,6 +232,15 @@ def louvain(
     to |F| instead of e_cap; on the ELL family the fused Pallas kernel makes
     the whole round one kernel trip.  Memberships are bit-identical across
     backends.
+
+    With ``config.use_ladder`` (the default), every aggregation is followed
+    by a capacity re-bucket down to the smallest power-of-two tier that
+    fits the coarse graph (``resolve_coarse_capacity``), so later passes'
+    scans, renumbering and sorts run at coarse capacity; per-tier phases
+    are jit-cached by shape, bounding recompiles at log2(e_cap) per phase.
+    ``config.agg_backend`` picks the aggregation implementation (the XLA
+    sort-reduce chain or the fused Pallas kernel) — memberships are
+    bit-identical across ladder tiers and aggregation backends.
     """
     t_start = time.perf_counter()
     n_cap = graph.n_cap
@@ -214,6 +251,7 @@ def louvain(
     tol = float(config.initial_tolerance)
     passes: List[PassStats] = []
     n_comms_final = n
+    agg_backend = resolve_agg_backend(config.agg_backend)
 
     ell_family = (config.use_ell_kernel
                   or config.scan_backend in ("ell", "ell_fused"))
@@ -291,8 +329,18 @@ def louvain(
         converged = iters <= 1                       # Alg. 1 line 7
         low_shrink = n_comms_i / max(n_verts_i, 1) > config.aggregation_tolerance  # line 9
 
+        pass_caps = (g.n_cap, g.e_cap)
         if not (converged or low_shrink or p == config.max_passes - 1):
-            g = _aggregate_phase(g, comm_ren, n_comms)
+            g = _aggregate_phase(g, comm_ren, n_comms, backend=agg_backend)
+            if config.use_ladder:
+                # Ladder: re-bucket the coarse graph down to the smallest
+                # power-of-two tier that fits it, so the NEXT pass's phases
+                # run (and jit-cache) at coarse capacity.
+                n_cap_new, e_cap_new = resolve_coarse_capacity(
+                    n_comms_i, int(g.e_valid), g.n_cap, g.e_cap)
+                if (n_cap_new, e_cap_new) != (g.n_cap, g.e_cap):
+                    g = rebucket_capacity(g, n_cap_new=n_cap_new,
+                                          e_cap_new=e_cap_new)
             t3 = time.perf_counter()
             agg_s = t3 - t2
         else:
@@ -306,6 +354,7 @@ def louvain(
             modularity=q_now,
             frontier_size=pass_frontier if pass_frontier is not None
             else n_verts_i,
+            n_cap=pass_caps[0], e_cap=pass_caps[1],
         ))
         n_comms_final = n_comms_i
         if converged or low_shrink:

@@ -41,11 +41,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.louvain_arch import compact_work_cap
+from repro.configs.louvain_arch import (compact_work_cap,
+                                        resolve_agg_backend,
+                                        resolve_coarse_capacity)
 from repro.core.aggregate import renumber_communities
 from repro.core.delta import EdgeBatch, _apply_edge_batch
 from repro.core.engine import affected_frontier, normalize_screening
-from repro.core.graph import CSRGraph
+from repro.core.graph import CSRGraph, rebucket_capacity
 from repro.core.louvain import (LouvainConfig, _aggregate_phase, _move_phase,
                                 _renumber_and_fold, pad_membership,
                                 singleton_init, warm_init)
@@ -139,13 +141,16 @@ def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
 
 @functools.lru_cache(maxsize=None)
 def _batched_phases(max_iterations: int, use_pruning: bool,
-                    gate_fraction: int, work_cap: int = 0):
+                    gate_fraction: int, work_cap: int = 0,
+                    agg_backend: str = "sort"):
     """vmapped jit'd phases for one static move configuration."""
     move = jax.vmap(functools.partial(
         _move_phase, max_iterations=max_iterations, use_pruning=use_pruning,
         gate_fraction=gate_fraction, work_cap=work_cap))
     return (move, jax.vmap(singleton_init), jax.vmap(warm_init),
-            jax.vmap(_renumber_and_fold), jax.vmap(_aggregate_phase))
+            jax.vmap(_renumber_and_fold),
+            jax.vmap(functools.partial(_aggregate_phase,
+                                       backend=agg_backend)))
 
 
 def louvain_batched(
@@ -162,13 +167,25 @@ def louvain_batched(
     screening.  Streams converge independently: a finished stream's
     tolerance flips to +inf (its batched while_loop lane exits immediately)
     and its membership is frozen while the fleet finishes.
+
+    With ``config.use_ladder`` the coarse passes ride the capacity ladder
+    at FLEET granularity: one tier per pass, resolved from the max coarse
+    size over the still-active streams, so the whole fleet keeps a single
+    compiled shape per tier (per-stream tiers would shatter the vmap).
     """
     if config.use_ell_kernel or config.scan_backend in ("ell", "ell_fused"):
         raise ValueError("louvain_batched uses the sort-reduce scanner; "
                          "ELL bucketing is per-graph host work")
     S, n_cap = gb.indptr.shape[0], gb.indptr.shape[1] - 1
+    # Aggregation backend under vmap mirrors the scanner policy: an
+    # EXPLICIT "pallas" is honored (bit-identical, tested in interpret
+    # mode), but "auto" stays the sort chain — the vmapped kernel is not a
+    # tuned fleet path, so auto never routes production fleets through it.
+    agg_backend = (resolve_agg_backend(config.agg_backend)
+                   if config.agg_backend != "auto" else "sort")
     move, v_singleton, v_warm, v_renumber, v_aggregate = _batched_phases(
-        config.max_iterations, config.use_pruning, config.gate_fraction)
+        config.max_iterations, config.use_pruning, config.gate_fraction,
+        0, agg_backend)
     # Pass 0 with a seed frontier may use the compacted scanner (explicit
     # "compact" only — "auto" keeps the full scan under vmap, where the
     # overflow cond lowers to a both-branches select).
@@ -180,7 +197,8 @@ def louvain_batched(
                              config.compact_cap_frac))[0]
 
     global_comm = jnp.tile(jnp.arange(n_cap, dtype=jnp.int32)[None], (S, 1))
-    active = np.ones(S, bool)
+    n_valid0 = gb.n_valid           # per-stream vertex counts of the INPUT
+    active = np.ones(S, bool)       # (gb becomes the coarse graph below)
     tol = float(config.initial_tolerance)
     n_comms_final = np.asarray(gb.n_valid).copy()
     warm = init_membership is not None
@@ -226,9 +244,34 @@ def louvain_batched(
             lambda new, old: jnp.where(
                 sel.reshape((S,) + (1,) * (new.ndim - 1)), new, old),
             gb_new, gb)
+        if config.use_ladder:
+            # Fleet-level tier decision: the capacity ladder must keep ONE
+            # jit shape for the whole fleet, so the tier is resolved from
+            # the max coarse size over the streams that keep optimizing.
+            # Frozen lanes' graphs may be truncated by the shrink — they
+            # are never read again (membership is already folded and their
+            # aggregation output is masked off).
+            n_cap_cur = gb.indptr.shape[1] - 1
+            e_cap_cur = gb.indices.shape[1]
+            e_valid_np = np.asarray(gb.e_valid)
+            n_need = int(n_comms_np[next_active].max())
+            e_need = int(e_valid_np[next_active].max())
+            n_new, e_new = resolve_coarse_capacity(
+                n_need, e_need, n_cap_cur, e_cap_cur)
+            if (n_new, e_new) != (n_cap_cur, e_cap_cur):
+                gb = jax.vmap(lambda g: rebucket_capacity(
+                    g, n_cap_new=n_new, e_cap_new=e_new))(gb)
         active = next_active
         tol /= config.tolerance_drop
 
+    # Invalid slots (idx >= n_valid) are forced to the ORIGINAL sentinel:
+    # folding through a laddered (shrunk) pass leaves them holding the small
+    # tier's sentinel, which a later warm start would misread as a real
+    # community assignment (matches the un-laddered fold, where they hold
+    # n_cap after the first renumber).
+    idx = jnp.arange(n_cap)
+    global_comm = jnp.where(idx[None, :] < n_valid0[:, None],
+                            global_comm, jnp.int32(n_cap))
     return BatchedLouvainResult(membership=global_comm,
                                 n_communities=n_comms_final.astype(int),
                                 n_passes=passes)

@@ -1,0 +1,5 @@
+"""Pallas kernel for the aggregation-phase group-detect + accumulate."""
+
+from repro.kernels.aggregate.coarsen import coarsen_groups_pallas
+
+__all__ = ["coarsen_groups_pallas"]

@@ -9,7 +9,8 @@ sequential sweep (vertices in id order, best community by modularity gain,
 lowest-id tie-break), and aggregation rebuilds the coarse slot list with
 ``np.add.at``.
 
-Slot conventions match the repo's CSR (DESIGN.md §6): an undirected edge
+Slot conventions match the repo's CSR (see the ``repro.core.graph`` module
+docstring): an undirected edge
 {i, j}, i != j, appears as two directed slots; a self loop as one.  So
 ``modularity_np`` on the same slot list is directly comparable with
 ``repro.core.modularity.modularity``.
@@ -89,6 +90,12 @@ def _aggregate(src, dst, w, comm_dense, n_comms):
     wsum = np.zeros(int(gid[-1]) + 1, np.float64)
     np.add.at(wsum, gid, w)
     return cs[first], cd[first], wsum
+
+
+# Public alias: the coarsening oracle is also pinned directly against
+# ``repro.core.aggregate.aggregate_graph`` (tests/test_aggregate.py), not
+# just through the end-to-end Louvain goldens.
+aggregate_oracle = _aggregate
 
 
 def louvain_oracle(src, dst, w, n, *, max_passes=10):

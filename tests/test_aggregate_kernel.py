@@ -1,0 +1,119 @@
+"""Pallas aggregation kernel (interpret mode on CPU).
+
+The carry-chained group-detect + accumulate sweep
+(``repro.kernels.aggregate.coarsen_groups_pallas``) must reproduce the XLA
+sort path's group records: identical keys/positions always, identical
+weights for integer-valued inputs (exact float32 sums), float32-close for
+arbitrary weights.  Small blocks force multi-tile carries so the SMEM
+chain (previous key, open-group partial sum, emitted count) is exercised,
+including groups spanning tile boundaries.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregate import aggregate_graph, renumber_communities
+from repro.core.graph import build_csr
+from repro.kernels.aggregate import coarsen_groups_pallas
+
+
+def _sorted_labeled_slots(rng, n, e0, n_groups, *, integer_w, n_cap, e_cap):
+    src = rng.integers(0, n, e0)
+    dst = rng.integers(0, n, e0)
+    w = (rng.integers(1, 5, e0).astype(np.float32) if integer_w
+         else (rng.random(e0) + 0.1).astype(np.float32))
+    g = build_csr(src, dst, w, n, symmetrize=True, dedup=True,
+                  n_cap=n_cap, e_cap=e_cap)
+    comm = np.full(n_cap + 1, n_cap, np.int32)
+    comm[: int(g.n_valid)] = rng.integers(0, n_groups, int(g.n_valid))
+    comm_ren, n_comms = renumber_communities(
+        jnp.asarray(comm), g.n_valid, n_cap)
+    ci = np.asarray(comm_ren)[np.asarray(g.src)]
+    cj = np.asarray(comm_ren)[np.asarray(g.indices)]
+    wv = np.asarray(g.weights)
+    order = np.lexsort((cj, ci))
+    return (jnp.asarray(ci[order]), jnp.asarray(cj[order]),
+            jnp.asarray(wv[order]), g, comm_ren, n_comms)
+
+
+def _oracle_groups(s_ci, s_cj, s_w, sent):
+    """Group records straight from the sorted slot list (NumPy)."""
+    ci = np.asarray(s_ci)
+    cj = np.asarray(s_cj)
+    w = np.asarray(s_w, np.float64)
+    recs = []
+    i = 0
+    while i < len(ci):
+        j = i
+        tot = 0.0
+        while j < len(ci) and ci[j] == ci[i] and cj[j] == cj[i]:
+            tot += w[j]
+            j += 1
+        if ci[i] != sent:
+            recs.append((int(ci[i]), int(cj[i]), tot))
+        i = j
+    return recs
+
+
+@pytest.mark.parametrize("block", [128, 512])
+@pytest.mark.parametrize("integer_w", [True, False])
+def test_kernel_groups_match_oracle(block, integer_w):
+    rng = np.random.default_rng(3)
+    s_ci, s_cj, s_w, g, _, _ = _sorted_labeled_slots(
+        rng, 24, 80, 5, integer_w=integer_w, n_cap=24, e_cap=300)
+    sent = g.n_cap
+    emit, pos, gsrc, gdst, gw = coarsen_groups_pallas(
+        s_ci, s_cj, s_w, sent=sent, block=block, interpret=True)
+    emit = np.asarray(emit)
+    recs = [(int(np.asarray(gsrc)[i]), int(np.asarray(gdst)[i]),
+             float(np.asarray(gw)[i]))
+            for i in np.flatnonzero(emit)]
+    want = _oracle_groups(s_ci, s_cj, s_w, sent)
+    assert len(recs) == len(want)
+    # Positions are the dense 0..L-1 group order.
+    np.testing.assert_array_equal(np.asarray(pos)[emit > 0],
+                                  np.arange(len(want)))
+    for (a, b, x), (aw, bw, xw) in zip(recs, want):
+        assert (a, b) == (aw, bw)
+        if integer_w:
+            assert x == xw          # exact float32 sums
+        else:
+            assert x == pytest.approx(xw, rel=1e-6)
+
+
+def test_kernel_group_spanning_many_tiles():
+    """One giant group crossing every tile boundary: the open-sum carry must
+    chain exactly (integer weights -> exact equality)."""
+    total = 700                       # > 5 tiles at block=128
+    s_ci = jnp.zeros((total,), jnp.int32)
+    s_cj = jnp.zeros((total,), jnp.int32)
+    s_w = jnp.asarray(np.arange(1, total + 1) % 7 + 1, jnp.float32)
+    emit, pos, gsrc, gdst, gw = coarsen_groups_pallas(
+        s_ci, s_cj, s_w, sent=5, block=128, interpret=True)
+    idx = np.flatnonzero(np.asarray(emit))
+    assert len(idx) == 1
+    assert float(np.asarray(gw)[idx[0]]) == float(np.asarray(s_w).sum())
+    assert int(np.asarray(pos)[idx[0]]) == 0
+
+
+def test_kernel_all_padding_emits_nothing():
+    sent = 9
+    s_ci = jnp.full((130,), sent, jnp.int32)
+    s_cj = jnp.full((130,), sent, jnp.int32)
+    s_w = jnp.zeros((130,), jnp.float32)
+    emit, *_ = coarsen_groups_pallas(s_ci, s_cj, s_w, sent=sent,
+                                     block=128, interpret=True)
+    assert int(np.asarray(emit).sum()) == 0
+
+
+def test_aggregate_graph_pallas_end_to_end_exact():
+    """Through ``aggregate_graph(backend="pallas")``: identical coarse CSR
+    to the sort backend on integer weights (the golden-corpus regime)."""
+    rng = np.random.default_rng(11)
+    _, _, _, g, comm_ren, n_comms = _sorted_labeled_slots(
+        rng, 32, 120, 6, integer_w=True, n_cap=32, e_cap=400)
+    a = aggregate_graph(g, comm_ren, n_comms, backend="sort")
+    b = aggregate_graph(g, comm_ren, n_comms, backend="pallas")
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))

@@ -145,6 +145,72 @@ def test_dynamic_stream_scan_backends_bit_for_bit(gold, backend):
     assert np.array_equal(mem, gold["dynamic__sbm_stream"])
 
 
+# -- the capacity-ladder / aggregation-backend matrix: pass-loop work
+# optimizations, not semantics changes.
+#
+# Memberships are invariant to buffer capacity (sentinel slots carry no
+# weight; the gate hash keys on vertex ids, not capacity), so the laddered
+# pass loop and both aggregation backends must land on the SAME committed
+# goldens element for element.  The sbm corpus is the one whose coarse
+# passes actually drop tiers (the others stay above the min-tier floor /
+# hysteresis — which is itself worth pinning: "no shrink" must also be a
+# no-op).
+
+
+@pytest.mark.parametrize("ladder", [True, False])
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_ladder_matrix_bit_for_bit(gold, corpora, name, ladder):
+    mem = louvain(corpora[name],
+                  LouvainConfig(use_ladder=ladder)).membership
+    assert np.array_equal(mem, gold[f"single__{name}"])
+
+
+@pytest.mark.parametrize("ladder", [True, pytest.param(False, marks=_slow)])
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_agg_backend_pallas_bit_for_bit(gold, corpora, name, ladder):
+    """The fused Pallas aggregation kernel, with and without laddered
+    coarse capacities (golden corpora have integer weights, so the kernel's
+    sums are exact and the whole run is bit-identical)."""
+    mem = louvain(corpora[name],
+                  LouvainConfig(agg_backend="pallas",
+                                use_ladder=ladder)).membership
+    assert np.array_equal(mem, gold[f"single__{name}"])
+
+
+def test_ladder_tiers_cover_shrink(corpora):
+    """Guard against the matrix above going vacuous: the sbm corpus's pass
+    loop must actually ladder down at least one tier."""
+    res = louvain(corpora["sbm"], LouvainConfig(use_ladder=True))
+    caps = [(p.n_cap, p.e_cap) for p in res.passes]
+    assert any(c != caps[0] for c in caps[1:]), caps
+
+
+@pytest.mark.parametrize("kw", [
+    dict(config=LouvainConfig(use_ladder=False)),
+    dict(config=LouvainConfig(agg_backend="pallas")),
+])
+def test_dynamic_stream_ladder_agg_matrix_bit_for_bit(gold, kw):
+    init, batches = capture.dynamic_stream()
+    mem = louvain_dynamic(init, batches, **kw).membership
+    assert np.array_equal(mem, gold["dynamic__sbm_stream"])
+
+
+@pytest.mark.parametrize("ladder", [True, False])
+def test_sharded_static_ladder_bit_for_bit(gold, corpora, ladder):
+    """The sharded pass loop re-buckets coarse layouts through
+    bucket_slots_host when laddering — both settings must reproduce the
+    goldens (the default path already covers ladder=True; this pins the
+    knob itself)."""
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                    use_ladder=ladder)
+    assert np.array_equal(mem, gold["sharded__sbm"])
+
+
 def test_batched_stream_compact_bit_for_bit(gold):
     """One-stream batched serving with the compacted scanner equals the
     sequential compact driver exactly (vmapped cond/select semantics must

@@ -150,3 +150,24 @@ def test_batched_rejects_ell_config(fleet):
     with pytest.raises(ValueError, match="sort-reduce"):
         louvain_batched(stack_graphs(graphs),
                         LouvainConfig(use_ell_kernel=True))
+
+
+def test_batched_ladder_membership_padding_is_sentinel():
+    """Laddered fleet passes must NOT leak a shrunk tier's sentinel into
+    invalid membership slots — a later warm start would misread a small
+    stale value as a real community assignment (regression test for the
+    fleet-ladder sanitization)."""
+    from repro.core.graph import rebucket_graph
+
+    g1, _ = sbm_graph(16, 48, p_in=0.25, p_out=0.004, seed=2)
+    g2, _ = sbm_graph(12, 64, p_in=0.30, p_out=0.003, seed=3)
+    n_cap = max(g1.n_cap, g2.n_cap)
+    e_cap = max(g1.e_cap, g2.e_cap)
+    gb = stack_graphs([rebucket_graph(g1, n_cap, e_cap),
+                       rebucket_graph(g2, n_cap, e_cap)])
+    for ladder in (True, False):
+        res = louvain_batched(gb, LouvainConfig(use_ladder=ladder))
+        mem = np.asarray(res.membership)
+        for s, g in enumerate((g1, g2)):
+            n = int(g.n_valid)
+            assert np.all(mem[s, n:] == n_cap), (ladder, s)
