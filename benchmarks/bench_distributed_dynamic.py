@@ -4,9 +4,12 @@ The sharded analogue of ``bench_dynamic``: an SBM graph is streamed as
 edge-batch inserts through ``louvain_dynamic_sharded`` (partition once, then
 per batch: in-layout shard_map apply + delta-screened warm restart) and
 compared against the batch-only baseline — a cold ``distributed_louvain``
-(fresh partition, singleton start) after every batch.  Reports edge
-updates/sec, speedup, mean delta-screened frontier fraction, and the
-modularity gap on the final graph.
+(fresh partition, singleton start) after every batch.  Each batch size runs
+under BOTH communication backends (replicated ``gather`` round-trips vs the
+delta exchange of packed moved labels + top-k Sigma deltas), so the rows
+report edge updates/sec, speedup over cold recompute, mean delta-screened
+frontier fraction, the modularity gap on the final graph, and the measured
+bytes-on-wire per engine round per backend.
 
 Executed as a script it forces 8 host devices (it must own the process
 before JAX initializes, which is why ``benchmarks.run`` launches it as a
@@ -31,7 +34,7 @@ from repro.core.delta import apply_edge_batch, make_edge_batch
 from repro.core.distributed import distributed_louvain
 from repro.core.distributed_dynamic import louvain_dynamic_sharded
 from repro.core.graph import build_csr
-from repro.core.louvain import membership_modularity
+from repro.core.louvain import LouvainConfig, membership_modularity
 from repro.data import sbm_graph
 
 
@@ -68,7 +71,7 @@ def _holdout_stream(small: bool, seed: int = 0):
     return init, (us[hold], ud[hold], uw[hold]), e
 
 
-def run(small: bool = True, repeats: int = 2,
+def run(small: bool = True, repeats: int = 3,
         batch_sizes=(4, 16)) -> None:
     mesh, axes = _mesh_axes()
     init, (us, ud, uw), e = _holdout_stream(small)
@@ -85,11 +88,10 @@ def run(small: bool = True, repeats: int = 2,
                                    init.n_cap, b_cap=bs)
                    for i in range(n_batches)]
 
-        t_dyn, dyn = time_fn(louvain_dynamic_sharded, init, mesh, axes,
-                             batches, prev=prev, repeats=repeats)
-
         # Batch-only baseline: apply the delta, then a cold sharded run
-        # (fresh partition + singleton start) after every batch.
+        # (fresh partition + singleton start) after every batch.  Timed
+        # once per batch size — it has no streaming exchange, so it is
+        # independent of the comm backend under test.
         def recompute():
             g = init
             mem = None
@@ -100,21 +102,33 @@ def run(small: bool = True, repeats: int = 2,
             return g, mem
 
         t_cold, (g_end, mem_cold) = time_fn(recompute, repeats=repeats)
-        q_dyn = membership_modularity(g_end, dyn.membership)
         q_cold = membership_modularity(g_end, mem_cold)
 
-        fr = [s.frontier_fraction for s in dyn.batch_stats]
-        rows.append({
-            "batch_size": bs, "n_batches": n_batches,
-            "updates_per_s_dynamic": round(used / t_dyn, 1),
-            "updates_per_s_recompute": round(used / t_cold, 1),
-            "speedup": round(t_cold / t_dyn, 2),
-            "frontier_frac_mean": round(float(np.mean(fr)), 4),
-            "q_dynamic": round(q_dyn, 4),
-            "q_recompute": round(q_cold, 4),
-        })
-    emit_csv(rows, ["batch_size", "n_batches", "updates_per_s_dynamic",
-                    "updates_per_s_recompute", "speedup",
+        for backend in ("gather", "delta"):
+            t_dyn, dyn = time_fn(louvain_dynamic_sharded, init, mesh, axes,
+                                 batches, prev=prev,
+                                 config=LouvainConfig(comm_backend=backend),
+                                 repeats=repeats)
+            q_dyn = membership_modularity(g_end, dyn.membership)
+            fr = [s.frontier_fraction for s in dyn.batch_stats]
+            rows.append({
+                "batch_size": bs, "n_batches": n_batches,
+                "comm_backend": dyn.comm_backend,
+                "updates_per_s_dynamic": round(used / t_dyn, 1),
+                "updates_per_s_recompute": round(used / t_cold, 1),
+                "speedup": round(t_cold / t_dyn, 2),
+                "bytes_per_round": round(dyn.bytes_per_round, 1),
+                "bytes_on_wire": int(dyn.bytes_on_wire),
+                "comm_rounds": int(dyn.comm_rounds),
+                "comm_fallback_rounds": int(dyn.comm_fallback_rounds),
+                "frontier_frac_mean": round(float(np.mean(fr)), 4),
+                "q_dynamic": round(q_dyn, 4),
+                "q_recompute": round(q_cold, 4),
+            })
+    emit_csv(rows, ["batch_size", "n_batches", "comm_backend",
+                    "updates_per_s_dynamic", "updates_per_s_recompute",
+                    "speedup", "bytes_per_round", "bytes_on_wire",
+                    "comm_rounds", "comm_fallback_rounds",
                     "frontier_frac_mean", "q_dynamic", "q_recompute"])
     return rows
 
@@ -132,7 +146,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     print(f"devices: {jax.device_count()}")
     t0 = time.perf_counter()
-    rows = run(small=not args.full, repeats=3 if args.full else 2)
+    rows = run(small=not args.full, repeats=3)
     # This module runs as its own process (forced device count), so it
     # emits its BENCH json here rather than via benchmarks/run.py.
     emit_json("distdyn", rows, seconds=time.perf_counter() - t0,

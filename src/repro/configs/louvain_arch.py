@@ -87,6 +87,62 @@ def resolve_agg_backend(backend: str) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Communication-backend policy (the ``LouvainConfig.comm_backend`` knob).
+#
+# The sharded move round has two exchange implementations (both pinned
+# bit-for-bit against the committed goldens on one shard):
+#   "gather" — the Vite-style dense ghost exchange: all_gather the owned
+#              membership slice + moved mask, psum the dense Sigma and
+#              community-size arrays (2 x O(n_pad) collectives per round).
+#   "delta"  — ship only the movers as bit-packed (index, label) lanes;
+#              Sigma and community sizes are reconstructed locally from
+#              the replicated vertex weights and membership; a measured-
+#              overflow lax.cond falls back to the dense exchange when a
+#              round's movers exceed the cap.
+# ---------------------------------------------------------------------------
+
+#: Accepted values of ``LouvainConfig.comm_backend``.
+COMM_BACKENDS = ("auto", "gather", "delta")
+
+#: Mover-buffer capacity as a fraction of ``v_per_shard``: a round moving
+#: more than v_per / DELTA_MOVE_CAP_FRAC owned vertices (early cold rounds)
+#: takes the dense fallback; warm/late rounds fit comfortably.
+DELTA_MOVE_CAP_FRAC = 4
+
+#: Mover-buffer floor — tiny shards keep a usable buffer.
+DELTA_MOVE_CAP_MIN = 8
+
+
+def delta_move_cap(v_per: int) -> int:
+    """Static mover-buffer capacity for a shard owning ``v_per`` vertices.
+
+    The one cap of the delta exchange: movers are all that travels (Sigma
+    and community sizes are reconstructed from replicated state), so a
+    round overflows exactly when its movers do.
+    """
+    return max(1, min(int(v_per),
+                      max(int(v_per) // DELTA_MOVE_CAP_FRAC,
+                          DELTA_MOVE_CAP_MIN)))
+
+
+def resolve_comm_backend(backend: str, n_shards: int) -> str:
+    """Map the ``comm_backend`` knob to a concrete exchange for a mesh.
+
+    ``"auto"`` picks ``"delta"`` on real multi-shard meshes and
+    ``"gather"`` on a single shard, where every collective is an identity
+    move and the delta path's pack/compact work buys nothing.  Explicit
+    values pass through (``"delta"`` on one shard is how the golden matrix
+    pins the path bit-for-bit).
+    """
+    if backend not in COMM_BACKENDS:
+        raise ValueError(f"comm_backend must be one of {COMM_BACKENDS}; "
+                         f"got {backend!r}")
+    if backend == "auto":
+        return "delta" if n_shards > 1 else "gather"
+    return backend
+
+
+# ---------------------------------------------------------------------------
 # Coarse-pass capacity ladder (the ``LouvainConfig.use_ladder`` knob).
 #
 # Aggregation shrinks the live graph 10-100x, but buffers keep their original

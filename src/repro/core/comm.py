@@ -1,0 +1,203 @@
+"""Communication-lean exchange primitives for the sharded paths.
+
+GVE-Louvain's per-iteration cost model assumes data movement proportional to
+the TOUCHED work; the sharded baseline instead ships dense O(n_pad) state
+every round (the Vite-style ghost exchange as whole-array collectives).  The
+delta backend (``repro.core.distributed.DeltaShardedScanner``) ships only
+what changed, built from the pure, mesh-free primitives in this module:
+
+  * ``pack_bits`` / ``unpack_bits`` — bit-pack integer labels into dense
+    uint32 lanes at the minimum width for the layout (a moved-vertex label
+    needs ceil(log2(n_pad + 1)) bits, not 32), the gnn_compress-style lane
+    packing from the ROADMAP.
+  * ``compact_movers`` — rank-compact the (local index, new label) pairs of
+    vertices that actually moved into a static-capacity buffer.  Movers are
+    all the delta backend ships: Sigma deltas and community sizes are
+    reconstructed on the receiver from the replicated vertex weights and
+    membership.
+  * ``topk_touched_deltas`` — the per-shard top-k touched communities and
+    their delta values, mask-deduplicated and rank-compacted: the general
+    shipping primitive for per-community payloads a receiver CANNOT
+    reconstruct (e.g. Sigma deltas on topologies that do not replicate
+    vertex weights).
+  * ``comm_plan`` / ``phase_bytes`` — host-side bytes-on-wire accounting
+    from static shapes + measured round counts (the ``BENCH_distdyn.json``
+    ``bytes_per_round`` column).
+
+Everything here is plain jnp on one shard's arrays — no collectives — so the
+whole layer is property-testable without a mesh (tests/test_comm_delta.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def label_bits(n_values: int) -> int:
+    """Minimum lane width (bits) encoding values in ``[0, n_values)``."""
+    if n_values <= 1:
+        return 1
+    return int(n_values - 1).bit_length()
+
+
+def packed_lanes(count: int, width: int) -> int:
+    """uint32 lanes holding ``count`` values of ``width`` bits each."""
+    return -(-(count * width) // 32)
+
+
+def pack_bits(values: jax.Array, width: int) -> jax.Array:
+    """Bit-pack ``(k,)`` integers in ``[0, 2**width)`` into uint32 lanes.
+
+    Little-endian bit order: value i occupies global bits
+    ``[i * width, (i + 1) * width)``; a value may straddle two lanes.
+    Values are masked to ``width`` bits (callers encode their sentinel
+    within the width).  Inverse: ``unpack_bits(lanes, width, k)``.
+    """
+    if not 1 <= width <= 32:
+        raise ValueError(f"width must be in [1, 32]; got {width}")
+    k = values.shape[0]
+    lanes = packed_lanes(k, width)
+    mask = jnp.uint32((1 << width) - 1)
+    vals = values.astype(jnp.uint32) & mask
+    start = jnp.arange(k, dtype=jnp.uint32) * jnp.uint32(width)
+    lane0 = (start // 32).astype(jnp.int32)
+    off = start % 32
+    lo = (vals << off).astype(jnp.uint32)
+    # A shift by 32 is undefined; guard the straddle part (off == 0 means
+    # the value is wholly inside lane0 and contributes nothing upward).
+    hi_shift = jnp.where(off > 0, jnp.uint32(32) - off, jnp.uint32(0))
+    hi = jnp.where(off > 0, vals >> hi_shift, jnp.uint32(0))
+    # Disjoint bit ranges per lane, so scatter-add assembles without carries.
+    buf = jnp.zeros((lanes + 1,), jnp.uint32)
+    buf = buf.at[lane0].add(lo).at[lane0 + 1].add(hi)
+    return buf[:lanes]
+
+
+def unpack_bits(lanes: jax.Array, width: int, count: int) -> jax.Array:
+    """Inverse of ``pack_bits``: ``(L,)`` uint32 lanes -> ``(count,)`` int32."""
+    if not 1 <= width <= 32:
+        raise ValueError(f"width must be in [1, 32]; got {width}")
+    start = jnp.arange(count, dtype=jnp.uint32) * jnp.uint32(width)
+    lane0 = (start // 32).astype(jnp.int32)
+    off = start % 32
+    ext = jnp.concatenate([lanes.astype(jnp.uint32),
+                           jnp.zeros((1,), jnp.uint32)])
+    lo = ext[lane0] >> off
+    hi_shift = jnp.where(off > 0, jnp.uint32(32) - off, jnp.uint32(0))
+    hi = jnp.where(off > 0, ext[lane0 + 1] << hi_shift, jnp.uint32(0))
+    mask = jnp.uint32((1 << width) - 1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def compact_movers(flag: jax.Array, values: jax.Array, cap: int, fill):
+    """Rank-compact flagged slots' (local index, value) into static buffers.
+
+    Returns ``(idx_buf (cap,), val_buf (cap,), n_flagged)``: ``idx_buf``
+    holds LOCAL slot indices of the first ``cap`` flagged entries (empty
+    slots carry ``L = len(flag)``, the local sentinel), ``val_buf`` their
+    values (empty slots carry ``fill``).  Entries beyond ``cap`` are
+    dropped — ``n_flagged`` is the TRUE uncapped count, so callers detect
+    ``n_flagged > cap`` and take a dense fallback.
+    """
+    L = flag.shape[0]
+    rank = jnp.cumsum(flag.astype(jnp.int32)) - 1
+    keep = flag & (rank < cap)
+    slot = jnp.where(keep, rank, cap)
+    idx = jnp.arange(L, dtype=jnp.int32)
+    idx_buf = jnp.full((cap + 1,), L, jnp.int32).at[slot].set(
+        jnp.where(keep, idx, L))[:cap]
+    val_buf = jnp.full((cap + 1,), fill, values.dtype).at[slot].set(
+        jnp.where(keep, values, fill))[:cap]
+    return idx_buf, val_buf, jnp.sum(flag.astype(jnp.int32))
+
+
+def topk_touched_deltas(delta: jax.Array, touched: jax.Array, cap: int,
+                        sent: int):
+    """Touched communities and their delta values, rank-compacted.
+
+    ``touched`` is a dense ``(sent + 1,)`` bool mask of communities whose
+    value changed (slot ``sent`` is ignored); ``delta`` the dense
+    per-community value to ship.  Returns ``(c_buf (cap,), d_buf (cap,),
+    n_touched)`` with the first ``cap`` touched ids in ascending order
+    (empty slots: ``sent`` / 0); ``n_touched`` is the TRUE count, so
+    ``n_touched > cap`` flags overflow for the dense fallback.  Mask-based
+    on purpose: the caller already holds dense add/sub reductions, so
+    deduplicated ascending ids fall out of a cumsum — no sort.
+    """
+    ids = jnp.arange(touched.shape[0], dtype=jnp.int32)
+    live = touched & (ids < sent)
+    rank = jnp.cumsum(live.astype(jnp.int32)) - 1
+    keep = live & (rank < cap)
+    slot = jnp.where(keep, rank, cap)
+    c_buf = jnp.full((cap + 1,), sent, jnp.int32).at[slot].set(
+        jnp.where(keep, ids, sent))[:cap]
+    d_buf = jnp.zeros((cap + 1,), delta.dtype).at[slot].set(
+        jnp.where(keep, delta, 0))[:cap]
+    return c_buf, d_buf, jnp.sum(live.astype(jnp.int32))
+
+
+class CommPlan(NamedTuple):
+    """Static bytes-on-wire accounting for ONE engine round.
+
+    Host-side arithmetic over the layout's static shapes (each shard's
+    contribution to every collective, summed over shards); combined with
+    the MEASURED per-phase round/fallback counters it yields the
+    ``bytes_per_round`` column of ``BENCH_distdyn.json``.  ``round_bytes``
+    prices a regular round of the backend; ``fallback_bytes`` a delta
+    round that overflowed its caps and took the dense-exchange branch
+    (== ``round_bytes`` for the gather backend, which has no fallback).
+    """
+
+    backend: str
+    n_shards: int
+    move_cap: int
+    idx_width: int
+    lab_width: int
+    round_bytes: int
+    fallback_bytes: int
+
+
+def comm_plan(backend: str, n_shards: int, v_per: int, n_pad: int,
+              move_cap: int = 0) -> CommPlan:
+    """Price one engine round for a layout under ``backend``.
+
+    Per shard per round the gather backend ships its owned membership slice
+    (int32) + moved mask (bool) + two dense O(n_pad) psums (Sigma f32 and
+    community sizes int32) + the dq scalar; the delta backend replaces all
+    of that with ONE fused wire word — the mover count + the local dq +
+    the bit-packed mover lanes (fused (index, label) pairs when they fit
+    an int32).  Sigma and community sizes are reconstructed locally from
+    the replicated vertex weights and membership, and the moved mask is a
+    label compare, so no per-community payload travels at all.  On
+    overflow the wire has already travelled, then the dense comm + Sigma
+    exchange runs on top.
+    """
+    rep = n_pad + 1
+    if backend == "gather":
+        per_shard = (v_per * 4 + v_per * 1 + rep * 4 + 4   # comm+moved+
+                     + rep * 4)                            # Sigma+dq+sizes
+        return CommPlan("gather", n_shards, 0, 0, 0,
+                        n_shards * per_shard, n_shards * per_shard)
+    if backend != "delta":
+        raise ValueError(f"comm_plan backend must be 'gather' or 'delta'; "
+                         f"got {backend!r}")
+    iw = label_bits(v_per + 1)
+    lw = label_bits(n_pad + 1)
+    if iw + lw <= 31:
+        mover_lanes = packed_lanes(move_cap, iw + lw)
+    else:
+        mover_lanes = packed_lanes(move_cap, iw) + packed_lanes(move_cap, lw)
+    delta = mover_lanes * 4 + 8                   # lanes + count + dq
+    fallback = delta + v_per * 4 + rep * 4        # wire, then comm + Sigma
+    return CommPlan("delta", n_shards, move_cap, iw, lw,
+                    n_shards * delta, n_shards * fallback)
+
+
+def phase_bytes(plan: CommPlan, rounds: int, fallback_rounds: int = 0) -> int:
+    """Total bytes on the wire for a move phase of ``rounds`` rounds, of
+    which ``fallback_rounds`` overflowed the delta caps."""
+    fb = min(int(fallback_rounds), int(rounds))
+    return (int(rounds) - fb) * plan.round_bytes + fb * plan.fallback_bytes

@@ -10,7 +10,13 @@ of the distributed implementations it benchmarks (Vite / Ghosh et al.):
   - **Replicated community state**: C, Sigma, K (O(|V|) each) are replicated;
     per-round updates travel as one `all_gather` (the owned C slice + moved
     flags) and one `psum` (Sigma deltas) — the same ghost-exchange pattern as
-    Vite, expressed as XLA collectives.
+    Vite, expressed as XLA collectives.  That is the "gather" communication
+    backend; the "delta" backend (``DeltaShardedScanner``) replaces the dense
+    exchange with compacted, bit-packed owned CHANGES (moved labels + top-k
+    Sigma deltas, with a measured-overflow fallback) — replication still
+    forces an all_gather, but of O(moved) lanes instead of O(n_pad) arrays.
+    Policy and caps live in ``repro.configs.louvain_arch``
+    (``resolve_comm_backend``); bytes accounting in ``repro.core.comm``.
   - **Distributed aggregation**: local sort-reduce partially deduplicates each
     shard's relabeled edges, an `all_gather` shares the partials, and each
     shard re-reduces the rows it owns in the coarse partition.  (The gather is
@@ -34,6 +40,9 @@ from jax.experimental.shard_map import shard_map
 
 from repro import compat
 
+from repro.core.comm import (CommPlan, comm_plan, compact_movers, label_bits,
+                             pack_bits, packed_lanes, phase_bytes,
+                             unpack_bits)
 from repro.core.engine import EngineConfig, MoveEngine, MoveState
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
@@ -250,6 +259,184 @@ class ShardedScanner:
         return marked > 0
 
 
+class DeltaShardedScanner(ShardedScanner):
+    """Communication-lean engine backend: same scan, movers-only exchange.
+
+    Per round the gather backend ships two dense O(n_pad) psums (Sigma,
+    community sizes) plus the owned membership slice and moved mask.  This
+    backend ships ONLY the movers — each as a (local index, new label)
+    pair bit-packed to the minimum lane width for the layout
+    (``repro.core.comm.pack_bits``) — and reconstructs every other array
+    locally, because each receiver already replicates the state the deltas
+    derive from:
+
+      * Sigma updates: a mover shifts exactly its vertex weight ``K_i``
+        from its old to its new community, and both ``k`` and the previous
+        membership are replicated, so each shard rebuilds every shard's
+        dense (add - sub) from the gathered movers — zero Sigma bytes;
+      * community sizes: +1 / -1 at the movers' new / old labels,
+        maintained incrementally across rounds (integer-exact in any
+        order), seeded once per phase from ``community_sizes``;
+      * the moved mask: a move always changes the label, so it is the
+        compare ``comm' != comm``.
+
+    The movers ride ONE fused ``all_gather`` per round — the mover count,
+    the local dq, and the packed lanes concatenated into a single uint32
+    wire word per shard — because collective rendezvous, not payload
+    bytes, dominates small-round latency (the gather backend pays five
+    collectives per round; this backend pays one).  The gathered counts
+    are replicated by construction, so every shard decides the overflow
+    branch locally: a round whose movers exceed the static cap runs the
+    dense exchange inside ``lax.cond`` — the cap bounds compile shapes,
+    never correctness.  Reconstruction mirrors the gather backend's
+    arithmetic per shard (identical segment-sum orders, then one dense
+    apply), so on one shard the result matches the default path bit for
+    bit and every committed sharded golden is reproduced (pinned in
+    tests/test_engine_equiv.py).  Cap policy:
+    ``repro.configs.louvain_arch.delta_move_cap``.
+    """
+
+    def __init__(self, axes, spec: ShardedGraphSpec, src_l, dst_l, w_l,
+                 k, m):
+        super().__init__(axes, spec, src_l, dst_l, w_l, k, m)
+        from repro.configs.louvain_arch import delta_move_cap
+        self.move_cap = delta_move_cap(spec.v_per_shard)
+        self.idx_width = label_bits(spec.v_per_shard + 1)
+        self.lab_width = label_bits(spec.n_pad + 1)
+        # Movers ship as ONE fused (index, label) pair per entry when the
+        # pair fits an int32 — one pack/unpack instead of two.  Layouts too
+        # wide for that (v_per * n_pad ~ 2^31) fall back to separate lanes.
+        self.pair_width = self.idx_width + self.lab_width
+        if self.pair_width <= 31:
+            self.mover_lanes = packed_lanes(self.move_cap, self.pair_width)
+        else:
+            self.pair_width = None
+            self.mover_lanes = (packed_lanes(self.move_cap, self.idx_width)
+                                + packed_lanes(self.move_cap, self.lab_width))
+
+    def community_sizes(self, comm, comm_l):
+        # The replicated membership already holds every shard's slice, so
+        # the psum'd per-shard size reduction collapses to one local
+        # segment_sum — integer addition reorders exactly.
+        sent = self.sentinel
+        body = comm[:sent]
+        return jax.ops.segment_sum(
+            jnp.where(body < sent, 1, 0), jnp.minimum(body, sent),
+            num_segments=sent + 1)
+
+    def exchange_round(self, comm, sigma, sizes, comm_l, do_move, best_c,
+                       dq_local):
+        axes, spec = self.axes, self.spec
+        v_per, sent = spec.v_per_shard, self.sentinel
+        S, mcap = spec.n_shards, self.move_cap
+
+        if self.pair_width is not None:
+            # Fused (index, label) pairs: one compaction, one pack.  The
+            # empty-slot fill decodes to index == v_per -> dropped below.
+            pv = (jnp.arange(v_per, dtype=jnp.int32)
+                  | (best_c << self.idx_width))
+            _, pair_buf, n_moved = compact_movers(
+                do_move, pv, mcap, jnp.int32(v_per))
+            mover_lanes = pack_bits(pair_buf, self.pair_width)
+        else:
+            idx_buf, lab_buf, n_moved = compact_movers(
+                do_move, best_c, mcap, jnp.int32(sent))
+            mover_lanes = jnp.concatenate([
+                pack_bits(idx_buf, self.idx_width),
+                pack_bits(lab_buf, self.lab_width)])
+
+        # ONE fused collective: mover count + local dq + packed mover
+        # lanes, concatenated into a single uint32 word per shard.
+        wire = jnp.concatenate([
+            jnp.stack([n_moved.astype(jnp.uint32),
+                       jax.lax.bitcast_convert_type(
+                           dq_local.astype(jnp.float32), jnp.uint32)]),
+            mover_lanes,
+        ])
+        g = jax.lax.all_gather(wire, axes)                 # (S, W)
+        dq = jnp.sum(jax.lax.bitcast_convert_type(g[:, 1], jnp.float32))
+        # Every shard sees every shard's counts, so the branch choice below
+        # is replicated by construction — no extra pmax round-trip.
+        over = jnp.max(g[:, 0].astype(jnp.int32)) > mcap
+        g_mov = g[:, 2:]                                   # packed lanes
+
+        def dense(_):
+            # The per-community segment sums live HERE, not in the engine:
+            # lax.cond operands are computed eagerly, so reducing them in
+            # the branch means regular rounds never pay for them.
+            moved_k = jnp.where(do_move, self.k_local, 0.0)
+            add = jax.ops.segment_sum(
+                moved_k, jnp.where(do_move, best_c, sent),
+                num_segments=sent + 1)
+            sub = jax.ops.segment_sum(
+                moved_k, jnp.where(do_move, comm_l, sent),
+                num_segments=sent + 1)
+            comm_full = self.gather_comm(jnp.where(do_move, best_c, comm_l))
+            return (comm_full, self.combine_sigma(sigma, add, sub),
+                    self.community_sizes(comm_full, comm_l))
+
+        def delta(_):
+            if self.pair_width is not None:
+                pairs = jax.vmap(
+                    lambda r: unpack_bits(r, self.pair_width, mcap))(g_mov)
+                idxs = pairs & ((1 << self.idx_width) - 1)
+                labs = pairs >> self.idx_width
+            else:
+                li = packed_lanes(mcap, self.idx_width)
+                idxs = jax.vmap(lambda r: unpack_bits(
+                    r, self.idx_width, mcap))(g_mov[:, :li])
+                labs = jax.vmap(lambda r: unpack_bits(
+                    r, self.lab_width, mcap))(g_mov[:, li:])
+            live = idxs < v_per                            # (S, mcap)
+            base = jnp.arange(S, dtype=jnp.int32)[:, None] * v_per
+            # Dead buffer slots route out of bounds -> the scatter drops
+            # them (jnp default), leaving the sentinel slots alone.
+            gid = jnp.where(live, base + idxs, sent + 1)
+            lab = jnp.minimum(labs, sent)
+            comm_new = comm.at[gid.reshape(-1)].set(lab.reshape(-1))
+
+            # Sigma reconstruction: k and the pre-move membership are
+            # replicated, so each mover's weight and old community are
+            # local lookups.  Rebuild the dense mover-weight add / sub
+            # arrays in the sender's segment-sum order (movers ascend by
+            # vertex index in the buffer), subtract, then apply in ONE
+            # dense add — on one shard that is exactly ``combine_sigma``'s
+            # sigma + psum(add - sub) arithmetic, bit for bit.
+            safe = jnp.where(live, gid, 0)
+            kv = jnp.where(live, self.k[safe], 0.0).reshape(-1)
+            old = jnp.where(live, comm[safe], sent + 1).reshape(-1)
+            new = jnp.where(live, lab, sent + 1).reshape(-1)
+            radd = jnp.zeros((sent + 2,), jnp.float32).at[new].add(kv)
+            rsub = jnp.zeros((sent + 2,), jnp.float32).at[old].add(kv)
+            sigma_new = sigma + (radd - rsub)[:sent + 1]
+
+            # Sizes shift by +-1 at the movers' labels — integer adds
+            # reorder exactly, so the running array equals a recompute.
+            sizes_new = sizes.at[new].add(1).at[old].add(-1)
+            return comm_new, sigma_new, sizes_new
+
+        comm_new, sigma_new, sizes_new = jax.lax.cond(over, dense, delta, 0)
+        # Movers are exactly the label changes (a move always changes the
+        # label), so the moved mask is a compare, not another collective.
+        moved_g = comm_new != comm
+        return (comm_new, sigma_new, sizes_new, moved_g,
+                over.astype(jnp.int32), dq)
+
+
+#: comm_backend -> engine scanner class (concrete backends only; "auto"
+#: resolves through repro.configs.louvain_arch.resolve_comm_backend).
+COMM_SCANNERS = {"gather": ShardedScanner, "delta": DeltaShardedScanner}
+
+
+def sharded_comm_plan(spec: ShardedGraphSpec, backend: str) -> CommPlan:
+    """Bytes-on-wire plan for one engine round of ``spec`` under
+    ``backend`` (policy caps applied — ONE home for the accounting the
+    pass-loop stats and the distdyn benchmark report)."""
+    from repro.configs.louvain_arch import delta_move_cap
+    return comm_plan(backend, spec.n_shards, spec.v_per_shard, spec.n_pad,
+                     delta_move_cap(spec.v_per_shard))
+
+
 def _round_body(axes, spec, src_l, dst_l, w_l, comm, sigma, k,
                 frontier_l, round_ix, gate_fraction, m):
     """One synchronous local-move round for one shard; returns updates.
@@ -260,12 +447,14 @@ def _round_body(axes, spec, src_l, dst_l, w_l, comm, sigma, k,
     engine = MoveEngine(ShardedScanner(axes, spec, src_l, dst_l, w_l, k, m),
                         EngineConfig(gate_fraction=gate_fraction))
     zero = jnp.asarray(0.0, jnp.float32)
-    st = MoveState(comm, sigma, frontier_l, jnp.asarray(0, jnp.int32),
-                   zero, zero)
+    st = MoveState(comm, sigma, jnp.asarray(0, jnp.int32), frontier_l,
+                   jnp.asarray(0, jnp.int32), zero, zero,
+                   jnp.asarray(0, jnp.int32))
     st = engine.one_round(st, frontier_l, round_ix)
     return st.comm, st.sigma, st.frontier, st.dq
 
 
+@functools.lru_cache(maxsize=None)
 def make_distributed_move(
     mesh: Mesh,
     axes: Tuple[str, ...],
@@ -274,19 +463,28 @@ def make_distributed_move(
     max_iterations: int = 20,
     gate_fraction: int = 2,
     use_pruning: bool = True,
+    comm_backend: str = "gather",
 ):
     """Build the jit'd distributed local-moving phase for a fixed mesh/layout.
 
     Returns fn(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance)
-        -> (comm, sigma, iters, dq_sum); comm/sigma replicated outputs.
+        -> (comm, sigma, iters, dq_sum, rounds, fallbacks);
+    comm/sigma replicated outputs, ``rounds`` the synchronous rounds run
+    (sweeps x gate_fraction) and ``fallbacks`` how many of them the delta
+    exchange overflowed to the dense path (0 under "gather").
 
     ``frontier_g`` is a replicated (n_pad + 1,) seed-frontier mask — all-ones
     for the static start, the delta-screened set for warm streaming starts
-    (each shard slices its owned v_per entries).
+    (each shard slices its owned v_per entries).  ``comm_backend`` picks the
+    per-round exchange (``COMM_SCANNERS``; "auto" resolves per mesh).
     """
+    from repro.configs.louvain_arch import resolve_comm_backend
+
     edge_spec = P(axes)      # edge arrays: sharded along dim 0 over all axes
     rep = P()                # replicated state
 
+    scanner_cls = COMM_SCANNERS[
+        resolve_comm_backend(comm_backend, spec.n_shards)]
     config = EngineConfig(max_iterations=max_iterations,
                           use_pruning=use_pruning,
                           gate_fraction=gate_fraction)
@@ -294,19 +492,20 @@ def make_distributed_move(
     def phase(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance):
         def body_shard(src_l, dst_l, w_l, comm, sigma, k, frontier_g, m,
                        tolerance):
-            scanner = ShardedScanner(axes, spec, src_l, dst_l, w_l, k, m)
+            scanner = scanner_cls(axes, spec, src_l, dst_l, w_l, k, m)
             frontier0 = jax.lax.dynamic_slice_in_dim(
                 frontier_g, scanner.v0, spec.v_per_shard
             ) & scanner.frontier_valid
             st = MoveEngine(scanner, config).run(comm, sigma, frontier0,
                                                  tolerance)
-            return st.comm, st.sigma, st.iters, st.dq_sum
+            return (st.comm, st.sigma, st.iters, st.dq_sum,
+                    st.iters * jnp.int32(gate_fraction), st.comm_fb)
 
         fn = shard_map(
             body_shard, mesh=mesh,
             in_specs=(edge_spec, edge_spec, edge_spec, rep, rep, rep, rep,
                       rep, rep),
-            out_specs=(rep, rep, rep, rep),
+            out_specs=(rep, rep, rep, rep, rep, rep),
             check_rep=False,
         )
         return fn(src_g, dst_g, w_g, comm, sigma, k, frontier_g, m, tolerance)
@@ -314,23 +513,30 @@ def make_distributed_move(
     return jax.jit(phase)
 
 
+@functools.lru_cache(maxsize=None)
 def make_tier_phases(mesh: Mesh, axes: Tuple[str, ...], *,
                      max_iterations: int = 20, gate_fraction: int = 2,
-                     use_pruning: bool = True):
+                     use_pruning: bool = True, comm_backend: str = "gather"):
     """The capacity-ladder phase factory: ``spec -> (move, agg)``, cached so
     every tier's phases compile once and are reused across passes/batches
-    (static and streaming drivers share this ONE builder)."""
+    (static and streaming drivers share this ONE builder).  The factory
+    itself is cached on (mesh, axes, knobs) too — REPEATED driver calls on
+    the same mesh (benchmarks, streaming restarts) must reuse the compiled
+    phases instead of paying the XLA compile per call, which otherwise
+    dominates small-graph wall time."""
 
     @functools.lru_cache(maxsize=None)
     def phases_for(spec_: ShardedGraphSpec):
         return (make_distributed_move(
                     mesh, axes, spec_, max_iterations=max_iterations,
-                    gate_fraction=gate_fraction, use_pruning=use_pruning),
+                    gate_fraction=gate_fraction, use_pruning=use_pruning,
+                    comm_backend=comm_backend),
                 make_distributed_aggregate(mesh, axes, spec_))
 
     return phases_for
 
 
+@functools.lru_cache(maxsize=None)
 def make_distributed_aggregate(mesh: Mesh, axes: Tuple[str, ...],
                                spec: ShardedGraphSpec):
     """Distributed coarsening: local sort-reduce, all_gather partials,
@@ -480,6 +686,7 @@ def sharded_louvain_passes(
     aggregation_tolerance: float = 0.8,
     phases_for=None,
     use_ladder: bool = False,
+    comm_backend: str = "gather",
 ):
     """Host pass loop over prebuilt jit'd phases on partitioned edge arrays.
 
@@ -498,14 +705,29 @@ def sharded_louvain_passes(
     the coarse graph, so later passes' collectives and per-shard sorts run
     at coarse capacity.  Memberships are invariant to the layout.
 
+    An aggregation whose coarse-edge ownership overflows ``e_per_shard``
+    (community skew: renumbered coarse ids form a dense prefix that an
+    owner map sized for the ORIGINAL vertex range parks on the first
+    shards) is retried through the same machinery whenever ``phases_for``
+    is available: first the OWNER MAP is laddered — ``v_per_shard``
+    re-buckets to the tier fitting the live vertex count, spreading
+    ownership across all shards — and only then does ``e_per_shard`` grow.
+    Without a phase factory the overflow raises ``AggregationOverflow``.
+
+    ``comm_backend`` must be a CONCRETE exchange backend ("gather" |
+    "delta") matching what ``move``/``phases_for`` were built with — it is
+    used for the per-pass bytes-on-wire stats, not for routing.
+
     Returns (global_comm (n_pad,) device array, n_communities, stats);
-    ``global_comm`` stays at the ORIGINAL ``spec.n_pad`` length.
+    ``global_comm`` stays at the ORIGINAL ``spec.n_pad`` length.  Each
+    stats row carries the comm-plan columns (``comm_backend``,
+    ``comm_rounds``, ``comm_fallback_rounds``, ``comm_bytes``) from the
+    measured round counters + static shapes.
     """
     from repro.configs.louvain_arch import (LADDER_SLACK, _pow2_at_least,
                                             resolve_coarse_capacity)
 
     n_pad, sent = spec.n_pad, spec.sentinel
-    e_per0 = spec.e_per_shard      # caller capacity: the overflow contract
     idx = np.arange(n_pad + 1)
     shape_token = jnp.zeros((n_pad + 1,), jnp.float32)
     global_comm = jnp.arange(n_pad, dtype=jnp.int32)
@@ -526,16 +748,22 @@ def sharded_louvain_passes(
                 np.where(idx < n_live, idx, sent).astype(np.int32))
             sigma0 = k
             frontier0 = ones_frontier
-        comm, sigma, iters, dq_sum = move(
+        comm, sigma, iters, dq_sum, rounds, fallbacks = move(
             src_g, dst_g, w_g, comm0, sigma0, k, frontier0, m,
             jnp.float32(tol))
         comm_ren, n_comms = replicated_renumber(comm)
         global_comm = comm_ren[jnp.minimum(global_comm, sent)]
         iters_i, n_comms_i = int(iters), int(n_comms)
+        rounds_i, fb_i = int(rounds), int(fallbacks)
+        plan = sharded_comm_plan(spec, comm_backend)
         stats.append({"iterations": iters_i, "n_communities": n_comms_i,
                       "n_vertices": n_live, "n_pad": sent,
                       "e_per_shard": spec.e_per_shard,
-                      "dq_sum": float(dq_sum)})
+                      "dq_sum": float(dq_sum),
+                      "comm_backend": comm_backend,
+                      "comm_rounds": rounds_i,
+                      "comm_fallback_rounds": fb_i,
+                      "comm_bytes": phase_bytes(plan, rounds_i, fb_i)})
         converged = iters_i <= 1
         low_shrink = n_comms_i / max(n_live, 1) > aggregation_tolerance
         if converged or low_shrink or p == max_passes - 1:
@@ -547,20 +775,45 @@ def sharded_louvain_passes(
             if owned <= spec.e_per_shard:
                 src_g, dst_g, w_g = a_src, a_dst, a_w
                 break
-            # A shrunk tier can under-provision a skewed shard the next
-            # aggregation concentrates coarse edges onto.  If the shortfall
-            # is the LADDER's doing (current tier below the caller's
-            # capacity), grow the fine layout back and retry — only a skew
-            # beyond the caller's own e_per_shard raises, exactly as
-            # before the ladder existed.
-            if (not use_ladder or phases_for is None
-                    or spec.e_per_shard >= e_per0):
+            if phases_for is None:
+                # No phase factory: cannot re-bucket into a new layout.
                 raise AggregationOverflow(owned, spec.e_per_shard)
-            grow = spec._replace(e_per_shard=min(
-                e_per0, max(owned, 2 * spec.e_per_shard)))
+            # Community-ownership skew.  After renumbering, coarse ids form
+            # a dense [0, n_comms) prefix, so an owner map whose v_per
+            # spans the ORIGINAL vertex range parks every coarse edge on
+            # the first shards.  Ladder the OWNER MAP first — re-shard to
+            # the tier fitting the live vertex count, spreading ownership
+            # across all shards for free — and only grow e_per_shard (a
+            # real memory cost, pass-local: the coarse arrays never touch
+            # the caller's resident buffers) for the residual skew.
+            old_sent = spec.sentinel
+            v_tight = _pow2_at_least(-(-n_live // spec.n_shards))
+            if v_tight < spec.v_per_shard:
+                tier = ShardedGraphSpec(spec.n_shards, v_tight,
+                                        spec.e_per_shard,
+                                        spec.n_shards * v_tight)
+            else:
+                tier = spec._replace(e_per_shard=_pow2_at_least(
+                    max(owned, 2 * spec.e_per_shard)))
             src_g, dst_g, w_g, spec = _rebucket_live_host(
-                src_g, dst_g, w_g, spec.sentinel, grow)
+                src_g, dst_g, w_g, old_sent, tier)
             move, agg = phases_for(spec)
+            if spec.sentinel != old_sent:
+                # The owner map changed: rewrite the renumbered membership
+                # (which feeds the retried aggregation) and the loop-level
+                # layout trackers into the new sentinel space.  Live
+                # entries hold coarse ids < n_live <= new n_pad; stale
+                # slots held the OLD sentinel and are forced to the new.
+                sent = spec.sentinel
+                body = comm_ren[:spec.n_pad]
+                comm_ren = jnp.concatenate([
+                    jnp.where(jnp.arange(spec.n_pad) < n_live,
+                              jnp.minimum(body, sent),
+                              sent).astype(jnp.int32),
+                    jnp.full((1,), sent, jnp.int32)])
+                idx = np.arange(spec.n_pad + 1)
+                shape_token = jnp.zeros((spec.n_pad + 1,), jnp.float32)
+                ones_frontier = jnp.ones((spec.n_pad + 1,), bool)
         if use_ladder and phases_for is not None:
             n_new, e_new = resolve_coarse_capacity(
                 n_comms_i, int(e_valid), spec.n_pad,
@@ -611,28 +864,36 @@ def distributed_louvain(
     init_frontier=None,
     e_per_shard: int | None = None,
     use_ladder: bool = True,
+    comm_backend: str = "auto",
 ):
     """End-to-end multi-device GVE-Louvain (host pass loop, jit'd phases).
 
     ``init_membership``/``init_frontier`` warm-start the first pass like the
     single-device ``louvain`` (the streaming driver in
     ``repro.core.distributed_dynamic`` builds on this).  ``e_per_shard``
-    reserves per-shard slot headroom — aggregation can concentrate coarse
-    edges on few shards (community skew), which otherwise raises
-    ``AggregationOverflow``.  ``use_ladder`` re-buckets coarse graphs down
-    the capacity ladder between passes (memberships unchanged; per-tier
-    phases are built once and cached for the call).
+    reserves per-shard slot headroom — community skew can concentrate
+    coarse edges on few shards; the pass loop re-shards the owner map and
+    grows edge capacity in-flight when that happens.  ``use_ladder``
+    re-buckets coarse graphs down the capacity ladder between passes
+    (memberships unchanged; per-tier phases are built once and cached for
+    the call).  ``comm_backend`` picks the per-round exchange ("gather" |
+    "delta" | "auto"; auto resolves per mesh) — memberships are invariant
+    to it.
 
     Returns (membership (n,), n_communities, pass_stats list).
     """
+    from repro.configs.louvain_arch import resolve_comm_backend
+
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    cb = resolve_comm_backend(comm_backend, n_shards)
     src_g, dst_g, w_g, spec = partition_graph_host(
         graph, n_shards, e_per_shard=e_per_shard)
     n = int(graph.n_valid)
 
     phases_for = make_tier_phases(
         mesh, axes, max_iterations=max_iterations,
-        gate_fraction=gate_fraction, use_pruning=use_pruning)
+        gate_fraction=gate_fraction, use_pruning=use_pruning,
+        comm_backend=cb)
     move, agg = phases_for(spec)
 
     from repro.core.louvain import pad_membership
@@ -655,7 +916,7 @@ def distributed_louvain(
             max_passes=max_passes, initial_tolerance=initial_tolerance,
             tolerance_drop=tolerance_drop,
             aggregation_tolerance=aggregation_tolerance,
-            phases_for=phases_for, use_ladder=use_ladder)
+            phases_for=phases_for, use_ladder=use_ladder, comm_backend=cb)
     membership = np.asarray(global_comm[:n])
     return membership, int(len(np.unique(membership))), stats
 

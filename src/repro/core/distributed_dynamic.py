@@ -32,6 +32,7 @@ community state resident across rounds instead of rebuilding it:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import List, Optional, Sequence, Tuple
 
@@ -42,7 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.delta import EdgeBatch, sort_reduce_apply_slots
-from repro.core.distributed import (AggregationOverflow, ShardedGraphSpec,
+from repro.core.distributed import (ShardedGraphSpec,
                                     _rebucket_live_host, _shard_index,
                                     make_distributed_aggregate,
                                     make_distributed_move,
@@ -118,6 +119,7 @@ def apply_batch_shard(spec: ShardedGraphSpec, shard_ix,
     return out_src, out_dst, out_w, touched_own, e_new
 
 
+@functools.lru_cache(maxsize=None)
 def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
                              spec: ShardedGraphSpec,
                              n_limit: Optional[int] = None,
@@ -175,10 +177,12 @@ def _rebucket_host(src_g, dst_g, w_g, spec: ShardedGraphSpec):
 
 
 def _build_phases(mesh, axes, spec, config: LouvainConfig,
-                  n_limit: Optional[int] = None, backend: str = "xla"):
+                  n_limit: Optional[int] = None, backend: str = "xla",
+                  comm_backend: str = "gather"):
     move = make_distributed_move(
         mesh, axes, spec, max_iterations=config.max_iterations,
-        gate_fraction=config.gate_fraction, use_pruning=config.use_pruning)
+        gate_fraction=config.gate_fraction, use_pruning=config.use_pruning,
+        comm_backend=comm_backend)
     agg = make_distributed_aggregate(mesh, axes, spec)
     apply_fn = make_sharded_batch_apply(mesh, axes, spec, n_limit, backend)
     return move, agg, apply_fn
@@ -192,11 +196,19 @@ class ShardedDynamicResult:
     total_seconds: float
     n_regrows: int               # capacity-growth re-bucketing events
     spec: ShardedGraphSpec       # final layout (e_per_shard may have grown)
+    comm_backend: str = "gather"          # resolved exchange backend
+    comm_rounds: int = 0                  # engine rounds across the stream
+    comm_fallback_rounds: int = 0         # rounds the delta caps overflowed
+    bytes_on_wire: int = 0                # total move-phase exchange bytes
 
     @property
     def updates_per_second(self) -> float:
         edges = sum(s.batch_size for s in self.batch_stats)
         return edges / max(self.total_seconds, 1e-12)
+
+    @property
+    def bytes_per_round(self) -> float:
+        return self.bytes_on_wire / max(self.comm_rounds, 1)
 
 
 def louvain_dynamic_sharded(
@@ -230,11 +242,17 @@ def louvain_dynamic_sharded(
     ``screening`` picks the seed-frontier policy (``True``/``"community"``,
     ``"vertex"`` for DF-style per-vertex flags, ``"auto"`` to pick per
     batch from the touched-set size, ``False`` for pure naive-dynamic);
-    ``apply_backend`` the batch-apply group-resolve.
+    ``apply_backend`` the batch-apply group-resolve;
+    ``config.comm_backend`` the per-round exchange ("gather" | "delta" |
+    "auto") — memberships are invariant to it, and the result carries the
+    stream's bytes-on-wire accounting (``bytes_per_round``).
     """
+    from repro.configs.louvain_arch import resolve_comm_backend
+
     t_start = time.perf_counter()
     screen_mode = normalize_screening(screening)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    cb = resolve_comm_backend(config.comm_backend, n_shards)
     src_g, dst_g, w_g, spec = partition_graph_host(
         graph, n_shards, n_target=graph.n_cap)
     if e_per_shard is None:
@@ -247,7 +265,7 @@ def louvain_dynamic_sharded(
         src_g, dst_g, w_g = _rebucket_host(src_g, dst_g, w_g, spec)
     n_limit = graph.n_cap   # logical vertex capacity (n_pad may exceed it)
     move, agg, apply_fn = _build_phases(mesh, axes, spec, config, n_limit,
-                                        apply_backend)
+                                        apply_backend, cb)
     sent = spec.sentinel
 
     # Coarse-pass ladder phases: one (move, agg) per tier layout, cached so
@@ -259,7 +277,7 @@ def louvain_dynamic_sharded(
     phases_for = make_tier_phases(
         mesh, axes, max_iterations=config.max_iterations,
         gate_fraction=config.gate_fraction,
-        use_pruning=config.use_pruning)
+        use_pruning=config.use_pruning, comm_backend=cb)
 
     pass_kw = dict(
         max_passes=config.max_passes,
@@ -272,6 +290,7 @@ def louvain_dynamic_sharded(
     touched_counts: List[jax.Array] = []
     frontier_sizes: List[jax.Array] = []
     n_regrows = 0
+    comm_rounds = comm_fb = comm_bytes = 0
 
     def _grow_to(e_per_new: int):
         """Re-bucket the resident fine arrays into grown capacity and
@@ -280,23 +299,23 @@ def louvain_dynamic_sharded(
         spec = spec._replace(e_per_shard=int(e_per_new))
         src_g, dst_g, w_g = _rebucket_host(src_g, dst_g, w_g, spec)
         move, agg, apply_fn = _build_phases(mesh, axes, spec, config,
-                                            n_limit, apply_backend)
+                                            n_limit, apply_backend, cb)
         n_regrows += 1
 
-    def _passes_with_growth(n_live_, **kw):
-        """Pass loop, growing capacity on coarse-edge ownership skew
-        (aggregation can concentrate a community-heavy graph's coarse
-        edges onto few shards)."""
-        while True:
-            try:
-                return sharded_louvain_passes(
-                    src_g, dst_g, w_g, spec, move, agg, n_live_,
-                    phases_for=phases_for, use_ladder=config.use_ladder,
-                    **kw, **pass_kw)
-            except AggregationOverflow as exc:
-                if not grow_capacity:
-                    raise
-                _grow_to(max(2 * spec.e_per_shard, exc.owned_max))
+    def _run_passes(n_live_, **kw):
+        """Pass loop + comm accounting.  Coarse-edge ownership skew no
+        longer raises here: with ``phases_for`` supplied the pass loop
+        re-shards the owner map (and grows coarse edge capacity pass-
+        locally) in-flight — the resident fine arrays are untouched."""
+        nonlocal comm_rounds, comm_fb, comm_bytes
+        gc, nc, pstats = sharded_louvain_passes(
+            src_g, dst_g, w_g, spec, move, agg, n_live_,
+            phases_for=phases_for, use_ladder=config.use_ladder,
+            comm_backend=cb, **kw, **pass_kw)
+        comm_rounds += sum(r["comm_rounds"] for r in pstats)
+        comm_fb += sum(r["comm_fallback_rounds"] for r in pstats)
+        comm_bytes += sum(r["comm_bytes"] for r in pstats)
+        return gc, nc, pstats
 
     def _mem_from(global_comm, n_valid):
         """Replicated membership from a pass-loop result.  Invalid slots are
@@ -309,7 +328,7 @@ def louvain_dynamic_sharded(
 
     with mesh:
         if prev is None:
-            global_comm, n_comms, _ = _passes_with_growth(n_live)
+            global_comm, n_comms, _ = _run_passes(n_live)
             mem = _mem_from(global_comm, n_live)
         else:
             mem = jnp.asarray(pad_membership(
@@ -340,7 +359,7 @@ def louvain_dynamic_sharded(
                 frontier = affected_frontier(touched, mem, n_valid_dev,
                                              screen_mode)
             n_live = int(n_valid_dev)
-            global_comm, n_comms, _ = _passes_with_growth(
+            global_comm, n_comms, _ = _run_passes(
                 n_live, init_membership=mem, init_frontier=frontier)
             mem = _mem_from(global_comm, n_live)
             t2 = time.perf_counter()
@@ -371,4 +390,8 @@ def louvain_dynamic_sharded(
         total_seconds=time.perf_counter() - t_start,
         n_regrows=n_regrows,
         spec=spec,
+        comm_backend=cb,
+        comm_rounds=comm_rounds,
+        comm_fallback_rounds=comm_fb,
+        bytes_on_wire=comm_bytes,
     )

@@ -86,10 +86,16 @@ class MoveState(NamedTuple):
 
     comm: jax.Array      # (sent + 1,) int32, sentinel slot = sent
     sigma: jax.Array     # (sent + 1,) float32 community total weights
+    sizes: jax.Array     # (sent + 1,) int32 community sizes, maintained
+    #                      incrementally by backends with exchange_round;
+    #                      scalar 0 placeholder on the per-round-recompute
+    #                      backends
     frontier: jax.Array  # (L,) bool — local layout
     iters: jax.Array     # () int32 — sweeps performed
     dq: jax.Array        # () float32 — total dQ of the last sweep
     dq_sum: jax.Array    # () float32 — accumulated dQ over the phase
+    comm_fb: jax.Array   # () int32 — rounds the delta exchange fell back
+    #                      to the dense path (0 on backends without one)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,12 +152,34 @@ class MoveEngine:
       ``gather_mask(mask_l)``         -> (sent + 1,) replicated bool
       ``mark_neighbors(moved)``       -> (L,) bool neighbors-of-movers
 
-    optional method
+    optional methods
       ``decide_moves(comm, sigma, frontier, comm_l, sizes, round_ix)``
           -> (do_move (L,) bool, best_c (L,), best_dq (L,)) — a backend that
           fuses scan + gate + guard into one kernel (the fused Pallas ELL
           round) supplies the whole decision; it must equal what
           ``scan`` + ``gated_move_mask`` would produce, bit for bit.
+      ``community_sizes(comm, comm_l)`` -> (sent + 1,) int32 — replaces the
+          engine's psum'd size reduction (the delta backend recomputes sizes
+          locally from the replicated membership: integer-exact, zero
+          collective).  Must equal the psum path element for element.
+      ``exchange_round(comm, sigma, sizes, comm_l, do_move, best_c,
+                       dq_local)``
+          -> (comm', sigma', sizes', moved (sent + 1,) bool,
+              fallback () int32, dq () f32) —
+          replaces the combine_sigma / gather_comm / gather_mask round-trip
+          AND the dq psum with the backend's own state exchange (the delta
+          backend ships compacted, bit-packed movers and the local dq in
+          one fused collective and reconstructs everything else locally).
+          ``dq_local`` is the shard's summed accepted gain.  The engine
+          does NOT pre-reduce the per-community Sigma segment sums for
+          this path — a backend that needs them (e.g. inside an overflow
+          fallback branch) computes them itself, so the reduction only
+          runs where it is consumed.  A backend with ``exchange_round``
+          also maintains the community-size array incrementally: the
+          engine threads ``sizes`` through ``MoveState`` (seeded once per
+          phase via ``community_sizes``, required in this case) instead of
+          re-reducing it every round.  Results must equal the default path
+          bit for bit on one shard.
     """
 
     def __init__(self, scanner, config: EngineConfig):
@@ -168,8 +196,15 @@ class MoveEngine:
 
         gate = (round_gate(sc.local_ids, round_ix, cfg.gate_fraction)
                 if cfg.gate_fraction > 1 else None)
-        sizes = sc.psum(jax.ops.segment_sum(
-            sc.count_ones(comm_l), comm_l, num_segments=sent + 1))
+        exchange = getattr(sc, "exchange_round", None)
+        sizes_fn = getattr(sc, "community_sizes", None)
+        if exchange is not None:
+            sizes = st.sizes        # maintained by the backend's exchange
+        elif sizes_fn is not None:
+            sizes = sizes_fn(st.comm, comm_l)
+        else:
+            sizes = sc.psum(jax.ops.segment_sum(
+                sc.count_ones(comm_l), comm_l, num_segments=sent + 1))
 
         decide = getattr(sc, "decide_moves", None)
         if decide is not None:
@@ -180,26 +215,34 @@ class MoveEngine:
             do_move = gated_move_mask(best_c, best_dq, comm_l, sizes,
                                       frontier, sent, sc.move_valid, gate)
 
-        moved_k = jnp.where(do_move, sc.k_local, 0.0)
-        sigma = sc.combine_sigma(
-            st.sigma,
-            jax.ops.segment_sum(moved_k, jnp.where(do_move, best_c, sent),
-                                num_segments=sent + 1),
-            jax.ops.segment_sum(moved_k, jnp.where(do_move, comm_l, sent),
-                                num_segments=sent + 1))
-        comm = sc.gather_comm(jnp.where(do_move, best_c, comm_l))
-        dq = sc.psum(jnp.sum(jnp.where(do_move, best_dq, 0.0)))
+        dq_local = jnp.sum(jnp.where(do_move, best_dq, 0.0))
+        if exchange is not None:
+            comm, sigma, sizes_new, moved_g, fb, dq = exchange(
+                st.comm, st.sigma, sizes, comm_l, do_move, best_c, dq_local)
+        else:
+            moved_k = jnp.where(do_move, sc.k_local, 0.0)
+            add = jax.ops.segment_sum(
+                moved_k, jnp.where(do_move, best_c, sent),
+                num_segments=sent + 1)
+            sub = jax.ops.segment_sum(
+                moved_k, jnp.where(do_move, comm_l, sent),
+                num_segments=sent + 1)
+            sigma = sc.combine_sigma(st.sigma, add, sub)
+            comm = sc.gather_comm(jnp.where(do_move, best_c, comm_l))
+            moved_g = sc.gather_mask(do_move)
+            fb = jnp.asarray(0, jnp.int32)
+            dq = sc.psum(dq_local)
+            sizes_new = st.sizes
 
         # Vertex pruning: processed vertices leave the frontier; neighbors
         # of movers re-enter it.  Gated-out frontier vertices were never
         # processed this round — keep them hot.
-        moved_g = sc.gather_mask(do_move)
         frontier_new = sc.mark_neighbors(moved_g) & sc.frontier_valid
         if gate is not None:
             frontier_new = frontier_new | (frontier & ~gate)
 
-        return MoveState(comm, sigma, frontier_new, st.iters,
-                         st.dq + dq, st.dq_sum + dq)
+        return MoveState(comm, sigma, sizes_new, frontier_new, st.iters,
+                         st.dq + dq, st.dq_sum + dq, st.comm_fb + fb)
 
     # -- the sweep loop ---------------------------------------------------
     def run(self, comm0: jax.Array, sigma0: jax.Array, frontier0: jax.Array,
@@ -225,10 +268,21 @@ class MoveEngine:
                 st = self.one_round(st, frontier0, base + r)
             return st._replace(iters=st.iters + 1)
 
+        # Backends with their own exchange maintain sizes incrementally —
+        # seed them once per phase; everyone else recomputes per round and
+        # carries a scalar placeholder through the loop state.
+        sc = self.scanner
+        if getattr(sc, "exchange_round", None) is not None:
+            sizes0 = sc.community_sizes(comm0, sc.comm_local(comm0))
+        else:
+            sizes0 = jnp.asarray(0, jnp.int32)
+
         # Prime with dq = +inf so the loop always runs at least one sweep.
-        st0 = MoveState(comm0, sigma0, frontier0, jnp.asarray(0, jnp.int32),
+        st0 = MoveState(comm0, sigma0, sizes0, frontier0,
+                        jnp.asarray(0, jnp.int32),
                         jnp.asarray(jnp.inf, jnp.float32),
-                        jnp.asarray(0.0, jnp.float32))
+                        jnp.asarray(0.0, jnp.float32),
+                        jnp.asarray(0, jnp.int32))
         return jax.lax.while_loop(cond, body, st0)
 
 

@@ -76,6 +76,15 @@ class LouvainConfig:
     #: in tests/test_engine_equiv.py).  Tier policy:
     #: configs.louvain_arch.resolve_coarse_capacity.
     use_ladder: bool = True
+    #: Sharded per-round exchange backend ("gather" | "delta" | "auto"):
+    #: dense Vite-style all_gather/psum of the whole replicated state, or
+    #: compacted bit-packed owned CHANGES with a measured-overflow dense
+    #: fallback (repro.core.distributed.DeltaShardedScanner).  "auto"
+    #: resolves per mesh (delta on multi-shard meshes).  Single-device
+    #: drivers ignore it; memberships are invariant to it (pinned
+    #: bit-for-bit in tests/test_engine_equiv.py).  Policy + caps:
+    #: configs.louvain_arch.resolve_comm_backend / delta_move_cap.
+    comm_backend: str = "auto"
 
 
 @dataclasses.dataclass

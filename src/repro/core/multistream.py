@@ -23,11 +23,13 @@ stream axis instead, so S independent streams ride ONE compiled program:
     vertex-granularity) seeds per-stream frontiers, and the batched pass
     loop resumes from the per-stream memberships.
 
-The batched driver intentionally has NO capacity growth: re-bucketing one
-stream would recompile the fleet's program, so serving callers provision
-``e_cap`` headroom up front (a batch that would overflow raises).  The
-scanner is the sort-reduce backend (ELL bucketing is per-graph host work
-that does not batch).
+Capacity growth is a FLEET-level event: one whale stream overflowing
+``e_cap`` re-buckets every stream into the next power-of-two tier (one
+recompile for the fleet, same as the capacity ladder's shrink) and replays
+the step, instead of killing the whole serving step mid-fleet.  Callers
+that would rather fail fast pass ``grow_capacity=False`` and catch the
+typed ``FleetCapacityOverflow``.  The scanner is the sort-reduce backend
+(ELL bucketing is per-graph host work that does not batch).
 """
 
 from __future__ import annotations
@@ -41,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.louvain_arch import (compact_work_cap,
+from repro.configs.louvain_arch import (_pow2_at_least, compact_work_cap,
                                         resolve_agg_backend,
                                         resolve_coarse_capacity)
 from repro.core.aggregate import renumber_communities
@@ -52,6 +54,20 @@ from repro.core.louvain import (LouvainConfig, _aggregate_phase, _move_phase,
                                 _renumber_and_fold, pad_membership,
                                 singleton_init, warm_init)
 from repro.core.modularity import modularity
+
+
+class FleetCapacityOverflow(ValueError):
+    """A serving step overflows the fleet's shared ``e_cap`` envelope.
+
+    Raised only under ``grow_capacity=False`` (the default driver re-buckets
+    the fleet and replays).  Carries the offending ``step``, the worst
+    stream's required slot count ``e_need``, and the envelope ``e_cap``."""
+
+    def __init__(self, step: int, e_need: int, e_cap: int):
+        super().__init__(
+            f"batched step {step} overflows capacity: a stream needs "
+            f"{e_need} live directed slots > e_cap={e_cap}")
+        self.step, self.e_need, self.e_cap = step, e_need, e_cap
 
 
 def stack_graphs(graphs: Sequence[CSRGraph]) -> CSRGraph:
@@ -90,6 +106,7 @@ class BatchedDynamicResult:
     frontier_sizes: np.ndarray   # (n_steps, S) delta-screened seed sizes
     modularity: Optional[np.ndarray]  # (S,) final Q per stream (if tracked)
     total_seconds: float
+    n_regrows: int = 0           # fleet-level capacity-growth re-buckets
 
     def stream_membership(self, s: int) -> np.ndarray:
         n = int(np.asarray(self.graphs.n_valid)[s])
@@ -286,6 +303,7 @@ def louvain_dynamic_batched(
     screening=True,
     track_modularity: bool = False,
     apply_backend: str = "xla",
+    grow_capacity: bool = True,
 ) -> BatchedDynamicResult:
     """Serve S independent edge streams through ONE batched dynamic program.
 
@@ -299,7 +317,11 @@ def louvain_dynamic_batched(
     "compact"`` routes the vmapped move phase through the frontier-
     compacted scanner (bit-identical; under vmap the overflow cond lowers
     to a both-branches select, so ``"auto"`` keeps the full scan here).
-    Raises on capacity overflow (no growth — see module docstring).
+    A step overflowing the fleet's ``e_cap`` re-buckets every stream into
+    the next power-of-two edge tier and replays it (``grow_capacity``,
+    default; one recompile per growth, counted in ``n_regrows``) — with
+    ``grow_capacity=False`` it raises ``FleetCapacityOverflow`` instead.
+    Memberships are invariant to capacity either way.
     """
     t_start = time.perf_counter()
     S = len(graphs)
@@ -336,22 +358,39 @@ def louvain_dynamic_batched(
     bbs = [stack_batches([streams[s][step] for s in range(S)])
            for step in range(n_steps)]
 
+    n_regrows = 0
+
     def serve_carefully(gb, mem):
         """Per-step validated loop: check overflow/convergence every step,
-        routing non-converged steps through the general batched pass loop
-        — results stay exactly equal to the sequential driver."""
+        routing overflowed steps through a fleet re-bucket + replay and
+        non-converged steps through the general batched pass loop —
+        results stay exactly equal to the sequential driver."""
+        nonlocal e_cap, fused, n_regrows
         frontier_sizes: List[jax.Array] = []
         for step in range(n_steps):
-            gb_new, mem_new, frontier, iters, e_new, fsize = fused(
-                gb, mem, bbs[step])
-            e_max, iters_max = jax.device_get(
-                (jnp.max(e_new), jnp.max(iters)))
-            if int(e_max) > e_cap:
-                raise ValueError(
-                    f"batched step {step} overflows capacity: a stream "
-                    f"needs {int(e_max)} live directed slots > "
-                    f"e_cap={e_cap}; provision headroom up front (batched "
-                    "serving does not grow)")
+            while True:
+                gb_new, mem_new, frontier, iters, e_new, fsize = fused(
+                    gb, mem, bbs[step])
+                e_max, iters_max = jax.device_get(
+                    (jnp.max(e_new), jnp.max(iters)))
+                if int(e_max) <= e_cap:
+                    break
+                if not grow_capacity:
+                    raise FleetCapacityOverflow(step, int(e_max), e_cap)
+                # One whale stream outgrew the envelope: re-bucket the
+                # WHOLE fleet into the next power-of-two tier (one shared
+                # compiled shape, like the ladder's shrink) and replay
+                # this step against the pre-apply state.
+                e_cap = _pow2_at_least(int(e_max))
+                gb = jax.vmap(lambda g: rebucket_capacity(
+                    g, n_cap_new=n_cap, e_cap_new=e_cap))(gb)
+                wc = (compact_work_cap(e_cap, config.compact_cap_frac)
+                      if work_cap else 0)
+                fused = _fused_step(
+                    config.max_iterations, config.use_pruning,
+                    config.gate_fraction, float(config.initial_tolerance),
+                    screen_mode, apply_backend, wc)
+                n_regrows += 1
             if int(iters_max) > 1:
                 res = louvain_batched(
                     gb_new, config, init_membership=mem,
@@ -401,6 +440,7 @@ def louvain_dynamic_batched(
                         if frontier_sizes else np.zeros((0, S), int)),
         modularity=q,
         total_seconds=time.perf_counter() - t_start,
+        n_regrows=n_regrows,
     )
 
 

@@ -211,6 +211,47 @@ def test_sharded_static_ladder_bit_for_bit(gold, corpora, ladder):
     assert np.array_equal(mem, gold["sharded__sbm"])
 
 
+# -- the communication-backend matrix: the delta exchange is a data-movement
+# optimization, not a semantics change.
+#
+# On one shard the delta branch's scatters reduce to exactly the gather
+# backend's arithmetic (identical segment sums, unique scatter indices), so
+# every committed sharded golden must be reproduced element for element —
+# static, laddered, and streaming.  The multi-shard quality/bytes contract
+# lives in tests/test_distributed_dynamic.py (forced-8-device subprocess).
+
+
+@pytest.mark.parametrize("backend", ["delta", "gather"])
+def test_sharded_comm_backend_static_bit_for_bit(gold, corpora, backend):
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, stats = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                        comm_backend=backend)
+    assert np.array_equal(mem, gold["sharded__sbm"])
+    assert all(r["comm_backend"] == backend for r in stats)
+
+
+@pytest.mark.parametrize("ladder", [True, False])
+def test_sharded_delta_ladder_bit_for_bit(gold, corpora, ladder):
+    """The delta exchange composes with the coarse-pass capacity ladder:
+    per-tier caps and lane widths change, memberships must not."""
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                    use_ladder=ladder, comm_backend="delta")
+    assert np.array_equal(mem, gold["sharded__sbm"])
+
+
+def test_sharded_dynamic_stream_delta_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    res = louvain_dynamic_sharded(
+        init, mesh, ("shard",), batches,
+        config=LouvainConfig(comm_backend="delta"))
+    assert np.array_equal(res.membership,
+                          gold["sharded_dynamic__sbm_stream"])
+    assert res.comm_backend == "delta" and res.comm_rounds > 0
+    assert res.bytes_on_wire > 0
+
+
 def test_batched_stream_compact_bit_for_bit(gold):
     """One-stream batched serving with the compacted scanner equals the
     sequential compact driver exactly (vmapped cond/select semantics must

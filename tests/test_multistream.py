@@ -3,7 +3,8 @@
 The batched driver must be a pure batching transform: each stream's result
 through ``louvain_dynamic_batched`` equals what that stream would get alone,
 and the batched pass loop handles per-stream convergence (tolerance
-freezing) and capacity discipline (loud overflow, no silent growth).
+freezing) and capacity discipline (fleet-level growth + replay by default,
+typed FleetCapacityOverflow when growth is off).
 """
 
 import numpy as np
@@ -15,8 +16,9 @@ from repro.core.dynamic import louvain_dynamic
 from repro.core.graph import build_csr
 from repro.core.louvain import (LouvainConfig, louvain,
                                 membership_modularity, pad_membership)
-from repro.core.multistream import (louvain_batched, louvain_dynamic_batched,
-                                    stack_batches, stack_graphs)
+from repro.core.multistream import (FleetCapacityOverflow, louvain_batched,
+                                    louvain_dynamic_batched, stack_batches,
+                                    stack_graphs)
 from repro.data import sbm_graph, sbm_holdout_stream
 
 
@@ -130,19 +132,46 @@ def test_batched_dynamic_pallas_apply_matches(fleet):
     assert np.array_equal(res_x.membership, res_p.membership)
 
 
-def test_batched_overflow_is_loud():
+def _tight_whale_fleet():
+    """A 2-stream fleet with almost no edge headroom plus a batch of
+    brand-new edges that cannot fit the provisioned envelope."""
     full, _ = sbm_graph(n_communities=4, size=8, p_in=0.5, p_out=0.05,
                         seed=1)
     e = int(full.e_valid)
     g = build_csr(np.asarray(full.src)[:e], np.asarray(full.indices)[:e],
                   np.asarray(full.weights)[:e], int(full.n_valid),
                   e_cap=e + 2)   # almost no headroom
-    # a batch of brand-new edges that cannot fit
     batch = make_edge_batch([0, 1, 2, 3], [17, 18, 19, 20],
                             [1.0, 1.0, 1.0, 1.0], g.n_cap, b_cap=4)
-    with pytest.raises(ValueError, match="overflows capacity"):
+    return g, batch
+
+
+def test_batched_overflow_is_loud_without_growth():
+    g, batch = _tight_whale_fleet()
+    with pytest.raises(FleetCapacityOverflow, match="overflows capacity"):
         louvain_dynamic_batched([g, g], [[batch], [batch]],
-                                prevs=[louvain(g).membership] * 2)
+                                prevs=[louvain(g).membership] * 2,
+                                grow_capacity=False)
+
+
+def test_batched_overflow_regrows_and_matches():
+    """A whale stream overflowing the envelope re-buckets the FLEET and
+    replays the step — the serving run completes and equals the same fleet
+    provisioned with ample headroom up front (memberships are invariant to
+    capacity)."""
+    g, batch = _tight_whale_fleet()
+    prevs = [louvain(g).membership] * 2
+    grown = louvain_dynamic_batched([g, g], [[batch], [batch]], prevs=prevs)
+    assert grown.n_regrows >= 1
+
+    e = int(g.e_valid)
+    ample = build_csr(np.asarray(g.src)[:e], np.asarray(g.indices)[:e],
+                      np.asarray(g.weights)[:e], int(g.n_valid),
+                      e_cap=int(grown.graphs.indices.shape[1]))
+    ref = louvain_dynamic_batched([ample, ample], [[batch], [batch]],
+                                  prevs=prevs)
+    assert ref.n_regrows == 0
+    assert np.array_equal(grown.membership, ref.membership)
 
 
 def test_batched_rejects_ell_config(fleet):
