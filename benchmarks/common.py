@@ -64,6 +64,21 @@ def emit_csv(rows: List[dict], header: List[str]) -> None:
         print(",".join(str(r.get(h, "")) for h in header))
 
 
+def _git_sha() -> Optional[str]:
+    """Short commit hash of the tree the artifact was produced from, or
+    None outside a git checkout — ties each BENCH json to a revision."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except OSError:
+        return None
+
+
 def emit_json(name: str, rows: Optional[List[dict]],
               seconds: Optional[float] = None, **extra) -> str:
     """Write ``BENCH_<name>.json`` — the machine-readable perf artifact.
@@ -71,6 +86,7 @@ def emit_json(name: str, rows: Optional[List[dict]],
     ``rows`` is whatever the section measured (each bench keeps its own
     schema: wall times, edges/s / updates/s, modularity where applicable);
     ``seconds`` the section's wall time; ``extra`` free-form metadata.
+    Every payload carries the producing tree's ``git_sha``.
     Returns the path written.
     """
     import jax
@@ -80,6 +96,7 @@ def emit_json(name: str, rows: Optional[List[dict]],
         "seconds": None if seconds is None else round(float(seconds), 3),
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "git_sha": _git_sha(),
         "rows": rows if rows is not None else [],
     }
     payload.update(extra)

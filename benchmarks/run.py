@@ -12,6 +12,8 @@ Sections:
     dynamic  streaming edge-batch updates/sec vs full recompute
              (+ Pallas batch-apply bit-for-bit gate)
     multistream  batched multi-stream serving vs sequential dynamic
+    refine  Leiden-style refinement vs plain Louvain (Q, wall time,
+            disconnected-community audit)
     distdyn  sharded streaming updates/sec vs cold sharded recompute
              (forced-8-device subprocess)
     roofline  achieved rates from the committed BENCH_*.json artifacts vs
@@ -37,7 +39,7 @@ def main() -> None:
                     help="paper-scale graphs + 3 repeats (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig5,fig6,fig7,fig8,"
-                         "dynamic,multistream,distdyn,roofline")
+                         "dynamic,multistream,refine,distdyn,roofline")
     args = ap.parse_args()
     small = not args.full
     repeats = 3 if args.full else 2
@@ -97,6 +99,11 @@ def main() -> None:
                 # 2-vCPU runner noise can flip a low-repeat row.
                 lambda: bench_multistream.run(small=small,
                                               repeats=max(repeats, 5)))
+    if want("refine"):
+        from benchmarks import bench_refine
+        section("refine", "Leiden refinement vs plain Louvain "
+                "(Q / wall time / connectivity audit)",
+                lambda: bench_refine.run(small=small, repeats=repeats))
     if want("distdyn"):
         print("== distdyn: sharded streaming vs cold sharded recompute "
               "(8 forced host devices, subprocess) ==")

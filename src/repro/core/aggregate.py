@@ -28,6 +28,15 @@ Two interchangeable backends resolve the post-sort groups
 slots).  Group keys/positions agree exactly; weight sums agree bit-for-bit
 for integer-valued weights (exact float32 sums — all golden corpora) and to
 float32 rounding otherwise.
+
+**Refinement interaction.**  Under ``LouvainConfig.refine="leiden"`` the
+partition handed here is the REFINED one (strictly finer than the reported
+outer partition), so the coarse graph has more super-vertices than the
+outer community count.  The capacity ladder keys off the refined
+``n_comms`` — the finer granularity is what the next pass scans — while the
+pass loop's aggregation-tolerance early stop keys off the OUTER shrink
+ratio, so refinement (which always coarsens less) does not trigger a
+spurious early exit.
 """
 
 from __future__ import annotations

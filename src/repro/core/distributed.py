@@ -43,7 +43,9 @@ from repro import compat
 from repro.core.comm import (CommPlan, comm_plan, compact_movers, label_bits,
                              pack_bits, packed_lanes, phase_bytes,
                              unpack_bits)
-from repro.core.engine import EngineConfig, MoveEngine, MoveState
+from repro.core.engine import (ConstrainedScanner, EngineConfig, MoveEngine,
+                               MoveState, mask_cross_outer_slots,
+                               sanitize_outer)
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
 
@@ -514,12 +516,78 @@ def make_distributed_move(
 
 
 @functools.lru_cache(maxsize=None)
+def make_distributed_refine(
+    mesh: Mesh,
+    axes: Tuple[str, ...],
+    spec: ShardedGraphSpec,
+    *,
+    max_iterations: int = 20,
+    gate_fraction: int = 2,
+    use_pruning: bool = True,
+    comm_backend: str = "gather",
+):
+    """Build the jit'd distributed Leiden REFINEMENT phase.
+
+    Returns fn(src_g, dst_g, w_g, outer, k, n_live, m, tolerance)
+        -> (comm, iters, dq_sum, rounds, fallbacks)
+    — the constrained engine sweep: every vertex re-seeds as a singleton and
+    may only join communities inside its outer community (``outer``, the
+    replicated membership from the preceding move phase).  Per shard the
+    cross-outer edge slots are masked (dst -> sentinel, w -> 0) and the same
+    exchange scanner the move phase uses is wrapped in
+    ``engine.ConstrainedScanner`` — so the gather and delta comm backends
+    both inherit refinement with zero forks.  ``k``/``m`` stay the FULL
+    graph's quantities.
+    """
+    from repro.configs.louvain_arch import resolve_comm_backend
+
+    edge_spec = P(axes)
+    rep = P()
+    sent = spec.sentinel
+    scanner_cls = COMM_SCANNERS[
+        resolve_comm_backend(comm_backend, spec.n_shards)]
+    config = EngineConfig(max_iterations=max_iterations,
+                          use_pruning=use_pruning,
+                          gate_fraction=gate_fraction)
+
+    def phase(src_g, dst_g, w_g, outer, k, n_live, m, tolerance):
+        def body_shard(src_l, dst_l, w_l, outer, k, n_live, m, tolerance):
+            outer_s = sanitize_outer(outer, n_live, sent)
+            dst_m, w_m = mask_cross_outer_slots(src_l, dst_l, w_l, outer_s,
+                                                sent)
+            scanner = ConstrainedScanner(
+                scanner_cls(axes, spec, src_l, dst_m, w_m, k, m),
+                outer_s, n_live, gate_fraction=gate_fraction)
+            comm0 = jnp.where(jnp.arange(sent + 1) < n_live,
+                              jnp.arange(sent + 1), sent).astype(jnp.int32)
+            frontier0 = scanner.frontier_valid & (scanner.local_ids < n_live)
+            st = MoveEngine(scanner, config).run(comm0, k, frontier0,
+                                                 tolerance)
+            return (st.comm, st.iters, st.dq_sum,
+                    st.iters * jnp.int32(gate_fraction), st.comm_fb)
+
+        fn = shard_map(
+            body_shard, mesh=mesh,
+            in_specs=(edge_spec, edge_spec, edge_spec, rep, rep, rep, rep,
+                      rep),
+            out_specs=(rep, rep, rep, rep, rep),
+            check_rep=False,
+        )
+        return fn(src_g, dst_g, w_g, outer, k, n_live, m, tolerance)
+
+    return jax.jit(phase)
+
+
+@functools.lru_cache(maxsize=None)
 def make_tier_phases(mesh: Mesh, axes: Tuple[str, ...], *,
                      max_iterations: int = 20, gate_fraction: int = 2,
-                     use_pruning: bool = True, comm_backend: str = "gather"):
-    """The capacity-ladder phase factory: ``spec -> (move, agg)``, cached so
-    every tier's phases compile once and are reused across passes/batches
-    (static and streaming drivers share this ONE builder).  The factory
+                     use_pruning: bool = True, comm_backend: str = "gather",
+                     refine: str = "none"):
+    """The capacity-ladder phase factory: ``spec -> (move, agg, refine_move)``,
+    cached so every tier's phases compile once and are reused across
+    passes/batches (static and streaming drivers share this ONE builder).
+    ``refine_move`` is ``None`` unless ``refine="leiden"`` — then it is the
+    constrained-sweep phase from ``make_distributed_refine``.  The factory
     itself is cached on (mesh, axes, knobs) too — REPEATED driver calls on
     the same mesh (benchmarks, streaming restarts) must reuse the compiled
     phases instead of paying the XLA compile per call, which otherwise
@@ -531,7 +599,12 @@ def make_tier_phases(mesh: Mesh, axes: Tuple[str, ...], *,
                     mesh, axes, spec_, max_iterations=max_iterations,
                     gate_fraction=gate_fraction, use_pruning=use_pruning,
                     comm_backend=comm_backend),
-                make_distributed_aggregate(mesh, axes, spec_))
+                make_distributed_aggregate(mesh, axes, spec_),
+                (make_distributed_refine(
+                     mesh, axes, spec_, max_iterations=max_iterations,
+                     gate_fraction=gate_fraction, use_pruning=use_pruning,
+                     comm_backend=comm_backend)
+                 if refine == "leiden" else None))
 
     return phases_for
 
@@ -687,6 +760,8 @@ def sharded_louvain_passes(
     phases_for=None,
     use_ladder: bool = False,
     comm_backend: str = "gather",
+    refine: str = "none",
+    refine_move=None,
 ):
     """Host pass loop over prebuilt jit'd phases on partitioned edge arrays.
 
@@ -718,23 +793,46 @@ def sharded_louvain_passes(
     "delta") matching what ``move``/``phases_for`` were built with — it is
     used for the per-pass bytes-on-wire stats, not for routing.
 
-    Returns (global_comm (n_pad,) device array, n_communities, stats);
-    ``global_comm`` stays at the ORIGINAL ``spec.n_pad`` length.  Each
-    stats row carries the comm-plan columns (``comm_backend``,
+    With ``refine="leiden"`` every pass runs the constrained refinement
+    sweep (``refine_move``, from ``make_distributed_refine`` /
+    ``phases_for``) after local-moving: aggregation follows the REFINED
+    partition while the reported membership and next-pass warm start stay
+    at the OUTER partition — the same Leiden pass semantics as the
+    single-device ``repro.core.louvain.louvain``.
+
+    Returns (membership (n_pad,) device array, n_communities, stats);
+    the membership stays at the ORIGINAL ``spec.n_pad`` length (with
+    refinement it is the outer fold, not the refined dendrogram chain).
+    Each stats row carries the comm-plan columns (``comm_backend``,
     ``comm_rounds``, ``comm_fallback_rounds``, ``comm_bytes``) from the
     measured round counters + static shapes.
     """
     from repro.configs.louvain_arch import (LADDER_SLACK, _pow2_at_least,
                                             resolve_coarse_capacity)
+    from repro.core.louvain import _leiden_warm_membership, pad_membership
+
+    if refine not in ("none", "leiden"):
+        raise ValueError(f"refine must be 'none' or 'leiden', got {refine!r}")
+    refine_on = refine == "leiden"
+    if refine_on and refine_move is None:
+        if phases_for is None:
+            raise ValueError("refine='leiden' needs refine_move or "
+                             "phases_for")
+        refine_move = phases_for(spec)[2]
+        if refine_move is None:
+            raise ValueError("refine='leiden' but the phase factory was "
+                             "built with refine='none'")
 
     n_pad, sent = spec.n_pad, spec.sentinel
     idx = np.arange(n_pad + 1)
     shape_token = jnp.zeros((n_pad + 1,), jnp.float32)
     global_comm = jnp.arange(n_pad, dtype=jnp.int32)
+    report_comm = global_comm
     ones_frontier = jnp.ones((n_pad + 1,), bool)
     tol = float(initial_tolerance)
     stats = []
-    n_comms_i = n_live
+    n_report = n_live
+    leiden_warm = None
     for p in range(max_passes):
         k = _vertex_k(w_g, src_g, shape_token)
         m = jnp.sum(w_g) * 0.5
@@ -743,6 +841,12 @@ def sharded_louvain_passes(
                 init_membership, k, jnp.int32(n_live))
             frontier0 = (ones_frontier if init_frontier is None
                          else init_frontier)
+        elif leiden_warm is not None:
+            # Leiden pass semantics: resume from the outer partition
+            # expressed on the refined coarse vertices.
+            comm0, sigma0 = _warm_comm_sigma(leiden_warm, k,
+                                             jnp.int32(n_live))
+            frontier0 = ones_frontier
         else:
             comm0 = jnp.asarray(
                 np.where(idx < n_live, idx, sent).astype(np.int32))
@@ -751,23 +855,51 @@ def sharded_louvain_passes(
         comm, sigma, iters, dq_sum, rounds, fallbacks = move(
             src_g, dst_g, w_g, comm0, sigma0, k, frontier0, m,
             jnp.float32(tol))
-        comm_ren, n_comms = replicated_renumber(comm)
+        refine_iters_i = None
+        outer_ren = None
+        rounds_extra = fb_extra = 0
+        if refine_on:
+            refined, r_iters, _r_dq, r_rounds, r_fb = refine_move(
+                src_g, dst_g, w_g, comm, k, jnp.int32(n_live), m,
+                jnp.float32(tol))
+            outer_ren, n_outer = replicated_renumber(comm)
+            comm_ren, n_comms = replicated_renumber(refined)
+            # Outer fold off the PRE-pass chain: what this pass reports.
+            report_comm = outer_ren[jnp.minimum(global_comm, sent)]
+            n_report = int(n_outer)
+            refine_iters_i = int(r_iters)
+            rounds_extra, fb_extra = int(r_rounds), int(r_fb)
+        else:
+            comm_ren, n_comms = replicated_renumber(comm)
         global_comm = comm_ren[jnp.minimum(global_comm, sent)]
+        if not refine_on:
+            report_comm = global_comm
+            n_report = int(n_comms)
         iters_i, n_comms_i = int(iters), int(n_comms)
-        rounds_i, fb_i = int(rounds), int(fallbacks)
+        rounds_i = int(rounds) + rounds_extra
+        fb_i = int(fallbacks) + fb_extra
         plan = sharded_comm_plan(spec, comm_backend)
-        stats.append({"iterations": iters_i, "n_communities": n_comms_i,
+        stats.append({"iterations": iters_i, "n_communities": n_report,
                       "n_vertices": n_live, "n_pad": sent,
                       "e_per_shard": spec.e_per_shard,
                       "dq_sum": float(dq_sum),
                       "comm_backend": comm_backend,
                       "comm_rounds": rounds_i,
                       "comm_fallback_rounds": fb_i,
-                      "comm_bytes": phase_bytes(plan, rounds_i, fb_i)})
+                      "comm_bytes": phase_bytes(plan, rounds_i, fb_i),
+                      "refine_iterations": refine_iters_i,
+                      "n_refined": n_comms_i if refine_on else None})
         converged = iters_i <= 1
-        low_shrink = n_comms_i / max(n_live, 1) > aggregation_tolerance
+        low_shrink = n_report / max(n_live, 1) > aggregation_tolerance
         if converged or low_shrink or p == max_passes - 1:
             break
+        if refine_on:
+            # Outer-on-coarse warm start, computed BEFORE aggregation so
+            # skew retiers (which rewrite comm_ren's slot space) cannot
+            # touch it: values are coarse ids [0, n_comms) regardless of
+            # later layout changes.
+            warm_flat = np.asarray(_leiden_warm_membership(
+                comm_ren, outer_ren, jnp.int32(n_live), n_comms))[:n_comms_i]
         while True:
             a_src, a_dst, a_w, e_valid, owned_max = agg(src_g, dst_g, w_g,
                                                         comm_ren)
@@ -797,7 +929,9 @@ def sharded_louvain_passes(
                     max(owned, 2 * spec.e_per_shard)))
             src_g, dst_g, w_g, spec = _rebucket_live_host(
                 src_g, dst_g, w_g, old_sent, tier)
-            move, agg = phases_for(spec)
+            move, agg, _rmv = phases_for(spec)
+            if refine_on and _rmv is not None:
+                refine_move = _rmv
             if spec.sentinel != old_sent:
                 # The owner map changed: rewrite the renumbered membership
                 # (which feeds the retried aggregation) and the loop-level
@@ -838,14 +972,20 @@ def sharded_louvain_passes(
                 if tier != spec:
                     src_g, dst_g, w_g, spec = _rebucket_live_host(
                         src_g, dst_g, w_g, old_sent, tier)
-                    move, agg = phases_for(spec)
+                    move, agg, _rmv = phases_for(spec)
+                    if refine_on and _rmv is not None:
+                        refine_move = _rmv
                     sent = spec.sentinel
                     idx = np.arange(spec.n_pad + 1)
                     shape_token = jnp.zeros((spec.n_pad + 1,), jnp.float32)
                     ones_frontier = jnp.ones((spec.n_pad + 1,), bool)
+        if refine_on:
+            # Express the outer-on-coarse warm start in the FINAL next-pass
+            # layout (skew retiers / ladder tiers may have changed n_pad).
+            leiden_warm = jnp.asarray(pad_membership(warm_flat, spec.n_pad))
         n_live = n_comms_i
         tol /= tolerance_drop
-    return global_comm, n_comms_i, stats
+    return report_comm, n_report, stats
 
 
 def distributed_louvain(
@@ -865,6 +1005,7 @@ def distributed_louvain(
     e_per_shard: int | None = None,
     use_ladder: bool = True,
     comm_backend: str = "auto",
+    refine: str = "none",
 ):
     """End-to-end multi-device GVE-Louvain (host pass loop, jit'd phases).
 
@@ -878,7 +1019,8 @@ def distributed_louvain(
     (memberships unchanged; per-tier phases are built once and cached for
     the call).  ``comm_backend`` picks the per-round exchange ("gather" |
     "delta" | "auto"; auto resolves per mesh) — memberships are invariant
-    to it.
+    to it.  ``refine="leiden"`` enables the constrained refinement sweep
+    between local-moving and aggregation (see ``sharded_louvain_passes``).
 
     Returns (membership (n,), n_communities, pass_stats list).
     """
@@ -893,8 +1035,8 @@ def distributed_louvain(
     phases_for = make_tier_phases(
         mesh, axes, max_iterations=max_iterations,
         gate_fraction=gate_fraction, use_pruning=use_pruning,
-        comm_backend=cb)
-    move, agg = phases_for(spec)
+        comm_backend=cb, refine=refine)
+    move, agg, _ = phases_for(spec)
 
     from repro.core.louvain import pad_membership
     mem0 = fr0 = None
@@ -916,7 +1058,8 @@ def distributed_louvain(
             max_passes=max_passes, initial_tolerance=initial_tolerance,
             tolerance_drop=tolerance_drop,
             aggregation_tolerance=aggregation_tolerance,
-            phases_for=phases_for, use_ladder=use_ladder, comm_backend=cb)
+            phases_for=phases_for, use_ladder=use_ladder, comm_backend=cb,
+            refine=refine)
     membership = np.asarray(global_comm[:n])
     return membership, int(len(np.unique(membership))), stats
 

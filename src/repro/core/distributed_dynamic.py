@@ -246,6 +246,8 @@ def louvain_dynamic_sharded(
     ``config.comm_backend`` the per-round exchange ("gather" | "delta" |
     "auto") — memberships are invariant to it, and the result carries the
     stream's bytes-on-wire accounting (``bytes_per_round``).
+    ``config.refine="leiden"`` runs the constrained refinement sweep inside
+    every batch's pass loop (see ``sharded_louvain_passes``).
     """
     from repro.configs.louvain_arch import resolve_comm_backend
 
@@ -277,7 +279,8 @@ def louvain_dynamic_sharded(
     phases_for = make_tier_phases(
         mesh, axes, max_iterations=config.max_iterations,
         gate_fraction=config.gate_fraction,
-        use_pruning=config.use_pruning, comm_backend=cb)
+        use_pruning=config.use_pruning, comm_backend=cb,
+        refine=config.refine)
 
     pass_kw = dict(
         max_passes=config.max_passes,
@@ -311,7 +314,7 @@ def louvain_dynamic_sharded(
         gc, nc, pstats = sharded_louvain_passes(
             src_g, dst_g, w_g, spec, move, agg, n_live_,
             phases_for=phases_for, use_ladder=config.use_ladder,
-            comm_backend=cb, **kw, **pass_kw)
+            comm_backend=cb, refine=config.refine, **kw, **pass_kw)
         comm_rounds += sum(r["comm_rounds"] for r in pstats)
         comm_fb += sum(r["comm_fallback_rounds"] for r in pstats)
         comm_bytes += sum(r["comm_bytes"] for r in pstats)

@@ -21,9 +21,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (EngineConfig, MoveEngine, MoveState,
-                               gated_move_mask, round_gate)
-from repro.core.graph import CSRGraph, to_ell_blocks
+from repro.core.engine import (ConstrainedScanner, EngineConfig, MoveEngine,
+                               MoveState, gated_move_mask,
+                               mask_cross_outer_slots, round_gate,
+                               sanitize_outer)
+from repro.core.graph import CSRGraph, ELLBlock, to_ell_blocks
 from repro.core.local_move import SortReduceScanner, best_moves
 from repro.core.modularity import community_weights
 from repro.kernels.louvain_scan import ops as scan_ops
@@ -127,10 +129,25 @@ class FusedELLScanner(ELLScanner):
         return do_move, best_c, best_dq
 
 
+def _mask_blocks_cross_outer(blocks, outer, n_cap: int):
+    """On-device ELL analogue of ``engine.mask_cross_outer_slots``: slots
+    whose endpoints disagree on the outer label become padding (col = n_cap,
+    w = 0), which ``prepare_ell_inputs`` already treats as dead."""
+    masked = []
+    for b in blocks:
+        row_o = outer[jnp.minimum(b.rows, n_cap)][:, None]
+        col_o = outer[jnp.minimum(b.cols, n_cap)]
+        cross = row_o != col_o
+        masked.append(ELLBlock(b.rows,
+                               jnp.where(cross, n_cap, b.cols),
+                               jnp.where(cross, 0.0, b.w)))
+    return tuple(masked)
+
+
 @functools.lru_cache(maxsize=None)
 def _ell_runner(n_blocks: int, use_pallas: bool, interpret: bool,
                 max_iterations: int, use_pruning: bool, gate_fraction: int,
-                fused: bool = False):
+                fused: bool = False, refine: bool = False):
     """One jit'd engine loop per static config; graph/blocks are arguments
     (not closure constants), so calls with equal shapes share the executable."""
     config = EngineConfig(max_iterations=max_iterations,
@@ -139,7 +156,14 @@ def _ell_runner(n_blocks: int, use_pallas: bool, interpret: bool,
 
     @jax.jit
     def run(graph, blocks, leftover, k, m, comm0, sigma0, frontier0,
-            tolerance):
+            tolerance, outer=None):
+        if refine:
+            outer_s = sanitize_outer(outer, graph.n_valid, graph.n_cap)
+            dst, w = mask_cross_outer_slots(
+                graph.src, graph.indices, graph.weights, outer_s,
+                graph.n_cap)
+            graph = graph._replace(indices=dst, weights=w)
+            blocks = _mask_blocks_cross_outer(blocks, outer_s, graph.n_cap)
         if fused:
             scanner = FusedELLScanner(graph, blocks, leftover, k, m,
                                       use_pallas=use_pallas,
@@ -148,6 +172,9 @@ def _ell_runner(n_blocks: int, use_pallas: bool, interpret: bool,
         else:
             scanner = ELLScanner(graph, blocks, leftover, k, m,
                                  use_pallas=use_pallas, interpret=interpret)
+        if refine:
+            scanner = ConstrainedScanner(scanner, outer_s, graph.n_valid,
+                                         gate_fraction=gate_fraction)
         st = MoveEngine(scanner, config).run(comm0, sigma0, frontier0,
                                              tolerance)
         return st.comm, st.iters, st.dq_sum
@@ -169,6 +196,7 @@ def move_phase_ell(
     sigma0: jax.Array | None = None,
     frontier0: jax.Array | None = None,
     fused: bool = False,
+    refine_outer: jax.Array | None = None,
 ):
     """ELL-kernel local-moving phase: returns (comm, iters, dq_sum).
 
@@ -178,7 +206,9 @@ def move_phase_ell(
     all valid vertices), mirroring the sort-reduce ``_move_phase``.
     ``fused=True`` runs the fused scan+apply kernel (``FusedELLScanner``)
     instead of the scan-only kernel + engine apply — same memberships, bit
-    for bit.
+    for bit.  ``refine_outer`` runs the Leiden-style constrained sweep
+    instead (see ``local_move.louvain_move``): blocks and leftover slots
+    are masked on device, so the host-side bucketing is reused as-is.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -200,6 +230,10 @@ def move_phase_ell(
     frontier0 = valid if frontier0 is None else (frontier0 & valid)
 
     run = _ell_runner(len(blocks), use_pallas, interpret,
-                      max_iterations, use_pruning, gate_fraction, fused)
+                      max_iterations, use_pruning, gate_fraction, fused,
+                      refine_outer is not None)
+    if refine_outer is not None:
+        return run(graph, tuple(blocks), leftover, k, m, comm0, sigma0,
+                   frontier0, jnp.float32(tolerance), refine_outer)
     return run(graph, tuple(blocks), leftover, k, m, comm0, sigma0,
                frontier0, jnp.float32(tolerance))

@@ -286,6 +286,167 @@ class MoveEngine:
         return jax.lax.while_loop(cond, body, st0)
 
 
+def sanitize_outer(outer: jax.Array, n_valid: jax.Array,
+                   sentinel: int) -> jax.Array:
+    """Sanitize an outer-community membership before a constrained sweep.
+
+    Refinement re-seeds vertices as singletons and constrains moves to the
+    OUTER community from the preceding local-moving phase; ``outer`` arrives
+    from arbitrary earlier state (a previous ladder tier's sentinel space, a
+    streamed warm-start snapshot), so — exactly like the PR-5 ladder
+    warm-start sanitisation — any label that does not denote a live
+    community in the CURRENT sentinel space must be neutralised before it
+    can leak into the constrained sweep's seed:
+
+      * invalid vertex slots (id >= n_valid) pin to the sentinel;
+      * a stale out-of-range label (< 0 or >= n_valid, e.g. a smaller
+        tier's sentinel) on a VALID slot falls back to the vertex's own
+        singleton — never to another community's id.
+
+    ``ConstrainedScanner`` applies this unconditionally, so the guarantee
+    is engine-level, not per-driver.  ``assert_outer_sane`` is the eager
+    companion for driver boundaries.
+    """
+    ids = jnp.arange(outer.shape[0], dtype=jnp.int32)
+    valid_slot = ids < n_valid
+    lab = outer.astype(jnp.int32)
+    in_range = (lab >= 0) & (lab < n_valid)
+    out = jnp.where(valid_slot & in_range, lab, ids)
+    return jnp.where(valid_slot, out, sentinel)
+
+
+def assert_outer_sane(outer, n_valid, sentinel: int) -> None:
+    """Eager-mode guard: raise if a stale outer id would reach a constrained
+    sweep.  No-op under tracing (jit), where ``sanitize_outer`` provides the
+    in-graph guarantee; on concrete arrays this surfaces the driver bug
+    loudly instead of silently re-labelling."""
+    if isinstance(outer, jax.core.Tracer) or isinstance(n_valid, jax.core.Tracer):
+        return
+    import numpy as np
+    outer = np.asarray(outer)
+    nv = int(n_valid)
+    ids = np.arange(outer.shape[0])
+    bad_valid = (ids < nv) & ((outer < 0) | (outer >= nv))
+    bad_pad = (ids >= nv) & (outer != sentinel)
+    if bad_valid.any() or bad_pad.any():
+        where = np.flatnonzero(bad_valid | bad_pad)[:8]
+        raise ValueError(
+            f"stale outer-community ids in refinement seed: slots "
+            f"{where.tolist()} hold {outer[where].tolist()} "
+            f"(n_valid={nv}, sentinel={sentinel})")
+
+
+def mask_cross_outer_slots(src: jax.Array, dst: jax.Array, w: jax.Array,
+                           outer: jax.Array, sentinel: int):
+    """Mask directed edge slots that cross outer-community boundaries.
+
+    The refinement constraint is an EDGE property: a sub-community never
+    spans an outer boundary, so "candidate target lies inside my outer
+    community" is exactly "this slot's endpoints share an outer label".
+    Cross-outer slots take ``dst = sentinel`` and ``w = 0`` — the sentinel
+    destination makes the whole candidate group vanish in every backend's
+    existing validity check (``s_c != sentinel``), which is essential:
+    zeroing the weight alone would NOT be safe, because dQ can be positive
+    with ``k_i_to_c == 0`` through the degree term of Eq. 2.
+
+    Returns (dst', w').  Padding slots (already at the sentinel on both
+    endpoints) pass through unchanged.
+    """
+    src_o = outer[jnp.minimum(src, sentinel)]
+    dst_o = outer[jnp.minimum(dst, sentinel)]
+    cross = src_o != dst_o
+    return (jnp.where(cross, sentinel, dst).astype(dst.dtype),
+            jnp.where(cross, 0.0, w).astype(w.dtype))
+
+
+class ConstrainedScanner:
+    """Leiden-style refinement as a wrapper over ANY scanner backend.
+
+    Wraps an inner scanner that was built over the cross-outer-MASKED
+    topology (``mask_cross_outer_slots``) and layers the two refinement
+    rules on top of the engine's move decision:
+
+      1. **intra-outer target** — the chosen community's label must share
+         the mover's outer label (a safety net: the masked topology already
+         makes cross-outer candidates unreachable);
+      2. **singleton-only movers** (Leiden's refinement rule) — a vertex
+         may move only while it is still a singleton in the refined
+         partition.  Together with rule 1 and the fact that a singleton's
+         positive-dQ move requires an actual edge into the target
+         (``k_i_to_c > 0``; with ``sigma_d == k_i`` the degree term of
+         Eq. 2 is non-positive), this guarantees every refined community
+         is CONNECTED — the badly-connected-community fix.
+
+    The wrapper delegates the whole scanner protocol to the inner backend
+    (so SortReduce / compact / ELL / fused-ELL / sharded gather / sharded
+    delta all inherit refinement with zero per-backend forks) and supplies
+    ``decide_moves`` so the size-dependent singleton rule composes with the
+    engine's gate + guard exactly once, for fused and unfused inners alike.
+    """
+
+    def __init__(self, inner, outer: jax.Array, n_valid,
+                 gate_fraction: int = 2):
+        assert_outer_sane(outer, n_valid, inner.sentinel)
+        self.inner = inner
+        self.sentinel = inner.sentinel
+        self.local_ids = inner.local_ids
+        self.k_local = inner.k_local
+        self.move_valid = inner.move_valid
+        self.frontier_valid = inner.frontier_valid
+        self.gate_fraction = int(gate_fraction)
+        self.outer = sanitize_outer(outer, n_valid, inner.sentinel)
+        # Outer label per LOCAL slot (replicated == local on one device).
+        self._outer_l = self.outer[jnp.minimum(self.local_ids, self.sentinel)]
+        # Backends with their own exchange keep it: the engine probes via
+        # getattr, so only mirror the hooks the inner actually has.
+        for hook in ("community_sizes", "exchange_round"):
+            fn = getattr(inner, hook, None)
+            if fn is not None:
+                setattr(self, hook, fn)
+
+    # -- delegated topology surface ---------------------------------------
+    def comm_local(self, comm):
+        return self.inner.comm_local(comm)
+
+    def count_ones(self, comm_l):
+        return self.inner.count_ones(comm_l)
+
+    def psum(self, x):
+        return self.inner.psum(x)
+
+    def combine_sigma(self, sigma, add, sub):
+        return self.inner.combine_sigma(sigma, add, sub)
+
+    def gather_comm(self, comm_l):
+        return self.inner.gather_comm(comm_l)
+
+    def gather_mask(self, mask_l):
+        return self.inner.gather_mask(mask_l)
+
+    def mark_neighbors(self, moved):
+        return self.inner.mark_neighbors(moved)
+
+    def scan(self, comm, sigma, frontier):
+        return self.inner.scan(comm, sigma, frontier)
+
+    # -- the constrained decision -----------------------------------------
+    def decide_moves(self, comm, sigma, frontier, comm_l, sizes, round_ix):
+        sent = self.sentinel
+        inner_decide = getattr(self.inner, "decide_moves", None)
+        if inner_decide is not None:
+            do_move, best_c, best_dq = inner_decide(
+                comm, sigma, frontier, comm_l, sizes, round_ix)
+        else:
+            best_c, best_dq = self.inner.scan(comm, sigma, frontier)
+            gate = (round_gate(self.local_ids, round_ix, self.gate_fraction)
+                    if self.gate_fraction > 1 else None)
+            do_move = gated_move_mask(best_c, best_dq, comm_l, sizes,
+                                      frontier, sent, self.move_valid, gate)
+        intra_outer = self.outer[jnp.minimum(best_c, sent)] == self._outer_l
+        still_singleton = sizes[jnp.minimum(comm_l, sent)] == 1
+        return do_move & intra_outer & still_singleton, best_c, best_dq
+
+
 class ReplicatedScannerBase:
     """Topology surface shared by the single-device backends (sort-reduce
     and ELL): local layout == replicated layout, all collectives identity."""

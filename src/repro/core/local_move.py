@@ -21,8 +21,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (EngineConfig, MoveEngine, MoveState,
-                               ReplicatedScannerBase)
+from repro.core.engine import (ConstrainedScanner, EngineConfig, MoveEngine,
+                               MoveState, ReplicatedScannerBase,
+                               mask_cross_outer_slots, sanitize_outer)
 from repro.core.graph import CSRGraph
 from repro.core.modularity import delta_modularity
 
@@ -249,6 +250,7 @@ def louvain_move(
     gate_fraction: int = 2,
     frontier0: jax.Array | None = None,
     work_cap: int = 0,
+    refine_outer: jax.Array | None = None,
 ) -> MoveState:
     """Algorithm 2 on the sort-reduce backend — a thin engine adapter.
 
@@ -260,11 +262,26 @@ def louvain_move(
     scanner with that (static) work-buffer capacity; 0 keeps the full-scan
     backend.  Sweep/tolerance/gating semantics are the engine's — see
     ``repro.core.engine.MoveEngine``.
+
+    ``refine_outer`` switches the sweep into the Leiden-style CONSTRAINED
+    mode: cross-outer edge slots are masked (dst -> sentinel, w -> 0) so a
+    vertex only ever sees candidates inside its outer community, and the
+    scanner is wrapped in ``engine.ConstrainedScanner`` (intra-outer target
+    + singleton-only movers).  ``k``/``m``/``sigma`` stay the FULL graph's
+    quantities — only the candidate topology is restricted.
     """
     valid = jnp.arange(graph.n_cap + 1) < graph.n_valid
     frontier0 = valid if frontier0 is None else (frontier0 & valid)
+    if refine_outer is not None:
+        outer = sanitize_outer(refine_outer, graph.n_valid, graph.n_cap)
+        dst, w = mask_cross_outer_slots(graph.src, graph.indices,
+                                        graph.weights, outer, graph.n_cap)
+        graph = graph._replace(indices=dst, weights=w)
     scanner = (CompactSortReduceScanner(graph, k, m, work_cap) if work_cap
                else SortReduceScanner(graph, k, m))
+    if refine_outer is not None:
+        scanner = ConstrainedScanner(scanner, outer, graph.n_valid,
+                                     gate_fraction=gate_fraction)
     engine = MoveEngine(
         scanner,
         EngineConfig(max_iterations=max_iterations, use_pruning=use_pruning,

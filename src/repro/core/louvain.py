@@ -85,6 +85,18 @@ class LouvainConfig:
     #: bit-for-bit in tests/test_engine_equiv.py).  Policy + caps:
     #: configs.louvain_arch.resolve_comm_backend / delta_move_cap.
     comm_backend: str = "auto"
+    #: Leiden-style refinement ("none" | "leiden"): after each local-moving
+    #: phase, re-seed vertices as singletons and run a CONSTRAINED engine
+    #: sweep (moves only within the outer community, singleton movers only
+    #: — ``engine.ConstrainedScanner``), then aggregate the REFINED
+    #: partition while the reported membership / warm start stay at the
+    #: outer partition.  Fixes Louvain's badly-connected-community
+    #: pathology: every refined community is connected by construction,
+    #: so aggregation never glues disconnected pieces into one coarse
+    #: vertex.  All scanner/agg/comm backends inherit the constrained
+    #: sweep through the one wrapper — pinned bit-for-bit in
+    #: tests/test_engine_equiv.py.
+    refine: str = "none"
 
 
 @dataclasses.dataclass
@@ -99,6 +111,8 @@ class PassStats:
     frontier_size: Optional[int] = None  # seed-frontier size (delta screening)
     n_cap: Optional[int] = None          # capacities the pass ran at
     e_cap: Optional[int] = None          # (ladder tier when use_ladder)
+    refine_iterations: Optional[int] = None  # constrained-sweep iterations
+    n_refined: Optional[int] = None      # refined (aggregation) communities
 
 
 @dataclasses.dataclass
@@ -107,6 +121,15 @@ class LouvainResult:
     n_communities: int
     passes: List[PassStats]
     total_seconds: float
+    #: Per-level memberships of the dendrogram: ``levels[p]`` is the (n,)
+    #: membership of the ORIGINAL vertices after pass p (the fold of every
+    #: renumbered pass partition up to p); ``levels[-1] == membership``.
+    #: With ``refine="none"`` each level is a coarsening of the previous
+    #: one (nested dendrogram); with ``refine="leiden"`` the levels hold
+    #: the OUTER partitions (what the pass reports) while aggregation
+    #: follows the refined chain, so consecutive levels need not nest —
+    #: only the refined fold chain does.
+    levels: List[np.ndarray] = dataclasses.field(default_factory=list)
 
     @property
     def n_passes(self) -> int:
@@ -195,6 +218,63 @@ def _move_phase(graph: CSRGraph, comm0, sigma0, frontier0, tolerance, *,
     return st.comm, st.iters, st.dq_sum
 
 
+@functools.partial(jax.jit, static_argnames=("max_iterations", "use_pruning",
+                                             "gate_fraction"))
+def _refine_phase(graph: CSRGraph, outer, tolerance, *,
+                  max_iterations: int, use_pruning: bool,
+                  gate_fraction: int = 2):
+    """Leiden refinement sweep: singletons under the outer-community constraint.
+
+    Re-seeds every vertex as its own community and runs the CONSTRAINED
+    engine sweep (``local_move.louvain_move(refine_outer=...)``): cross-outer
+    edges are masked out of the candidate topology and only still-singleton
+    vertices may move, so the result is a partition that (a) refines
+    ``outer`` and (b) contains only CONNECTED communities.  ``k``/``m`` are
+    the full graph's — the constraint restricts candidates, not the
+    objective.
+    """
+    count_trace("refine_phase")
+    k = graph.vertex_weights()
+    m = graph.total_weight()
+    n_cap = graph.n_cap
+    comm0 = jnp.arange(n_cap + 1, dtype=jnp.int32)
+    frontier0 = jnp.arange(n_cap + 1) < graph.n_valid
+    st = louvain_move(
+        graph, comm0, k, k, m,
+        tolerance=tolerance, max_iterations=max_iterations,
+        use_pruning=use_pruning, gate_fraction=gate_fraction,
+        frontier0=frontier0, refine_outer=outer,
+    )
+    return st.comm, st.iters, st.dq_sum
+
+
+@jax.jit
+def _leiden_warm_membership(comm_ren, outer_ren, n_valid, n_agg):
+    """Next-pass warm start after aggregating the REFINED partition.
+
+    The coarse graph's vertices are the refined communities; the next pass
+    must start from the OUTER partition expressed on them (Leiden's pass
+    semantics — Q of the warm start equals Q of the reported outer
+    partition).  For each live coarse vertex r (< ``n_agg``) the outer
+    label is constant over its members, so a scatter of ``outer_ren``
+    through ``comm_ren`` is well defined; the returned membership labels
+    each coarse vertex with the SMALLEST coarse id sharing its outer
+    community (labels must live in coarse vertex-id space).
+    """
+    cap = comm_ren.shape[0] - 1
+    idx = jnp.arange(cap + 1, dtype=jnp.int32)
+    valid = idx < n_valid
+    tgt = jnp.where(valid, jnp.minimum(comm_ren, cap), cap)
+    oc = jnp.full((cap + 1,), cap, jnp.int32).at[tgt].set(
+        jnp.where(valid, outer_ren.astype(jnp.int32), cap))
+    live = idx < n_agg
+    oc = jnp.where(live, jnp.minimum(oc, cap), cap)
+    rep = jax.ops.segment_min(jnp.where(live, idx, cap), oc,
+                              num_segments=cap + 1)
+    rep = jnp.minimum(rep, cap)
+    return jnp.where(live, rep[oc], cap).astype(jnp.int32)
+
+
 @jax.jit
 def _renumber_and_fold(comm, n_valid, n_cap_arr, global_comm):
     """Renumber pass-level communities and fold into the dendrogram lookup.
@@ -261,6 +341,12 @@ def louvain(
     passes: List[PassStats] = []
     n_comms_final = n
     agg_backend = resolve_agg_backend(config.agg_backend)
+    if config.refine not in ("none", "leiden"):
+        raise ValueError(f"refine must be 'none' or 'leiden', "
+                         f"got {config.refine!r}")
+    refine_on = config.refine == "leiden"
+    levels: List[np.ndarray] = []
+    leiden_warm = None   # outer-on-coarse membership for the next pass
 
     ell_family = (config.use_ell_kernel
                   or config.scan_backend in ("ell", "ell_fused"))
@@ -296,6 +382,12 @@ def louvain(
         if p == 0 and warm_comm0 is not None:
             comm0, sigma0, frontier0 = warm_comm0, warm_sigma0, warm_frontier0
             pass_frontier = frontier_size0
+        elif leiden_warm is not None:
+            # Leiden pass semantics: the coarse graph's vertices are the
+            # REFINED communities, so the next pass resumes from the outer
+            # partition expressed on them (Q matches the reported outer Q).
+            comm0, sigma0, frontier0 = warm_init(g, jnp.asarray(leiden_warm))
+            pass_frontier = None
         else:
             comm0, sigma0, frontier0 = singleton_init(g)
             pass_frontier = None
@@ -322,21 +414,55 @@ def louvain(
                 work_cap=(compact_work_cap(g.e_cap, config.compact_cap_frac)
                           if backend == "compact" else 0))
         iters = int(iters)
+        t1a = time.perf_counter()
+
+        refine_iters = None
+        outer_ren = None
+        if refine_on:
+            if ell_family:
+                refined, r_it, _r_dq = ell_move.move_phase_ell(
+                    g, jnp.float32(tol),
+                    max_iterations=config.max_iterations,
+                    use_pruning=config.use_pruning,
+                    gate_fraction=config.gate_fraction,
+                    widths=config.ell_widths,
+                    fused=backend == "ell_fused", refine_outer=comm)
+            else:
+                refined, r_it, _r_dq = _refine_phase(
+                    g, comm, jnp.float32(tol),
+                    max_iterations=config.max_iterations,
+                    use_pruning=config.use_pruning,
+                    gate_fraction=config.gate_fraction)
+            refine_iters = int(r_it)
         t1 = time.perf_counter()
 
-        comm_ren, n_comms, folded = _renumber_and_fold(
-            comm, g.n_valid, jnp.int32(g.n_cap), global_comm)
+        if refine_on:
+            # Two folds off the SAME pre-pass global_comm: the outer fold is
+            # what this pass reports, the refined fold is what aggregation
+            # (and the dendrogram chain) follows.
+            outer_ren, n_outer, outer_fold = _renumber_and_fold(
+                comm, g.n_valid, jnp.int32(g.n_cap), global_comm)
+            comm_ren, n_comms, folded = _renumber_and_fold(
+                refined, g.n_valid, jnp.int32(g.n_cap), global_comm)
+            level = outer_fold
+            n_report = int(n_outer)
+        else:
+            comm_ren, n_comms, folded = _renumber_and_fold(
+                comm, g.n_valid, jnp.int32(g.n_cap), global_comm)
+            level = folded
+            n_report = int(n_comms)
         global_comm = folded
-        n_comms_i = int(n_comms)
+        n_comms_i = int(n_comms)        # aggregation granularity (refined)
         n_verts_i = int(g.n_valid)
+        levels.append(np.asarray(level[:n]))
         t2 = time.perf_counter()
 
         q_now = float(modularity(graph, jnp.concatenate(
-            [global_comm, jnp.asarray([n_cap], jnp.int32)]))) \
+            [level, jnp.asarray([n_cap], jnp.int32)]))) \
             if config.track_modularity else None
 
         converged = iters <= 1                       # Alg. 1 line 7
-        low_shrink = n_comms_i / max(n_verts_i, 1) > config.aggregation_tolerance  # line 9
+        low_shrink = n_report / max(n_verts_i, 1) > config.aggregation_tolerance  # line 9
 
         pass_caps = (g.n_cap, g.e_cap)
         if not (converged or low_shrink or p == config.max_passes - 1):
@@ -350,32 +476,43 @@ def louvain(
                 if (n_cap_new, e_cap_new) != (g.n_cap, g.e_cap):
                     g = rebucket_capacity(g, n_cap_new=n_cap_new,
                                           e_cap_new=e_cap_new)
+            if refine_on:
+                warm_flat = np.asarray(_leiden_warm_membership(
+                    comm_ren, outer_ren, jnp.int32(n_verts_i),
+                    n_comms))[:n_comms_i]
+                leiden_warm = pad_membership(warm_flat, g.n_cap)
             t3 = time.perf_counter()
             agg_s = t3 - t2
         else:
             agg_s = 0.0
 
         passes.append(PassStats(
-            iterations=iters, n_communities=n_comms_i, n_vertices=n_verts_i,
+            iterations=iters, n_communities=n_report, n_vertices=n_verts_i,
             dq_sum=float(dq_sum), seconds=time.perf_counter() - t0,
-            phase_seconds={"local_move": t1 - t0, "other": t2 - t1,
-                           "aggregate": agg_s},
+            phase_seconds={"local_move": t1a - t0,
+                           "other": t2 - t1, "aggregate": agg_s,
+                           **({"refine": t1 - t1a} if refine_on else {})},
             modularity=q_now,
             frontier_size=pass_frontier if pass_frontier is not None
             else n_verts_i,
             n_cap=pass_caps[0], e_cap=pass_caps[1],
+            refine_iterations=refine_iters,
+            n_refined=n_comms_i if refine_on else None,
         ))
-        n_comms_final = n_comms_i
+        n_comms_final = n_report
         if converged or low_shrink:
             break
         tol = tol / config.tolerance_drop            # line 13 threshold scaling
 
-    membership = np.asarray(global_comm[:n])
+    # With refinement the dendrogram chain (global_comm) follows the REFINED
+    # partitions; the reported membership is the last pass's OUTER level.
+    membership = levels[-1] if levels else np.asarray(global_comm[:n])
     return LouvainResult(
         membership=membership,
         n_communities=int(len(np.unique(membership))),
         passes=passes,
         total_seconds=time.perf_counter() - t_start,
+        levels=levels,
     )
 
 

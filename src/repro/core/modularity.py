@@ -35,8 +35,12 @@ def modularity(graph: CSRGraph, comm: jax.Array) -> jax.Array:
     c_dst = comm[graph.indices]
     internal = jnp.sum(jnp.where(c_src == c_dst, graph.weights, 0.0))
     sig = community_weights(graph, comm)
-    q = internal / (2.0 * m) - jnp.sum((sig / (2.0 * m)) ** 2)
-    return q
+    # A zero-edge graph (empty, single vertex, or a deletion stream that
+    # drained every edge) has m == 0; every vertex is trivially its own
+    # community and Q is 0 by convention, not NaN.
+    m_safe = jnp.where(m > 0, m, 1.0)
+    q = internal / (2.0 * m_safe) - jnp.sum((sig / (2.0 * m_safe)) ** 2)
+    return jnp.where(m > 0, q, 0.0)
 
 
 def delta_modularity(
@@ -51,6 +55,10 @@ def delta_modularity(
 
     ``sigma_d`` is the total weight of d *with i still inside*; ``sigma_c`` is
     the target community total *without* i.  ``k_i_to_*`` exclude self-loops.
-    Broadcasts over any leading shape.
+    Broadcasts over any leading shape.  With m == 0 there are no edges, hence
+    no move can improve anything — dQ is 0 by convention, not NaN.
     """
-    return (k_i_to_c - k_i_to_d) / m - k_i * (k_i + sigma_c - sigma_d) / (2.0 * m * m)
+    m_safe = jnp.where(m > 0, m, 1.0)
+    dq = ((k_i_to_c - k_i_to_d) / m_safe
+          - k_i * (k_i + sigma_c - sigma_d) / (2.0 * m_safe * m_safe))
+    return jnp.where(m > 0, dq, 0.0)

@@ -50,9 +50,10 @@ from repro.core.aggregate import renumber_communities
 from repro.core.delta import EdgeBatch, _apply_edge_batch
 from repro.core.engine import affected_frontier, normalize_screening
 from repro.core.graph import CSRGraph, rebucket_capacity
-from repro.core.louvain import (LouvainConfig, _aggregate_phase, _move_phase,
-                                _renumber_and_fold, pad_membership,
-                                singleton_init, warm_init)
+from repro.core.louvain import (LouvainConfig, _aggregate_phase,
+                                _leiden_warm_membership, _move_phase,
+                                _refine_phase, _renumber_and_fold,
+                                pad_membership, singleton_init, warm_init)
 from repro.core.modularity import modularity
 
 
@@ -189,10 +190,21 @@ def louvain_batched(
     at FLEET granularity: one tier per pass, resolved from the max coarse
     size over the still-active streams, so the whole fleet keeps a single
     compiled shape per tier (per-stream tiers would shatter the vmap).
+
+    ``config.refine="leiden"`` vmaps the constrained refinement sweep
+    (``repro.core.louvain._refine_phase``) over the fleet: aggregation
+    follows each stream's REFINED partition while the reported membership
+    and the next pass's warm start stay at the outer partition — the same
+    Leiden pass semantics as the single-device driver, one compiled
+    program for all streams.
     """
     if config.use_ell_kernel or config.scan_backend in ("ell", "ell_fused"):
         raise ValueError("louvain_batched uses the sort-reduce scanner; "
                          "ELL bucketing is per-graph host work")
+    if config.refine not in ("none", "leiden"):
+        raise ValueError(
+            f"refine must be 'none' or 'leiden', got {config.refine!r}")
+    refine_on = config.refine == "leiden"
     S, n_cap = gb.indptr.shape[0], gb.indptr.shape[1] - 1
     # Aggregation backend under vmap mirrors the scanner policy: an
     # EXPLICIT "pallas" is honored (bit-identical, tested in interpret
@@ -212,8 +224,16 @@ def louvain_batched(
             config.max_iterations, config.use_pruning, config.gate_fraction,
             compact_work_cap(gb.indices.shape[1],
                              config.compact_cap_frac))[0]
+    if refine_on:
+        v_refine = jax.vmap(functools.partial(
+            _refine_phase, max_iterations=config.max_iterations,
+            use_pruning=config.use_pruning,
+            gate_fraction=config.gate_fraction))
+        v_leiden_warm = jax.vmap(_leiden_warm_membership)
 
     global_comm = jnp.tile(jnp.arange(n_cap, dtype=jnp.int32)[None], (S, 1))
+    report_comm = global_comm
+    leiden_mem = None
     n_valid0 = gb.n_valid           # per-stream vertex counts of the INPUT
     active = np.ones(S, bool)       # (gb becomes the coarse graph below)
     tol = float(config.initial_tolerance)
@@ -232,6 +252,11 @@ def louvain_batched(
     for p in range(config.max_passes):
         if p == 0 and warm:
             comm0, sigma0, frontier0 = v_warm(gb, mem, fr)
+        elif leiden_mem is not None:
+            # Leiden pass semantics: resume from the outer partition
+            # expressed on the refined coarse vertices.
+            comm0, sigma0, frontier0 = v_warm(
+                gb, leiden_mem, jnp.ones_like(leiden_mem, bool))
         else:
             comm0, sigma0, frontier0 = v_singleton(gb)
             if p == 0 and init_frontier is not None:
@@ -239,22 +264,38 @@ def louvain_batched(
         tols = jnp.where(jnp.asarray(active), jnp.float32(tol), jnp.inf)
         comm, iters, _ = (move0 if p == 0 else move)(
             gb, comm0, sigma0, frontier0, tols)
-        comm_ren, n_comms, folded = v_renumber(
-            comm, gb.n_valid, jnp.zeros((S,), jnp.int32), global_comm)
+        if refine_on:
+            refined, _r_iters, _r_dq = v_refine(gb, comm, tols)
+            outer_ren, n_outer, outer_fold = v_renumber(
+                comm, gb.n_valid, jnp.zeros((S,), jnp.int32), global_comm)
+            comm_ren, n_comms, folded = v_renumber(
+                refined, gb.n_valid, jnp.zeros((S,), jnp.int32), global_comm)
+            report_fold, n_report = outer_fold, n_outer
+        else:
+            comm_ren, n_comms, folded = v_renumber(
+                comm, gb.n_valid, jnp.zeros((S,), jnp.int32), global_comm)
+            report_fold, n_report = folded, n_comms
         mask = jnp.asarray(active)
         global_comm = jnp.where(mask[:, None], folded, global_comm)
+        report_comm = jnp.where(mask[:, None], report_fold, report_comm)
         passes = p + 1
 
         iters_np = np.asarray(iters)
         n_comms_np = np.asarray(n_comms)
+        n_report_np = np.asarray(n_report)
         n_valid_np = np.asarray(gb.n_valid)
-        n_comms_final = np.where(active, n_comms_np, n_comms_final)
+        n_comms_final = np.where(active, n_report_np, n_comms_final)
         converged = iters_np <= 1
-        low_shrink = (n_comms_np / np.maximum(n_valid_np, 1)
+        low_shrink = (n_report_np / np.maximum(n_valid_np, 1)
                       > config.aggregation_tolerance)
         next_active = active & ~converged & ~low_shrink
         if p == config.max_passes - 1 or not next_active.any():
             break
+        if refine_on:
+            # Outer-on-coarse warm start at the FINE pass capacity; resized
+            # below once the coarse layout (ladder tier) is known — values
+            # are coarse ids [0, n_comms), invariant to the layout.
+            warm_c = v_leiden_warm(comm_ren, outer_ren, gb.n_valid, n_comms)
         gb_new = v_aggregate(gb, comm_ren, n_comms)
         sel = jnp.asarray(next_active)
         gb = jax.tree.map(
@@ -278,6 +319,20 @@ def louvain_batched(
             if (n_new, e_new) != (n_cap_cur, e_cap_cur):
                 gb = jax.vmap(lambda g: rebucket_capacity(
                     g, n_cap_new=n_new, e_cap_new=e_new))(gb)
+        if refine_on:
+            # Resize the warm rows to the (possibly laddered) coarse
+            # capacity: live entries (< n_comms) hold valid coarse ids,
+            # everything else becomes the new sentinel.
+            cap2 = gb.indptr.shape[1] - 1
+            idx2 = jnp.arange(cap2 + 1)
+            if warm_c.shape[1] >= cap2 + 1:
+                body = warm_c[:, : cap2 + 1]
+            else:
+                body = jnp.concatenate(
+                    [warm_c, jnp.full((S, cap2 + 1 - warm_c.shape[1]),
+                                      cap2, jnp.int32)], axis=1)
+            leiden_mem = jnp.where(idx2[None, :] < n_comms[:, None],
+                                   body, jnp.int32(cap2))
         active = next_active
         tol /= config.tolerance_drop
 
@@ -285,11 +340,12 @@ def louvain_batched(
     # folding through a laddered (shrunk) pass leaves them holding the small
     # tier's sentinel, which a later warm start would misread as a real
     # community assignment (matches the un-laddered fold, where they hold
-    # n_cap after the first renumber).
+    # n_cap after the first renumber).  With refinement the reported
+    # membership is the OUTER fold, not the refined dendrogram chain.
     idx = jnp.arange(n_cap)
-    global_comm = jnp.where(idx[None, :] < n_valid0[:, None],
-                            global_comm, jnp.int32(n_cap))
-    return BatchedLouvainResult(membership=global_comm,
+    report_comm = jnp.where(idx[None, :] < n_valid0[:, None],
+                            report_comm, jnp.int32(n_cap))
+    return BatchedLouvainResult(membership=report_comm,
                                 n_communities=n_comms_final.astype(int),
                                 n_passes=passes)
 

@@ -132,3 +132,103 @@ def oracle_graph_slots(graph):
     e = int(graph.e_valid)
     return (np.asarray(graph.src)[:e], np.asarray(graph.indices)[:e],
             np.asarray(graph.weights)[:e], int(graph.n_valid))
+
+
+def refine_oracle(src, dst, w, n, outer, *, max_sweeps=100):
+    """Sequential Leiden-style refinement: the NumPy reference of the
+    constrained sweep (``repro.core.louvain._refine_phase``).
+
+    Every vertex re-seeds as its own singleton community; a sweep in id
+    order may merge a STILL-SINGLETON vertex into a neighboring refined
+    community, but only one inside its ``outer`` community and only for a
+    strictly positive modularity gain.  Because a singleton's gain against
+    a community it has no edge to is never positive (the degree term of the
+    gain is non-positive when sigma_d == k_u), every refined community is
+    connected by construction — the property the auditor below checks.
+
+    Returns the (n,) refined membership (a refinement of ``outer``: each
+    refined community lies inside one outer community).
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float64)
+    outer = np.asarray(outer)
+    m = w.sum() / 2.0
+    adj = {}
+    for s, d, x in zip(src, dst, w):
+        adj.setdefault(int(s), {})
+        adj[int(s)][int(d)] = adj[int(s)].get(int(d), 0.0) + x
+
+    comm = np.arange(n)
+    k = np.zeros(n, np.float64)
+    for u, nbrs in adj.items():
+        k[u] = sum(nbrs.values())
+    sigma = k.copy()
+    size = np.ones(n, np.int64)
+    if m <= 0:
+        return comm
+
+    for _ in range(max_sweeps):
+        moved = False
+        for u in range(n):
+            if size[int(comm[u])] != 1:    # only still-singleton movers
+                continue
+            k_to = {}
+            for v, wv in adj.get(u, {}).items():
+                if v == u or outer[v] != outer[u]:
+                    continue               # constrained: intra-outer only
+                c = int(comm[v])
+                k_to[c] = k_to.get(c, 0.0) + wv
+            d = int(comm[u])
+            sigma[d] -= k[u]
+            best_c = d
+            best_gain = k_to.get(d, 0.0) - k[u] * sigma[d] / (2 * m)
+            for c in sorted(k_to):
+                gain = k_to[c] - k[u] * sigma[c] / (2 * m)
+                if gain > best_gain + 1e-12:
+                    best_c, best_gain = c, gain
+            sigma[best_c] += k[u]
+            if best_c != d:
+                size[d] -= 1
+                size[best_c] += 1
+                comm[u] = best_c
+                moved = True
+        if not moved:
+            break
+    return comm
+
+
+def disconnected_communities(src, dst, membership):
+    """Community ids whose induced subgraph is NOT connected (BFS audit).
+
+    ``src``/``dst`` are directed slot lists; ``membership`` a flat (n,)
+    labeling.  A community is connected when a BFS over its intra-community
+    edges from any member reaches every member; singletons are trivially
+    connected.  Returns the sorted list of offending community ids.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    membership = np.asarray(membership)
+    members = {}
+    for v, c in enumerate(membership):
+        members.setdefault(int(c), []).append(v)
+    intra = membership[src] == membership[dst]
+    adj = {}
+    for s, d in zip(src[intra], dst[intra]):
+        if s != d:
+            adj.setdefault(int(s), []).append(int(d))
+    bad = []
+    for c, vs in members.items():
+        if len(vs) <= 1:
+            continue
+        seen = {vs[0]}
+        queue = [vs[0]]
+        while queue:
+            u = queue.pop()
+            for v in adj.get(u, ()):
+                if v not in seen:
+                    seen.add(v)
+                    queue.append(v)
+        if len(seen) != len(vs):
+            bad.append(c)
+    return sorted(bad)

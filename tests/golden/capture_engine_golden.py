@@ -36,7 +36,12 @@ def corpora():
     lesmis = from_networkx(nx.les_miserables_graph())
     sbm, _ = sbm_graph(n_communities=8, size=16, p_in=0.4, p_out=0.01, seed=2)
     ring = from_networkx(nx.ring_of_cliques(8, 6))
-    return {"lesmis": lesmis, "sbm": sbm, "ring_of_cliques": ring}
+    # The badly-connected corpus: plain parallel Louvain leaves a
+    # DISCONNECTED community on this graph (pinned by the connectivity
+    # audit in tests/test_louvain.py); refine="leiden" fixes it.
+    gnp = from_networkx(nx.gnp_random_graph(120, 0.05, seed=21))
+    return {"lesmis": lesmis, "sbm": sbm, "ring_of_cliques": ring,
+            "gnp": gnp}
 
 
 def dynamic_stream():
@@ -62,20 +67,36 @@ def dynamic_stream():
 
 def main():
     out = {}
+    mesh = make_mesh((1,), ("shard",))
     for name, g in corpora().items():
         out[f"single__{name}"] = louvain(g).membership
         out[f"ell__{name}"] = louvain(
             g, LouvainConfig(use_ell_kernel=True)).membership
-        mesh = make_mesh((1,), ("shard",))
         mem, _, _ = distributed_louvain(g, mesh, ("shard",))
         out[f"sharded__{name}"] = mem
+        # Leiden-refined goldens: same corpora through the constrained
+        # refinement sweep (reported membership = outer partition).
+        out[f"single_leiden__{name}"] = louvain(
+            g, LouvainConfig(refine="leiden")).membership
+        out[f"ell_leiden__{name}"] = louvain(
+            g, LouvainConfig(use_ell_kernel=True,
+                             refine="leiden")).membership
+        mem, _, _ = distributed_louvain(g, mesh, ("shard",),
+                                        refine="leiden")
+        out[f"sharded_leiden__{name}"] = mem
     init, batches = dynamic_stream()
     out["dynamic__sbm_stream"] = louvain_dynamic(init, batches).membership
+    init, batches = dynamic_stream()
+    out["dynamic_leiden__sbm_stream"] = louvain_dynamic(
+        init, batches, config=LouvainConfig(refine="leiden")).membership
     from repro.core.distributed_dynamic import louvain_dynamic_sharded
     init, batches = dynamic_stream()
-    mesh = make_mesh((1,), ("shard",))
     out["sharded_dynamic__sbm_stream"] = louvain_dynamic_sharded(
         init, mesh, ("shard",), batches).membership
+    init, batches = dynamic_stream()
+    out["sharded_dynamic_leiden__sbm_stream"] = louvain_dynamic_sharded(
+        init, mesh, ("shard",), batches,
+        config=LouvainConfig(refine="leiden")).membership
 
     path = os.path.join(os.path.dirname(__file__), "engine_memberships.npz")
     np.savez_compressed(path, **out)

@@ -54,6 +54,13 @@ for b in range(6):
     agree += counts.max()
 out["sbm"] = {"recovery": float(agree / len(mem2)), "ncomm": ncomm2}
 
+# --- Leiden refinement on 8 shards: bit-for-bit vs the committed golden ------
+g3 = from_networkx(nx.gnp_random_graph(120, 0.05, seed=21))
+mem3, ncomm3, _ = distributed_louvain(g3, mesh, ("data", "model"),
+                                      refine="leiden")
+out["leiden_gnp"] = {"membership": np.asarray(mem3).tolist(),
+                     "ncomm": int(ncomm3)}
+
 # --- partition layout invariants ---------------------------------------------
 src_g, dst_g, w_g, spec = partition_graph_host(g, 8)
 out["partition"] = {
@@ -89,3 +96,22 @@ def test_distributed_sbm_recovery(dist_results):
 def test_partition_conserves_weight(dist_results):
     assert dist_results["partition"]["w_sum_ok"]
     assert dist_results["partition"]["shards"] == 8
+
+
+def test_distributed_leiden_8dev_matches_golden_and_connected(dist_results):
+    """refine="leiden" on 8 forced shards reproduces the committed golden
+    bit-for-bit (captured single-shard — sharding must not change a single
+    label) and the audit finds zero disconnected communities."""
+    import networkx as nx
+    import numpy as np
+
+    from _oracle import disconnected_communities, oracle_graph_slots
+    from repro.core.graph import from_networkx
+
+    got = np.asarray(dist_results["leiden_gnp"]["membership"], np.int32)
+    here = os.path.dirname(os.path.abspath(__file__))
+    golden = np.load(os.path.join(here, "golden", "engine_memberships.npz"))
+    np.testing.assert_array_equal(got, golden["sharded_leiden__gnp"])
+    g = from_networkx(nx.gnp_random_graph(120, 0.05, seed=21))
+    src, dst, _w, _n = oracle_graph_slots(g)
+    assert disconnected_communities(src, dst, got) == []

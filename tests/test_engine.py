@@ -148,3 +148,75 @@ def test_affected_frontier_auto_threshold_boundary():
     fa = affected_frontier(over, membership, n_valid, "auto")
     fc = affected_frontier(over, membership, n_valid, "community")
     np.testing.assert_array_equal(np.asarray(fa), np.asarray(fc))
+
+
+# -- refinement warm-start sanitation (ConstrainedScanner) --------------------
+
+
+def test_sanitize_outer_maps_stale_labels_to_singletons():
+    """A stale out-of-range outer label (e.g. a previous pass's coarse id
+    surviving a layout change) must NOT leak into the constrained sweep:
+    sanitize_outer re-seeds that slot as its own singleton and forces
+    invalid slots to the sentinel."""
+    from repro.core.engine import sanitize_outer
+
+    outer = jnp.asarray([2, 2, 99, -1, 7, 0], jnp.int32)   # n_valid = 4
+    out = np.asarray(sanitize_outer(outer, jnp.int32(4), 5))
+    # valid+in-range keep their label; stale (99, -1) become singletons;
+    # slots >= n_valid (incl. the 0 at index 5) become the sentinel.
+    np.testing.assert_array_equal(out, [2, 2, 2, 3, 5, 5])
+
+
+def test_assert_outer_sane_raises_eagerly_on_stale_label():
+    from repro.core.engine import assert_outer_sane
+
+    good = jnp.asarray([0, 0, 1, 5, 5, 5], jnp.int32)
+    assert_outer_sane(good, jnp.int32(3), 5)     # no raise
+    bad = jnp.asarray([0, 42, 1, 5, 5, 5], jnp.int32)
+    with pytest.raises(ValueError, match="outer"):
+        assert_outer_sane(bad, jnp.int32(3), 5)
+
+
+def test_refine_phase_sanitizes_stale_outer_end_to_end():
+    """_refine_phase with a stale outer id: the polluted slot refines as a
+    singleton instead of constraining against a phantom community, and the
+    result still refines the SANITIZED outer partition."""
+    import networkx as nx
+    from repro.core.graph import from_networkx
+    from repro.core.louvain import _refine_phase, louvain
+
+    g = from_networkx(nx.karate_club_graph())
+    n = int(g.n_valid)
+    outer = louvain(g).membership
+    # Pollute a vertex whose own id is NOT in use as a community label, so
+    # its sanitized singleton {v} cannot collide with a real community.
+    v = next(i for i in range(n) if i not in np.unique(outer))
+    stale = np.concatenate([outer, np.full(g.n_cap + 1 - n, g.n_cap)])
+    stale[v] = g.n_cap + 7           # out-of-range: stale coarse id
+    refined, iters, _ = _refine_phase(
+        g, jnp.asarray(stale, jnp.int32), jnp.float32(0.01),
+        max_iterations=20, use_pruning=True)
+    refined = np.asarray(refined)[:n]
+    # v's sanitized outer community is the singleton {v}: the constrained
+    # sweep cannot merge it anywhere.
+    assert np.sum(refined == refined[v]) == 1
+    # everyone else still refines the real outer partition.
+    rest = np.arange(n) != v
+    for r in np.unique(refined[rest]):
+        members = (refined == r) & rest
+        assert len(np.unique(outer[members])) == 1
+
+
+def test_mask_cross_outer_slots_masks_dst_and_weight():
+    """Cross-outer slots must lose BOTH endpoints-as-candidates and weight:
+    dst -> sentinel kills the candidate group in every backend's validity
+    check (weight-zero alone would leave a positive degree-term dQ)."""
+    from repro.core.engine import mask_cross_outer_slots
+
+    outer = jnp.asarray([0, 0, 1, 1, 4], jnp.int32)   # sentinel slot = 4
+    src = jnp.asarray([0, 1, 2], jnp.int32)
+    dst = jnp.asarray([1, 2, 3], jnp.int32)
+    w = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    dst2, w2 = mask_cross_outer_slots(src, dst, w, outer, 4)
+    np.testing.assert_array_equal(np.asarray(dst2), [1, 4, 3])
+    np.testing.assert_array_equal(np.asarray(w2), [1.0, 0.0, 3.0])

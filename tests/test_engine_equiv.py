@@ -47,7 +47,8 @@ def corpora():
 _slow = pytest.mark.slow
 
 
-@pytest.mark.parametrize("name", ["lesmis", "sbm", "ring_of_cliques"])
+@pytest.mark.parametrize("name", ["lesmis", "sbm", "ring_of_cliques",
+                                  "gnp"])
 def test_single_device_bit_for_bit(gold, corpora, name):
     mem = louvain(corpora[name]).membership
     assert np.array_equal(mem, gold[f"single__{name}"])
@@ -250,6 +251,101 @@ def test_sharded_dynamic_stream_delta_bit_for_bit(gold):
                           gold["sharded_dynamic__sbm_stream"])
     assert res.comm_backend == "delta" and res.comm_rounds > 0
     assert res.bytes_on_wire > 0
+
+
+# -- the refinement matrix: refine="leiden" runs the constrained sweep
+# between local-moving and aggregation on EVERY backend through the one
+# ConstrainedScanner wrapper — each path is pinned to its own committed
+# refined goldens bit-for-bit (captured on this tree; the unrefined keys
+# above are untouched).  The "gnp" corpus is the badly-connected one:
+# plain Louvain leaves a disconnected community there (audited in
+# tests/test_louvain.py), so the refined keys genuinely differ.
+
+
+@pytest.mark.parametrize("name", [
+    "gnp", "sbm", pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_single_leiden_bit_for_bit(gold, corpora, name):
+    mem = louvain(corpora[name],
+                  LouvainConfig(refine="leiden")).membership
+    assert np.array_equal(mem, gold[f"single_leiden__{name}"])
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("gnp", marks=_slow),
+    pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_ell_leiden_bit_for_bit(gold, corpora, name):
+    mem = louvain(corpora[name],
+                  LouvainConfig(use_ell_kernel=True,
+                                refine="leiden")).membership
+    assert np.array_equal(mem, gold[f"ell_leiden__{name}"])
+
+
+@_slow
+@pytest.mark.parametrize("backend", ["ell", "ell_fused"])
+def test_ell_scan_vs_fused_leiden_bit_for_bit(gold, corpora, backend):
+    """Scan-only and fused ELL rounds agree under the refinement constraint
+    (the on-device block masking composes with both kernels).  Slow-only:
+    tier-1 already pins scan-vs-fused refine parity through the Pallas
+    interpreter in tests/test_fused_ell_kernel.py."""
+    mem = louvain(corpora["sbm"],
+                  LouvainConfig(scan_backend=backend,
+                                refine="leiden")).membership
+    assert np.array_equal(mem, gold["ell_leiden__sbm"])
+
+
+@pytest.mark.parametrize("name", [
+    "sbm", pytest.param("gnp", marks=_slow),
+    pytest.param("lesmis", marks=_slow),
+    pytest.param("ring_of_cliques", marks=_slow)])
+def test_sharded_leiden_bit_for_bit(gold, corpora, name):
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora[name], mesh, ("shard",),
+                                    refine="leiden")
+    assert np.array_equal(mem, gold[f"sharded_leiden__{name}"])
+
+
+@pytest.mark.parametrize("kw", [
+    dict(comm_backend="delta"),
+    pytest.param(dict(use_ladder=False), marks=_slow),
+    pytest.param(dict(comm_backend="delta", use_ladder=False), marks=_slow)])
+def test_sharded_leiden_comm_ladder_matrix_bit_for_bit(gold, corpora, kw):
+    """Refinement composes with the delta exchange and the capacity ladder
+    — the constrained sweep rides the same scanner protocol."""
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                    refine="leiden", **kw)
+    assert np.array_equal(mem, gold["sharded_leiden__sbm"])
+
+
+def test_dynamic_stream_leiden_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    mem = louvain_dynamic(init, batches,
+                          config=LouvainConfig(refine="leiden")).membership
+    assert np.array_equal(mem, gold["dynamic_leiden__sbm_stream"])
+
+
+def test_sharded_dynamic_stream_leiden_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    mem = louvain_dynamic_sharded(
+        init, mesh, ("shard",), batches,
+        config=LouvainConfig(refine="leiden")).membership
+    assert np.array_equal(mem, gold["sharded_dynamic_leiden__sbm_stream"])
+
+
+def test_batched_leiden_bit_for_bit(gold, corpora):
+    """The vmapped fleet pass loop under refinement lands on the
+    single-device refined golden (one stream, identical semantics)."""
+    from repro.core.multistream import louvain_batched, stack_graphs
+
+    g = corpora["gnp"]
+    res = louvain_batched(stack_graphs([g]),
+                          LouvainConfig(refine="leiden"))
+    n = int(np.asarray(g.n_valid))
+    assert np.array_equal(np.asarray(res.membership[0, :n]),
+                          gold["single_leiden__gnp"])
 
 
 def test_batched_stream_compact_bit_for_bit(gold):

@@ -169,3 +169,30 @@ def test_fused_move_phase_warm_start_bit_for_bit():
                                          frontier0=fr, fused=True)
     np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
     assert (int(i0), float(d0)) == (int(i1), float(d1))
+
+
+def test_fused_refine_constrained_sweep_bit_for_bit():
+    """Refinement (constrained singleton sweep) through the ELL kernels in
+    interpret mode: the cross-outer slot masking + ConstrainedScanner wrap
+    must leave scan-only and fused Pallas paths bit-identical, and both must
+    genuinely refine the outer partition (no community crosses an outer
+    boundary, movers only merged as singletons)."""
+    from repro.core.louvain import louvain
+
+    g, _ = sbm_graph(n_communities=4, size=24, p_in=0.5, p_out=0.02, seed=7)
+    n = int(g.n_valid)
+    outer_mem = louvain(g).membership
+    outer = jnp.asarray(np.concatenate(
+        [outer_mem, np.full(g.n_cap + 1 - n, g.n_cap)]).astype(np.int32))
+    out = {}
+    for fused in (False, True):
+        out[fused] = ell_move.move_phase_ell(
+            g, jnp.float32(0.01), fused=fused, interpret=True,
+            refine_outer=outer)
+    c0, i0, d0 = out[False]
+    c1, i1, d1 = out[True]
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    assert (int(i0), float(d0)) == (int(i1), float(d1))
+    refined = np.asarray(c0)[:n]
+    for r in np.unique(refined):
+        assert len(np.unique(np.asarray(outer_mem)[refined == r])) == 1

@@ -165,3 +165,143 @@ def test_isolated_vertices_stay_put():
     res = louvain(g)
     assert len(res.membership) == 5
     assert np.isfinite(louvain_modularity(g, res))
+
+
+# -- Leiden-style refinement --------------------------------------------------
+
+from _oracle import (disconnected_communities, modularity_np,  # noqa: E402
+                     oracle_graph_slots, refine_oracle)
+
+
+def _badly_connected_graph():
+    """The committed pathology corpus: plain parallel Louvain leaves a
+    disconnected community here (see tests/golden/capture_engine_golden)."""
+    return from_networkx(nx.gnp_random_graph(120, 0.05, seed=21))
+
+
+def test_unrefined_louvain_leaves_disconnected_community():
+    """The regression the refinement phase exists for: with refine="none"
+    the audit finds at least one community whose induced subgraph is NOT
+    connected on the pathology corpus."""
+    g = _badly_connected_graph()
+    src, dst, w, _ = oracle_graph_slots(g)
+    mem = louvain(g).membership
+    assert len(disconnected_communities(src, dst, mem)) >= 1
+
+
+def test_leiden_communities_all_connected():
+    """refine="leiden" yields ZERO disconnected communities on every golden
+    corpus (including the pathology one).  Tier-1 runs the sort-reduce
+    family everywhere plus the ELL kernel on the pathology corpus; the full
+    ELL-family matrix is the slow test below."""
+    from golden.capture_engine_golden import corpora
+
+    for name, g in corpora().items():
+        src, dst, w, _ = oracle_graph_slots(g)
+        mem = louvain(g, LouvainConfig(refine="leiden")).membership
+        assert disconnected_communities(src, dst, mem) == [], name
+    g = _badly_connected_graph()
+    src, dst, w, _ = oracle_graph_slots(g)
+    mem = louvain(g, LouvainConfig(refine="leiden",
+                                   use_ell_kernel=True)).membership
+    assert disconnected_communities(src, dst, mem) == []
+
+
+@pytest.mark.slow
+def test_leiden_communities_all_connected_ell_full():
+    """Full-matrix ELL-kernel variant of the connectivity audit."""
+    from golden.capture_engine_golden import corpora
+
+    cfg = LouvainConfig(refine="leiden", use_ell_kernel=True)
+    for name, g in corpora().items():
+        src, dst, w, _ = oracle_graph_slots(g)
+        mem = louvain(g, cfg).membership
+        assert disconnected_communities(src, dst, mem) == [], name
+
+
+def test_leiden_modularity_not_worse():
+    """The reported (outer) partition under refinement never loses Q vs the
+    unrefined run on the golden corpora."""
+    from golden.capture_engine_golden import corpora
+
+    for name, g in corpora().items():
+        src, dst, w, _ = oracle_graph_slots(g)
+        q_none = modularity_np(src, dst, w, louvain(g).membership)
+        q_ref = modularity_np(
+            src, dst, w, louvain(g, LouvainConfig(refine="leiden")).membership)
+        assert q_ref >= q_none - 1e-9, (name, q_none, q_ref)
+
+
+def test_refine_rejects_unknown_mode():
+    g = from_networkx(nx.karate_club_graph())
+    with pytest.raises(ValueError, match="refine"):
+        louvain(g, LouvainConfig(refine="bogus"))
+
+
+def test_refine_oracle_properties():
+    """The NumPy reference refinement: refines the outer partition and
+    every refined community is connected."""
+    g = _badly_connected_graph()
+    src, dst, w, n = oracle_graph_slots(g)
+    outer = louvain(g).membership
+    refined = refine_oracle(src, dst, w, n, outer)
+    # Refinement: each refined community lies inside ONE outer community.
+    for r in np.unique(refined):
+        assert len(np.unique(outer[refined == r])) == 1
+    assert disconnected_communities(src, dst, refined) == []
+    # It genuinely splits the disconnected community (strict refinement).
+    assert len(np.unique(refined)) > len(np.unique(outer))
+
+
+def test_refine_pass_stats_populated():
+    g = _badly_connected_graph()
+    res = louvain(g, LouvainConfig(refine="leiden"))
+    assert all(p.refine_iterations is not None for p in res.passes)
+    assert all(p.n_refined is not None and p.n_refined >= p.n_communities
+               for p in res.passes)
+    assert all("refine" in p.phase_seconds for p in res.passes)
+    res_none = louvain(g)
+    assert all(p.refine_iterations is None and p.n_refined is None
+               for p in res_none.passes)
+
+
+# -- per-level memberships (LouvainResult.levels) -----------------------------
+
+
+def _is_coarsening(fine, coarse):
+    """coarse is a coarsening of fine: fine-equal pairs stay coarse-equal
+    (checked via a single-valued fine -> coarse label map)."""
+    m = {}
+    for f, c in zip(fine.tolist(), coarse.tolist()):
+        if m.setdefault(f, c) != c:
+            return False
+    return True
+
+
+def test_levels_nest_and_fold_in_order():
+    """refine="none": each level coarsens the previous (the dendrogram fold
+    order), the last level IS the membership, and every level's labeling
+    matches the recorded per-pass community count."""
+    g = from_networkx(nx.les_miserables_graph())
+    res = louvain(g)
+    assert len(res.levels) == res.n_passes
+    np.testing.assert_array_equal(res.levels[-1], res.membership)
+    for a, b in zip(res.levels, res.levels[1:]):
+        assert _is_coarsening(a, b)
+    for lvl, p in zip(res.levels, res.passes):
+        assert len(np.unique(lvl)) == p.n_communities
+
+
+def test_levels_leiden_reports_outer_per_pass():
+    """refine="leiden": levels are the OUTER partitions (reported per pass);
+    the last one is the membership and per-pass counts line up.  Outer
+    levels need not nest — but Q must not decrease across them."""
+    g = _badly_connected_graph()
+    src, dst, w, _ = oracle_graph_slots(g)
+    res = louvain(g, LouvainConfig(refine="leiden"))
+    assert len(res.levels) == res.n_passes
+    np.testing.assert_array_equal(res.levels[-1], res.membership)
+    for lvl, p in zip(res.levels, res.passes):
+        assert len(np.unique(lvl)) == p.n_communities
+    qs = [modularity_np(src, dst, w, lvl) for lvl in res.levels]
+    assert all(b >= a - 1e-9 for a, b in zip(qs, qs[1:])), qs

@@ -1,4 +1,5 @@
-"""Eq. 1 / Eq. 2 against networkx and against each other (property)."""
+"""Eq. 1 / Eq. 2 against networkx and against each other (property);
+zero-edge graphs (m == 0) must yield Q = 0 / dQ = 0, never NaN."""
 
 import jax.numpy as jnp
 import networkx as nx
@@ -134,3 +135,69 @@ def test_best_moves_agree_with_bruteforce():
             if best is None or dq > best[1] + 1e-9:
                 best = (c, dq)
         assert np.isclose(bdq[i], best[1], atol=1e-5), i
+
+
+# -- zero-edge graphs: Q and dQ are 0, never NaN ------------------------------
+
+
+def test_modularity_zero_edge_graph_is_zero_not_nan():
+    """m == 0 (vertices, no edges): Eq. 1's 1/(2m) terms must not produce
+    NaN — the guarded form returns exactly 0."""
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(4))
+    g = from_networkx(nxg)
+    q = float(modularity(g, _comm_array(g, [0, 1, 2, 3])))
+    assert q == 0.0 and np.isfinite(q)
+
+
+def test_modularity_single_vertex_graph():
+    nxg = nx.Graph()
+    nxg.add_node(0)
+    g = from_networkx(nxg)
+    assert float(modularity(g, _comm_array(g, [0]))) == 0.0
+
+
+def test_delta_modularity_zero_m_is_zero_not_nan():
+    dq = float(delta_modularity(jnp.float32(0.0), jnp.float32(0.0),
+                                jnp.float32(0.0), jnp.float32(0.0),
+                                jnp.float32(0.0), jnp.float32(0.0)))
+    assert dq == 0.0 and np.isfinite(dq)
+
+
+def test_louvain_zero_edge_graph_no_nan():
+    """End to end: Louvain (refined and not) on an edgeless graph stays
+    finite and keeps every vertex a singleton."""
+    from repro.core.louvain import LouvainConfig, louvain, louvain_modularity
+
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(5))
+    g = from_networkx(nxg)
+    for cfg in (LouvainConfig(), LouvainConfig(refine="leiden")):
+        res = louvain(g, cfg)
+        assert np.isfinite(louvain_modularity(g, res))
+        assert res.n_communities == 5
+
+
+def test_deletion_only_stream_drains_to_zero_edges_no_nan():
+    """A deletion-only stream that removes EVERY edge: the final update
+    runs Louvain at m == 0 — Q must come back 0, not NaN (the original
+    zero-edge bug), on both the plain and refined configs."""
+    from repro.core.delta import make_edge_batch
+    from repro.core.dynamic import louvain_dynamic
+    from repro.core.graph import from_networkx as _fnx
+    from repro.core.louvain import LouvainConfig
+
+    nxg = nx.karate_club_graph()
+    g = _fnx(nxg)
+    edges = np.asarray(sorted(nxg.edges()))
+    batches = [make_edge_batch(edges[i::4, 0], edges[i::4, 1],
+                               np.zeros(len(edges[i::4])), g.n_cap,
+                               b_cap=32)
+               for i in range(4)]
+    for cfg in (LouvainConfig(), LouvainConfig(refine="leiden")):
+        res = louvain_dynamic(g, batches, config=cfg,
+                              track_modularity=True)
+        assert int(res.graph.e_valid) == 0
+        qs = [s.modularity for s in res.batch_stats]
+        assert all(np.isfinite(q) for q in qs), qs
+        assert qs[-1] == 0.0
