@@ -11,6 +11,15 @@ report edge updates/sec, speedup over cold recompute, mean delta-screened
 frontier fraction, the modularity gap on the final graph, and the measured
 bytes-on-wire per engine round per backend.
 
+Every row also carries the skew-aware re-shard counters (``reshard_passes``,
+``reshard_bytes``, ``max_shard_load_frac_before`` / ``_after`` — None when no
+pass re-sharded) and the worst coarse-pass edge tier ``coarse_e_per_max``.
+A second section streams a skew-OWNED corpus (hot interconnected cliques on
+a sparse ring, so aggregation concentrates the coarse edges onto shard 0's
+uniform owner range) head-to-head under ``reshard="none"`` vs ``"auto"``:
+the auto row must run its coarse passes at a strictly lower capacity tier,
+which is the win the one-time priced ``reshard_bytes`` shuffle buys.
+
 Executed as a script it forces 8 host devices (it must own the process
 before JAX initializes, which is why ``benchmarks.run`` launches it as a
 subprocess); inside an existing JAX process it degrades to however many
@@ -71,6 +80,50 @@ def _holdout_stream(small: bool, seed: int = 0):
     return init, (us[hold], ud[hold], uw[hold]), e
 
 
+def _skewed_stream(n_cliques: int = 64, hot: int = 8, csize: int = 5,
+                   holdout: int = 8):
+    """Skew-owned corpus: cliques coarsen to a contiguous id prefix whose
+    first ``hot`` members are all-pairs interconnected — the uniform owner
+    split overloads shard 0 after aggregation.  The ring's first ``holdout``
+    edges form the insert stream."""
+    edges = []
+
+    def vid(c, i):
+        return c * csize + i
+
+    for c in range(n_cliques):
+        for i in range(csize):
+            for j in range(i + 1, csize):
+                edges.append((vid(c, i), vid(c, j), 1.0))
+    for a in range(hot):
+        for b in range(a + 1, hot):
+            edges.append((vid(a, a % csize), vid(b, b % csize), 0.25))
+    ring = [(vid(c, 0), vid((c + 1) % n_cliques, 1), 0.25)
+            for c in range(n_cliques)]
+    held, kept = ring[:holdout], ring[holdout:]
+    n = n_cliques * csize
+
+    def arr(es):
+        return (np.array([e[0] for e in es]), np.array([e[1] for e in es]),
+                np.array([e[2] for e in es], np.float32))
+
+    s, d, w = arr(edges + kept)
+    init = build_csr(s, d, w, n, symmetrize=True,
+                     e_cap=2 * (len(edges) + len(ring)) + 64)
+    hs, hd, hw = arr(held)
+    return init, (hs.astype(np.int32), hd.astype(np.int32), hw)
+
+
+def _reshard_cols(dyn) -> dict:
+    return {
+        "reshard_passes": int(dyn.reshard_passes),
+        "reshard_bytes": int(dyn.reshard_bytes),
+        "max_shard_load_frac_before": dyn.max_shard_load_frac_before,
+        "max_shard_load_frac_after": dyn.max_shard_load_frac_after,
+        "coarse_e_per_max": int(dyn.coarse_e_per_max),
+    }
+
+
 def run(small: bool = True, repeats: int = 3,
         batch_sizes=(4, 16)) -> None:
     mesh, axes = _mesh_axes()
@@ -112,6 +165,7 @@ def run(small: bool = True, repeats: int = 3,
             q_dyn = membership_modularity(g_end, dyn.membership)
             fr = [s.frontier_fraction for s in dyn.batch_stats]
             rows.append({
+                "graph": "sbm_holdout", "reshard": "none",
                 "batch_size": bs, "n_batches": n_batches,
                 "comm_backend": dyn.comm_backend,
                 "updates_per_s_dynamic": round(used / t_dyn, 1),
@@ -124,12 +178,52 @@ def run(small: bool = True, repeats: int = 3,
                 "frontier_frac_mean": round(float(np.mean(fr)), 4),
                 "q_dynamic": round(q_dyn, 4),
                 "q_recompute": round(q_cold, 4),
+                **_reshard_cols(dyn),
             })
-    emit_csv(rows, ["batch_size", "n_batches", "comm_backend",
-                    "updates_per_s_dynamic", "updates_per_s_recompute",
-                    "speedup", "bytes_per_round", "bytes_on_wire",
-                    "comm_rounds", "comm_fallback_rounds",
-                    "frontier_frac_mean", "q_dynamic", "q_recompute"])
+
+    # Skew-owned head-to-head: same stream, reshard off vs on (the auto
+    # row also exercises the pipelined convergence fetch).  No cold
+    # baseline — the contrast under test is the coarse capacity tier.
+    sk_init, (ss, sd, sw) = _skewed_stream()
+    sbs = 4
+    sk_batches = [make_edge_batch(ss[i:i + sbs], sd[i:i + sbs],
+                                  sw[i:i + sbs], sk_init.n_cap, b_cap=sbs)
+                  for i in range(0, len(ss), sbs)]
+    sk_end = sk_init
+    for b in sk_batches:
+        sk_end, _ = apply_edge_batch(sk_end, b)
+    for mode in ("none", "auto"):
+        cfg = LouvainConfig(comm_backend="delta", reshard=mode,
+                            pipeline_fetch=(mode == "auto"))
+        t_dyn, dyn = time_fn(louvain_dynamic_sharded, sk_init, mesh, axes,
+                             sk_batches, config=cfg, repeats=repeats)
+        rows.append({
+            "graph": "skewed_clique", "reshard": mode,
+            "batch_size": sbs, "n_batches": len(sk_batches),
+            "comm_backend": dyn.comm_backend,
+            "updates_per_s_dynamic": round(len(ss) / t_dyn, 1),
+            "bytes_per_round": round(dyn.bytes_per_round, 1),
+            "bytes_on_wire": int(dyn.bytes_on_wire),
+            "comm_rounds": int(dyn.comm_rounds),
+            "comm_fallback_rounds": int(dyn.comm_fallback_rounds),
+            "q_dynamic": round(membership_modularity(
+                sk_end, dyn.membership), 4),
+            **_reshard_cols(dyn),
+        })
+    e_none = next(r["coarse_e_per_max"] for r in rows
+                  if r["graph"] == "skewed_clique" and r["reshard"] == "none")
+    e_auto = next(r["coarse_e_per_max"] for r in rows
+                  if r["graph"] == "skewed_clique" and r["reshard"] == "auto")
+    print(f"skewed_clique coarse tier: none={e_none} auto={e_auto} "
+          f"({'LOWER' if e_auto < e_none else 'not lower'})")
+    emit_csv(rows, ["graph", "reshard", "batch_size", "n_batches",
+                    "comm_backend", "updates_per_s_dynamic",
+                    "updates_per_s_recompute", "speedup", "bytes_per_round",
+                    "bytes_on_wire", "comm_rounds", "comm_fallback_rounds",
+                    "frontier_frac_mean", "q_dynamic", "q_recompute",
+                    "reshard_passes", "reshard_bytes",
+                    "max_shard_load_frac_before", "max_shard_load_frac_after",
+                    "coarse_e_per_max"])
     return rows
 
 

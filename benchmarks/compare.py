@@ -1,0 +1,170 @@
+"""Perf-regression gate over the committed ``BENCH_*.json`` artifacts.
+
+    PYTHONPATH=src python -m benchmarks.compare --baseline . --fresh out/
+
+Loads each ``BENCH_<name>.json`` present in BOTH directories, matches rows
+by their identity fields (graph / backend / batch shape — everything that
+names a configuration rather than measures it), and fails when a fresh
+throughput metric regresses beyond the threshold:
+
+  * ``updates_per_s_*``  — higher is better; fail when fresh drops more
+    than ``threshold`` (default 25%) below the baseline.
+  * ``bytes_per_round``  — lower is better; fail when fresh grows more
+    than ``threshold`` above the baseline.
+
+Rows or files present on only one side are reported but never fail the
+gate (PRs add new benchmarks; deletions show up in review).  Exit status:
+0 = no regressions, 1 = at least one regression, 2 = usage error.  CI runs
+this non-blocking on pull requests (timing noise on shared runners) and
+blocking on pushes to main.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# Fields that NAME a row (a configuration) rather than measure it; the
+# match key is the subset present in the row, in this order.
+IDENTITY_FIELDS = (
+    "graph", "kind", "metric", "artifact", "config", "comm_backend",
+    "agg_backend", "ladder", "reshard", "batch_size", "n_batches",
+    "n_streams", "n_steps", "pass", "work_cap",
+)
+
+# (prefix-match?, field, higher_is_better)
+HIGHER_BETTER_PREFIX = "updates_per_s_"
+LOWER_BETTER_FIELDS = ("bytes_per_round",)
+
+
+def row_key(row: dict) -> Tuple:
+    return tuple((f, row[f]) for f in IDENTITY_FIELDS if f in row)
+
+
+def tracked_metrics(row: dict) -> List[Tuple[str, bool]]:
+    """(field, higher_is_better) for every gated metric in the row."""
+    out = [(k, True) for k in row if k.startswith(HIGHER_BETTER_PREFIX)]
+    out += [(k, False) for k in LOWER_BETTER_FIELDS if k in row]
+    return sorted(out)
+
+
+def _num(v) -> Optional[float]:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None
+    return float(v)
+
+
+def compare_rows(base_rows: List[dict], fresh_rows: List[dict],
+                 threshold: float, bench: str) -> List[dict]:
+    """Regressions between two row lists of the same benchmark.
+
+    Rows pair up by identity key; duplicate keys pair positionally within
+    the key group (e.g. repeated passes of one configuration).
+    """
+    def grouped(rows):
+        g: Dict[Tuple, List[dict]] = {}
+        for r in rows:
+            g.setdefault(row_key(r), []).append(r)
+        return g
+
+    base_g, fresh_g = grouped(base_rows), grouped(fresh_rows)
+    regressions = []
+    for key, brows in base_g.items():
+        for b, f in zip(brows, fresh_g.get(key, [])):
+            for field, higher in tracked_metrics(b):
+                bv, fv = _num(b.get(field)), _num(f.get(field))
+                if bv is None or fv is None or bv <= 0:
+                    continue
+                ratio = fv / bv
+                bad = ratio < 1 - threshold if higher else ratio > 1 + threshold
+                if bad:
+                    regressions.append({
+                        "bench": bench, "field": field,
+                        "key": dict(key), "baseline": bv, "fresh": fv,
+                        "ratio": ratio, "higher_is_better": higher,
+                    })
+    return regressions
+
+
+def load_bench(path: str) -> Optional[List[dict]]:
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return None
+    rows = doc.get("rows")
+    return rows if isinstance(rows, list) else None
+
+
+def compare_dirs(baseline: str, fresh: str, threshold: float,
+                 names: Optional[List[str]] = None):
+    """(regressions, compared_names, skipped_notes) across two artifact dirs."""
+    def found(d):
+        return {os.path.basename(p)[len("BENCH_"):-len(".json")]: p
+                for p in sorted(glob.glob(os.path.join(d, "BENCH_*.json")))}
+
+    base_f, fresh_f = found(baseline), found(fresh)
+    if names:
+        base_f = {k: v for k, v in base_f.items() if k in names}
+        fresh_f = {k: v for k, v in fresh_f.items() if k in names}
+    regressions, compared, notes = [], [], []
+    for name in sorted(set(base_f) | set(fresh_f)):
+        if name not in base_f:
+            notes.append(f"{name}: only in fresh (new benchmark, not gated)")
+            continue
+        if name not in fresh_f:
+            notes.append(f"{name}: only in baseline (fresh run skipped it)")
+            continue
+        b, f = load_bench(base_f[name]), load_bench(fresh_f[name])
+        if b is None or f is None:
+            notes.append(f"{name}: unreadable artifact, skipped")
+            continue
+        compared.append(name)
+        regressions += compare_rows(b, f, threshold, name)
+    return regressions, compared, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the freshly produced BENCH_*.json")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated benchmark names to gate "
+                         "(default: every artifact present in both dirs)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative slack before a metric counts as a "
+                         "regression (default 0.25 = 25%%)")
+    args = ap.parse_args()
+    if not (0 < args.threshold < 10):
+        print(f"error: --threshold {args.threshold} out of range (0, 10)",
+              file=sys.stderr)
+        sys.exit(2)
+    names = ([s.strip() for s in args.names.split(",") if s.strip()]
+             if args.names else None)
+    regressions, compared, notes = compare_dirs(
+        args.baseline, args.fresh, args.threshold, names)
+    for note in notes:
+        print(f"note: {note}")
+    print(f"compared {len(compared)} benchmark(s): "
+          f"{', '.join(compared) or '(none)'}")
+    if not regressions:
+        print(f"no regressions beyond {args.threshold:.0%}")
+        return
+    print(f"\n{len(regressions)} regression(s) beyond {args.threshold:.0%}:")
+    for r in regressions:
+        arrow = "fell" if r["higher_is_better"] else "grew"
+        key = ", ".join(f"{k}={v}" for k, v in r["key"].items()) or "(row)"
+        print(f"  {r['bench']}[{key}] {r['field']}: "
+              f"{r['baseline']:g} -> {r['fresh']:g} "
+              f"({arrow} to {r['ratio']:.2f}x baseline)")
+    sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

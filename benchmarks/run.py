@@ -32,18 +32,49 @@ import subprocess
 import sys
 import time
 
+# Every section the driver knows, in run order; ``--only`` names must come
+# from this list (a typo'd section silently running NOTHING is how perf
+# gates rot, so unknown names are a hard error).
+SECTIONS = ("fig3", "fig5", "fig6", "fig7", "fig8", "dynamic", "multistream",
+            "refine", "distdyn", "roofline")
+
+
+def parse_only(spec: str | None) -> set[str] | None:
+    """Validate a ``--only`` spec against ``SECTIONS``.
+
+    Returns the requested subset (None = everything).  Raises ValueError
+    naming the unknown entries and the valid set, so the CLI can exit
+    non-zero instead of skipping every section.
+    """
+    if spec is None:
+        return None
+    names = {s.strip() for s in spec.split(",") if s.strip()}
+    unknown = sorted(names - set(SECTIONS))
+    if unknown:
+        raise ValueError(
+            f"unknown section(s) {', '.join(unknown)}; "
+            f"valid sections: {', '.join(SECTIONS)}")
+    if not names:
+        raise ValueError(
+            f"--only got no section names; valid sections: "
+            f"{', '.join(SECTIONS)}")
+    return names
+
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graphs + 3 repeats (slow)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig3,fig5,fig6,fig7,fig8,"
-                         "dynamic,multistream,refine,distdyn,roofline")
+                    help="comma-separated subset: " + ",".join(SECTIONS))
     args = ap.parse_args()
     small = not args.full
     repeats = 3 if args.full else 2
-    only = set(args.only.split(",")) if args.only else None
+    try:
+        only = parse_only(args.only)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        sys.exit(2)
 
     def want(name: str) -> bool:
         return only is None or name in only

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -192,6 +192,140 @@ def resolve_coarse_capacity(n_comms: int, e_valid: int,
     n_new = n_tier if n_tier * LADDER_HYSTERESIS <= n_cap else n_cap
     e_new = e_tier if e_tier * LADDER_HYSTERESIS <= e_cap else e_cap
     return n_new, e_new
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware coarse re-sharding (the ``LouvainConfig.reshard`` knob).
+#
+# The sharded pass loop keeps the SEED 1-D owner ranges after every
+# aggregation, so community-ownership skew on the coarse graph lands on one
+# hot shard and is absorbed by capacity doubling (AggregationOverflow
+# retries) instead of being balanced away.  ``plan_reshard`` measures the
+# skew host-side (the coarse graph is already on the host for the ladder
+# re-bucket) and, when it exceeds ``RESHARD_IMBALANCE_THRESHOLD``, assigns
+# contiguous owner ranges by a greedy prefix-sum split that equalizes edge
+# slots per shard.  Ranges stay uniform-width on the device: a monotone
+# relabel places range ``s`` at block ``[s * v_per, s * v_per + width_s)``,
+# so every shard_map body keeps its ``owner = id // v_per`` arithmetic and
+# only the id -> block mapping changes.  The ids between ``width_s`` and
+# ``v_per`` are GAPS — invalid vertices carrying the sentinel community —
+# which is why the pass loop threads a live-vertex mask instead of a dense
+# ``idx < n_live`` prefix after a re-shard.
+# ---------------------------------------------------------------------------
+
+#: Accepted values of ``LouvainConfig.reshard``.
+RESHARD_MODES = ("none", "auto")
+
+#: A coarse pass re-shards only when the worst shard's edge-slot load
+#: exceeds this multiple of the mean (max/mean ratio) under the uniform
+#: layout — balanced graphs skip the shuffle entirely.
+RESHARD_IMBALANCE_THRESHOLD = 1.5
+
+#: Per-shard block-width cap as a multiple of the fair share
+#: ceil(n_live / n_shards).  Bounds the replicated-state blowup of the
+#: relabelled layout: n_pad_new <= slack * pow2(n_live) instead of one hot
+#: range stretching toward n_live.
+RESHARD_WIDTH_SLACK = 4
+
+
+def resolve_reshard(mode: str) -> str:
+    """Validate the ``reshard`` knob (``"none"`` | ``"auto"``)."""
+    if mode not in RESHARD_MODES:
+        raise ValueError(f"reshard must be one of {RESHARD_MODES}; "
+                         f"got {mode!r}")
+    return mode
+
+
+class ReshardPlan(NamedTuple):
+    """A balanced contiguous owner split of a coarse graph.
+
+    ``bounds`` is ``(n_shards + 1,)``: shard ``s`` owns the dense coarse
+    ids ``[bounds[s], bounds[s + 1])``, relabelled onto the uniform block
+    ``[s * v_per_shard, ...)``.  ``e_per_shard`` is the power-of-two edge
+    tier sized to the worst post-split shard load (with ``LADDER_SLACK``),
+    and the ``load_frac_*`` pair records the worst shard's share of all
+    edge slots before/after — the ``max_shard_load_frac`` bench columns.
+    """
+
+    bounds: np.ndarray
+    v_per_shard: int
+    e_per_shard: int
+    load_frac_before: float
+    load_frac_after: float
+
+
+def owner_load_frac(counts: np.ndarray, v_per: int, n_shards: int) -> float:
+    """Worst shard's share of total edge slots under uniform-width ranges.
+
+    ``counts`` holds per-vertex owned edge slots for ids ``[0, n_live)``;
+    ownership is ``id // v_per`` (clamped to the last shard).  Returns a
+    fraction in ``[1 / n_shards, 1]``; a total of zero reports the
+    balanced floor.
+    """
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    n_shards = max(int(n_shards), 1)
+    if total <= 0 or counts.shape[0] == 0:
+        return 1.0 / n_shards
+    owner = np.minimum(np.arange(counts.shape[0]) // max(int(v_per), 1),
+                       n_shards - 1)
+    loads = np.bincount(owner, weights=counts, minlength=n_shards)
+    return float(loads.max() / total)
+
+
+def plan_reshard(counts: np.ndarray, n_shards: int, v_per_uniform: int, *,
+                 threshold: float | None = None,
+                 width_slack: int | None = None) -> Optional[ReshardPlan]:
+    """Plan a skew-aware owner split, or ``None`` when not worth it.
+
+    ``counts`` are per-coarse-vertex edge slots (dense ids, host-side);
+    ``v_per_uniform`` is the per-shard width the uniform (non-resharded)
+    layout would use for the next pass — the baseline being priced against.
+    Returns ``None`` when the mesh is trivial, the measured imbalance
+    (max/mean) is at most ``threshold``, or the greedy split cannot beat
+    the uniform layout's worst load (e.g. one super-vertex dominates).
+
+    The split is a greedy prefix-sum walk: boundary ``s`` lands where the
+    cumulative load first reaches ``s / n_shards`` of the total, clamped so
+    no block exceeds ``width_slack`` fair shares (and so the remaining
+    shards can still cover the tail).  Deterministic pure numpy — no mesh.
+    """
+    counts = np.asarray(counts, np.int64)
+    n_live = int(counts.shape[0])
+    total = int(counts.sum())
+    n_shards = int(n_shards)
+    if n_shards <= 1 or n_live == 0 or total <= 0:
+        return None
+    thr = RESHARD_IMBALANCE_THRESHOLD if threshold is None else threshold
+    slack = RESHARD_WIDTH_SLACK if width_slack is None else width_slack
+    frac_before = owner_load_frac(counts, v_per_uniform, n_shards)
+    if frac_before * n_shards <= thr:
+        return None
+
+    v_cap = _pow2_at_least(-(-n_live // n_shards) * max(int(slack), 1))
+    cum = np.cumsum(counts)
+    bounds = np.zeros((n_shards + 1,), np.int64)
+    bounds[n_shards] = n_live
+    for s in range(1, n_shards):
+        prev = int(bounds[s - 1])
+        target = total * s / n_shards
+        b = int(np.searchsorted(cum, target, side="left")) + 1
+        lo = max(prev, n_live - (n_shards - s) * v_cap)
+        hi = min(prev + v_cap, n_live)
+        bounds[s] = min(max(b, lo), hi)
+
+    widths = np.diff(bounds)
+    v_per = max(_pow2_at_least(int(widths.max())),
+                _pow2_at_least(-(-LADDER_MIN_N_CAP // n_shards)))
+    csum = np.concatenate([np.zeros((1,), np.int64), cum])
+    loads = csum[bounds[1:]] - csum[bounds[:-1]]
+    frac_after = float(loads.max() / total)
+    if frac_after >= frac_before:
+        return None
+    e_floor = -(-LADDER_MIN_E_CAP // n_shards)
+    e_per = _pow2_at_least(max(int(loads.max() * LADDER_SLACK), e_floor))
+    return ReshardPlan(bounds, int(v_per), int(e_per),
+                       frac_before, frac_after)
 
 
 def resolve_scan_backend(backend: str, *, use_ell_kernel: bool = False,

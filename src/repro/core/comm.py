@@ -196,8 +196,26 @@ def comm_plan(backend: str, n_shards: int, v_per: int, n_pad: int,
                     n_shards * delta, n_shards * fallback)
 
 
-def phase_bytes(plan: CommPlan, rounds: int, fallback_rounds: int = 0) -> int:
+def reshard_bytes(e_slots_old: int, e_slots_new: int) -> int:
+    """One-time cost of a pass-boundary coarse re-shard, in bytes.
+
+    A re-shard pulls the padded coarse edge arrays out of the OLD layout
+    (src, dst int32 + weight f32 = 12 B per slot) and pushes the relabelled
+    arrays back in the NEW layout — every slot crosses the wire exactly
+    once in each direction, so the price is 12 B over both layouts' total
+    edge slots (``n_shards * e_per_shard`` each).  Host arithmetic only;
+    pairs with the measured ``reshard_passes`` counter the same way
+    ``round_bytes`` pairs with the round counters.
+    """
+    return 12 * (int(e_slots_old) + int(e_slots_new))
+
+
+def phase_bytes(plan: CommPlan, rounds: int, fallback_rounds: int = 0,
+                reshard_cost: int = 0) -> int:
     """Total bytes on the wire for a move phase of ``rounds`` rounds, of
-    which ``fallback_rounds`` overflowed the delta caps."""
+    which ``fallback_rounds`` overflowed the delta caps.  ``reshard_cost``
+    adds the one-time pass-boundary re-shard bytes (``reshard_bytes``)
+    when the pass re-balanced its owner ranges."""
     fb = min(int(fallback_rounds), int(rounds))
-    return (int(rounds) - fb) * plan.round_bytes + fb * plan.fallback_bytes
+    return ((int(rounds) - fb) * plan.round_bytes + fb * plan.fallback_bytes
+            + int(reshard_cost))

@@ -538,6 +538,10 @@ def make_distributed_refine(
     ``engine.ConstrainedScanner`` — so the gather and delta comm backends
     both inherit refinement with zero forks.  ``k``/``m`` stay the FULL
     graph's quantities.
+
+    ``n_live`` is the scalar live count for dense-prefix layouts or a
+    replicated ``(n_pad + 1,)`` bool live mask for gappy (skew-resharded)
+    layouts — ``sanitize_outer`` and the singleton seed accept both.
     """
     from repro.configs.louvain_arch import resolve_comm_backend
 
@@ -558,9 +562,12 @@ def make_distributed_refine(
             scanner = ConstrainedScanner(
                 scanner_cls(axes, spec, src_l, dst_m, w_m, k, m),
                 outer_s, n_live, gate_fraction=gate_fraction)
-            comm0 = jnp.where(jnp.arange(sent + 1) < n_live,
-                              jnp.arange(sent + 1), sent).astype(jnp.int32)
-            frontier0 = scanner.frontier_valid & (scanner.local_ids < n_live)
+            ids = jnp.arange(sent + 1)
+            nv = jnp.asarray(n_live)
+            live_v = (nv & (ids < sent)) if nv.ndim else (ids < nv)
+            comm0 = jnp.where(live_v, ids, sent).astype(jnp.int32)
+            frontier0 = scanner.frontier_valid & live_v[
+                jnp.minimum(scanner.local_ids, sent)]
             st = MoveEngine(scanner, config).run(comm0, k, frontier0,
                                                  tolerance)
             return (st.comm, st.iters, st.dq_sum,
@@ -696,10 +703,16 @@ def _warm_comm_sigma(mem, k, n_valid):
     vertices without a previous assignment (id >= n_pad, e.g. entered via an
     edge insert) fall back to their own singleton; sigma is recomputed from
     the CURRENT vertex weights so the snapshot stays exact after updates.
+
+    ``n_valid`` is either the usual scalar (valid ids are the dense prefix
+    ``[0, n_valid)``) or a ``(n_pad + 1,)`` bool LIVE MASK — the gappy
+    layouts produced by skew-aware re-sharding, where valid ids sit in
+    per-shard blocks with padding gaps between them.
     """
     n_pad = mem.shape[0] - 1
     idx = jnp.arange(n_pad + 1)
-    valid = idx < n_valid
+    nv = jnp.asarray(n_valid)
+    valid = (nv & (idx < n_pad)) if nv.ndim else (idx < nv)
     assigned = jnp.where(mem < n_pad, mem.astype(jnp.int32),
                          idx.astype(jnp.int32))
     comm0 = jnp.where(valid, assigned, n_pad).astype(jnp.int32)
@@ -745,6 +758,54 @@ def _rebucket_live_host(src_g, dst_g, w_g, old_sent: int,
                 e_per_shard=2 * spec_new.e_per_shard)
 
 
+def _reshard_relabel(bounds: np.ndarray, v_per: int, n_pad_new: int,
+                     old_cap: int) -> np.ndarray:
+    """Monotone relabel LUT for a skew-aware owner split.
+
+    ``bounds`` partitions the dense coarse ids ``[0, bounds[-1])`` into
+    contiguous owner ranges; range ``s`` lands at the uniform device block
+    ``[s * v_per, s * v_per + width_s)``, so ``owner = id // v_per`` stays
+    the layout law and only the id values move.  Returns an
+    ``(old_cap + 1,)`` int32 LUT: dense id -> relabelled id, everything
+    else (incl. the old sentinel) -> ``n_pad_new`` (the new sentinel).
+    The map is strictly increasing on the live ids — relative order (and
+    hence every ordered reduction downstream) is preserved.
+    """
+    n_live = int(bounds[-1])
+    lut = np.full(old_cap + 1, n_pad_new, np.int64)
+    ids = np.arange(n_live)
+    owner = np.searchsorted(bounds, ids, side="right") - 1
+    lut[:n_live] = owner * v_per + (ids - bounds[owner])
+    return lut.astype(np.int32)
+
+
+def _reshard_coarse_host(src_g, dst_g, w_g, old_sent: int, plan):
+    """Apply a ``configs.louvain_arch.ReshardPlan`` to a coarse graph.
+
+    Pulls the live coarse slots host-side (they are already host-bound for
+    the ladder re-bucket), relabels both endpoints through the monotone
+    LUT, and re-buckets into the balanced layout.  Returns
+    ``(src', dst', w', spec', lut, live_mask)`` — ``live_mask`` is the
+    ``(n_pad' + 1,)`` bool mask of live vertex ids in the gappy layout
+    (the ``n_valid`` operand of the mask-aware warm/refine paths).
+    """
+    n_shards = len(plan.bounds) - 1
+    spec_new = ShardedGraphSpec(n_shards, plan.v_per_shard, plan.e_per_shard,
+                                n_shards * plan.v_per_shard)
+    lut = _reshard_relabel(plan.bounds, plan.v_per_shard, spec_new.n_pad,
+                           old_sent)
+    src = np.asarray(src_g)
+    dst = np.asarray(dst_g)
+    w = np.asarray(w_g)
+    live = src < old_sent
+    src, dst, w = lut[src[live]], lut[dst[live]], w[live]
+    out = bucket_slots_host(src, dst, w, spec_new)
+    n_live = int(plan.bounds[-1])
+    live_mask = np.zeros(spec_new.n_pad + 1, bool)
+    live_mask[lut[:n_live]] = True
+    return (*out, spec_new, lut, live_mask)
+
+
 def sharded_louvain_passes(
     src_g, dst_g, w_g,
     spec: ShardedGraphSpec,
@@ -762,6 +823,8 @@ def sharded_louvain_passes(
     comm_backend: str = "gather",
     refine: str = "none",
     refine_move=None,
+    reshard: str = "none",
+    pipeline_fetch: bool = False,
 ):
     """Host pass loop over prebuilt jit'd phases on partitioned edge arrays.
 
@@ -800,19 +863,46 @@ def sharded_louvain_passes(
     at the OUTER partition — the same Leiden pass semantics as the
     single-device ``repro.core.louvain.louvain``.
 
+    With ``reshard="auto"`` (requires ``phases_for``) every aggregation on
+    a multi-shard mesh is followed by a skew check: per-coarse-vertex edge
+    counts are measured host-side and, when the worst shard's load exceeds
+    ``configs.louvain_arch.RESHARD_IMBALANCE_THRESHOLD`` times the mean
+    under the uniform owner map, the coarse ids are monotonically
+    relabelled onto contiguous load-balanced owner blocks
+    (``plan_reshard`` / ``_reshard_coarse_host``) instead of taking the
+    ladder tier.  The relabelled layout is GAPPY — live ids sit in
+    per-shard blocks — so the pass threads a live mask through the warm
+    start, the refinement sweep and the Leiden fold; the global fold and
+    warm membership are remapped through the same LUT.  Balanced graphs
+    skip the shuffle entirely, and the one-time relabel traffic is priced
+    into the pass's ``comm_bytes`` via ``comm.reshard_bytes``.
+
+    ``pipeline_fetch=True`` dispatches the next aggregation speculatively
+    BEFORE the host fetches this pass's convergence scalars, so device
+    work overlaps the host control decision; a pass that then breaks
+    simply discards the speculative result.  Dispatch order is the only
+    change — final memberships are identical (pinned in the golden
+    matrix).
+
     Returns (membership (n_pad,) device array, n_communities, stats);
     the membership stays at the ORIGINAL ``spec.n_pad`` length (with
     refinement it is the outer fold, not the refined dendrogram chain).
     Each stats row carries the comm-plan columns (``comm_backend``,
     ``comm_rounds``, ``comm_fallback_rounds``, ``comm_bytes``) from the
-    measured round counters + static shapes.
+    measured round counters + static shapes, plus the re-shard columns
+    (``reshard``, ``reshard_bytes``, ``max_shard_load_frac_before`` /
+    ``_after``) when the pass boundary re-balanced ownership.
     """
     from repro.configs.louvain_arch import (LADDER_SLACK, _pow2_at_least,
-                                            resolve_coarse_capacity)
+                                            plan_reshard,
+                                            resolve_coarse_capacity,
+                                            resolve_reshard)
+    from repro.core.comm import reshard_bytes as _reshard_cost
     from repro.core.louvain import _leiden_warm_membership, pad_membership
 
     if refine not in ("none", "leiden"):
         raise ValueError(f"refine must be 'none' or 'leiden', got {refine!r}")
+    reshard_on = resolve_reshard(reshard) == "auto"
     refine_on = refine == "leiden"
     if refine_on and refine_move is None:
         if phases_for is None:
@@ -833,23 +923,28 @@ def sharded_louvain_passes(
     stats = []
     n_report = n_live
     leiden_warm = None
+    live_np = None       # None = dense prefix [0, n_live); ndarray = gappy
     for p in range(max_passes):
+        # The live-vertex operand of the mask-aware paths: the scalar count
+        # for dense-prefix layouts, the replicated bool mask after a
+        # skew-aware re-shard made the layout gappy.
+        nv_op = (jnp.int32(n_live) if live_np is None
+                 else jnp.asarray(live_np))
         k = _vertex_k(w_g, src_g, shape_token)
         m = jnp.sum(w_g) * 0.5
         if p == 0 and init_membership is not None:
-            comm0, sigma0 = _warm_comm_sigma(
-                init_membership, k, jnp.int32(n_live))
+            comm0, sigma0 = _warm_comm_sigma(init_membership, k, nv_op)
             frontier0 = (ones_frontier if init_frontier is None
                          else init_frontier)
         elif leiden_warm is not None:
             # Leiden pass semantics: resume from the outer partition
             # expressed on the refined coarse vertices.
-            comm0, sigma0 = _warm_comm_sigma(leiden_warm, k,
-                                             jnp.int32(n_live))
+            comm0, sigma0 = _warm_comm_sigma(leiden_warm, k, nv_op)
             frontier0 = ones_frontier
         else:
+            live_host = (idx < n_live) if live_np is None else live_np
             comm0 = jnp.asarray(
-                np.where(idx < n_live, idx, sent).astype(np.int32))
+                np.where(live_host, idx, sent).astype(np.int32))
             sigma0 = k
             frontier0 = ones_frontier
         comm, sigma, iters, dq_sum, rounds, fallbacks = move(
@@ -860,17 +955,25 @@ def sharded_louvain_passes(
         rounds_extra = fb_extra = 0
         if refine_on:
             refined, r_iters, _r_dq, r_rounds, r_fb = refine_move(
-                src_g, dst_g, w_g, comm, k, jnp.int32(n_live), m,
-                jnp.float32(tol))
+                src_g, dst_g, w_g, comm, k, nv_op, m, jnp.float32(tol))
             outer_ren, n_outer = replicated_renumber(comm)
             comm_ren, n_comms = replicated_renumber(refined)
+        else:
+            comm_ren, n_comms = replicated_renumber(comm)
+        # Pipelined convergence fetch: enqueue the aggregation BEFORE any
+        # host sync below, so the device works through it while the host
+        # reads the convergence scalars and decides.  Never on the last
+        # pass (its result could only be discarded).  Dispatch order is
+        # the only difference from the default path.
+        pending_agg = None
+        if pipeline_fetch and p < max_passes - 1:
+            pending_agg = agg(src_g, dst_g, w_g, comm_ren)
+        if refine_on:
             # Outer fold off the PRE-pass chain: what this pass reports.
             report_comm = outer_ren[jnp.minimum(global_comm, sent)]
             n_report = int(n_outer)
             refine_iters_i = int(r_iters)
             rounds_extra, fb_extra = int(r_rounds), int(r_fb)
-        else:
-            comm_ren, n_comms = replicated_renumber(comm)
         global_comm = comm_ren[jnp.minimum(global_comm, sent)]
         if not refine_on:
             report_comm = global_comm
@@ -888,7 +991,10 @@ def sharded_louvain_passes(
                       "comm_fallback_rounds": fb_i,
                       "comm_bytes": phase_bytes(plan, rounds_i, fb_i),
                       "refine_iterations": refine_iters_i,
-                      "n_refined": n_comms_i if refine_on else None})
+                      "n_refined": n_comms_i if refine_on else None,
+                      "reshard": False, "reshard_bytes": 0,
+                      "max_shard_load_frac_before": None,
+                      "max_shard_load_frac_after": None})
         converged = iters_i <= 1
         low_shrink = n_report / max(n_live, 1) > aggregation_tolerance
         if converged or low_shrink or p == max_passes - 1:
@@ -899,10 +1005,14 @@ def sharded_louvain_passes(
             # touch it: values are coarse ids [0, n_comms) regardless of
             # later layout changes.
             warm_flat = np.asarray(_leiden_warm_membership(
-                comm_ren, outer_ren, jnp.int32(n_live), n_comms))[:n_comms_i]
+                comm_ren, outer_ren, nv_op, n_comms))[:n_comms_i]
         while True:
-            a_src, a_dst, a_w, e_valid, owned_max = agg(src_g, dst_g, w_g,
-                                                        comm_ren)
+            if pending_agg is not None:
+                a_src, a_dst, a_w, e_valid, owned_max = pending_agg
+                pending_agg = None
+            else:
+                a_src, a_dst, a_w, e_valid, owned_max = agg(
+                    src_g, dst_g, w_g, comm_ren)
             owned = int(owned_max)
             if owned <= spec.e_per_shard:
                 src_g, dst_g, w_g = a_src, a_dst, a_w
@@ -920,7 +1030,10 @@ def sharded_louvain_passes(
             # the caller's resident buffers) for the residual skew.
             old_sent = spec.sentinel
             v_tight = _pow2_at_least(-(-n_live // spec.n_shards))
-            if v_tight < spec.v_per_shard:
+            # The owner-map shrink assumes live FINE ids form a dense
+            # prefix; a gappy (resharded) layout scatters them across the
+            # full range, so only the edge capacity may grow there.
+            if live_np is None and v_tight < spec.v_per_shard:
                 tier = ShardedGraphSpec(spec.n_shards, v_tight,
                                         spec.e_per_shard,
                                         spec.n_shards * v_tight)
@@ -948,7 +1061,65 @@ def sharded_louvain_passes(
                 idx = np.arange(spec.n_pad + 1)
                 shape_token = jnp.zeros((spec.n_pad + 1,), jnp.float32)
                 ones_frontier = jnp.ones((spec.n_pad + 1,), bool)
-        if use_ladder and phases_for is not None:
+        # --- skew-aware re-sharding (reshard="auto") -----------------------
+        # The coarse graph is on the device in the CURRENT owner map; pull
+        # the per-coarse-vertex edge counts host-side (the ladder re-bucket
+        # pulls the same arrays anyway) and measure the skew the next pass
+        # would inherit under the uniform layout.  When it clears the
+        # threshold, relabel the dense coarse ids onto balanced contiguous
+        # owner blocks and thread the remap through every replicated
+        # consumer: the dendrogram fold, the Leiden warm start, and the
+        # live mask the warm/refine paths read.  A re-shard replaces the
+        # ladder tier for this boundary (it already picked the capacity).
+        resharded = False
+        if reshard_on and phases_for is not None and spec.n_shards > 1:
+            src_np = np.asarray(src_g)
+            counts = np.bincount(src_np[src_np < spec.sentinel],
+                                 minlength=max(n_comms_i, 1))
+            if use_ladder:
+                n_new, _e_new = resolve_coarse_capacity(
+                    n_comms_i, int(e_valid), spec.n_pad,
+                    spec.e_per_shard * spec.n_shards)
+                v_uniform = -(-n_new // spec.n_shards)
+            else:
+                v_uniform = spec.v_per_shard
+            rplan = plan_reshard(counts, spec.n_shards, v_uniform)
+            if rplan is not None:
+                old_sent_r = spec.sentinel
+                cost = _reshard_cost(spec.n_shards * spec.e_per_shard,
+                                     spec.n_shards * rplan.e_per_shard)
+                src_g, dst_g, w_g, spec, lut, live_mask = \
+                    _reshard_coarse_host(src_g, dst_g, w_g, old_sent_r,
+                                         rplan)
+                move, agg, _rmv = phases_for(spec)
+                if refine_on and _rmv is not None:
+                    refine_move = _rmv
+                sent = spec.sentinel
+                idx = np.arange(spec.n_pad + 1)
+                shape_token = jnp.zeros((spec.n_pad + 1,), jnp.float32)
+                ones_frontier = jnp.ones((spec.n_pad + 1,), bool)
+                # Fold and warm start live in coarse-id VALUE space (and,
+                # for the warm start, coarse-id INDEX space) — both sides
+                # go through the same monotone LUT.
+                global_comm = jnp.asarray(lut)[
+                    jnp.minimum(global_comm, old_sent_r)]
+                if refine_on:
+                    warm_new = np.full(spec.n_pad + 1, sent, np.int32)
+                    warm_new[lut[:n_comms_i]] = lut[warm_flat]
+                    leiden_warm = jnp.asarray(warm_new)
+                live_np = live_mask
+                resharded = True
+                stats[-1].update(
+                    reshard=True, reshard_bytes=cost,
+                    max_shard_load_frac_before=rplan.load_frac_before,
+                    max_shard_load_frac_after=rplan.load_frac_after,
+                    comm_bytes=phase_bytes(plan, rounds_i, fb_i,
+                                           reshard_cost=cost))
+        if not resharded:
+            # Aggregation emits dense coarse ids, so any non-resharded next
+            # layout is a dense prefix again.
+            live_np = None
+        if not resharded and use_ladder and phases_for is not None:
             n_new, e_new = resolve_coarse_capacity(
                 n_comms_i, int(e_valid), spec.n_pad,
                 spec.e_per_shard * spec.n_shards)
@@ -979,9 +1150,10 @@ def sharded_louvain_passes(
                     idx = np.arange(spec.n_pad + 1)
                     shape_token = jnp.zeros((spec.n_pad + 1,), jnp.float32)
                     ones_frontier = jnp.ones((spec.n_pad + 1,), bool)
-        if refine_on:
+        if refine_on and not resharded:
             # Express the outer-on-coarse warm start in the FINAL next-pass
-            # layout (skew retiers / ladder tiers may have changed n_pad).
+            # layout (skew retiers / ladder tiers may have changed n_pad);
+            # a re-shard already wrote the LUT-remapped warm start above.
             leiden_warm = jnp.asarray(pad_membership(warm_flat, spec.n_pad))
         n_live = n_comms_i
         tol /= tolerance_drop
@@ -1006,6 +1178,8 @@ def distributed_louvain(
     use_ladder: bool = True,
     comm_backend: str = "auto",
     refine: str = "none",
+    reshard: str = "none",
+    pipeline_fetch: bool = False,
 ):
     """End-to-end multi-device GVE-Louvain (host pass loop, jit'd phases).
 
@@ -1021,6 +1195,11 @@ def distributed_louvain(
     "delta" | "auto"; auto resolves per mesh) — memberships are invariant
     to it.  ``refine="leiden"`` enables the constrained refinement sweep
     between local-moving and aggregation (see ``sharded_louvain_passes``).
+    ``reshard="auto"`` re-balances the coarse owner ranges by measured load
+    after each aggregation (skew-aware re-sharding; a no-op on one shard
+    and on balanced graphs), and ``pipeline_fetch=True`` overlaps the host
+    convergence decision with the speculatively dispatched aggregation —
+    both knobs change work placement, never memberships.
 
     Returns (membership (n,), n_communities, pass_stats list).
     """
@@ -1059,7 +1238,7 @@ def distributed_louvain(
             tolerance_drop=tolerance_drop,
             aggregation_tolerance=aggregation_tolerance,
             phases_for=phases_for, use_ladder=use_ladder, comm_backend=cb,
-            refine=refine)
+            refine=refine, reshard=reshard, pipeline_fetch=pipeline_fetch)
     membership = np.asarray(global_comm[:n])
     return membership, int(len(np.unique(membership))), stats
 

@@ -24,6 +24,15 @@ community state resident across rounds instead of rebuilding it:
     re-buckets host-side into doubled capacity (``bucket_slots_host``),
     rebuilds the jit'd phases once, and re-applies, instead of raising —
     unbounded streams keep running.
+  * **Skew-aware re-sharding** — coarse-graph ownership skew inside the
+    pass loop is no longer absorbed by capacity growth alone: with
+    ``config.reshard="auto"`` the pass loop re-balances the coarse owner
+    ranges by measured edge load after each aggregation
+    (``distributed.sharded_louvain_passes``), so one hot shard stops
+    setting the fleet's capacity tier; the one-time relabel traffic is
+    priced into the stream's bytes accounting and surfaced as the
+    ``reshard_*`` result fields.  Capacity doubling remains the backstop
+    for residual skew (e.g. a single dominant coarse vertex).
 
 ``louvain_dynamic_sharded`` is the multi-device analogue of
 ``louvain_dynamic`` and reports the same ``BatchUpdateStats`` per batch.
@@ -200,6 +209,15 @@ class ShardedDynamicResult:
     comm_rounds: int = 0                  # engine rounds across the stream
     comm_fallback_rounds: int = 0         # rounds the delta caps overflowed
     bytes_on_wire: int = 0                # total move-phase exchange bytes
+    reshard_passes: int = 0               # skew-aware owner re-shards
+    reshard_bytes: int = 0                # one-time relabel bytes (priced)
+    #: Worst pre-/post-re-shard shard load fraction observed across the
+    #: stream (None when no pass re-sharded).
+    max_shard_load_frac_before: Optional[float] = None
+    max_shard_load_frac_after: Optional[float] = None
+    #: Largest per-shard COARSE edge tier any pass ran at — the capacity
+    #: tier the skew check is trying to keep down.
+    coarse_e_per_max: int = 0
 
     @property
     def updates_per_second(self) -> float:
@@ -248,6 +266,10 @@ def louvain_dynamic_sharded(
     stream's bytes-on-wire accounting (``bytes_per_round``).
     ``config.refine="leiden"`` runs the constrained refinement sweep inside
     every batch's pass loop (see ``sharded_louvain_passes``).
+    ``config.reshard="auto"`` re-balances the coarse owner ranges by
+    measured load after each aggregation and ``config.pipeline_fetch``
+    overlaps the pass loop's host convergence decision with the next
+    aggregation — both change work placement, never memberships.
     """
     from repro.configs.louvain_arch import resolve_comm_backend
 
@@ -294,6 +316,8 @@ def louvain_dynamic_sharded(
     frontier_sizes: List[jax.Array] = []
     n_regrows = 0
     comm_rounds = comm_fb = comm_bytes = 0
+    reshard_passes = reshard_bytes_total = coarse_e_max = 0
+    load_frac_before = load_frac_after = None
 
     def _grow_to(e_per_new: int):
         """Re-bucket the resident fine arrays into grown capacity and
@@ -308,16 +332,31 @@ def louvain_dynamic_sharded(
     def _run_passes(n_live_, **kw):
         """Pass loop + comm accounting.  Coarse-edge ownership skew no
         longer raises here: with ``phases_for`` supplied the pass loop
-        re-shards the owner map (and grows coarse edge capacity pass-
-        locally) in-flight — the resident fine arrays are untouched."""
-        nonlocal comm_rounds, comm_fb, comm_bytes
+        re-shards the owner map (skew-aware with ``config.reshard="auto"``,
+        ladder-tight otherwise) and grows coarse edge capacity pass-
+        locally in-flight — the resident fine arrays are untouched."""
+        nonlocal comm_rounds, comm_fb, comm_bytes, reshard_passes, \
+            reshard_bytes_total, coarse_e_max, load_frac_before, \
+            load_frac_after
         gc, nc, pstats = sharded_louvain_passes(
             src_g, dst_g, w_g, spec, move, agg, n_live_,
             phases_for=phases_for, use_ladder=config.use_ladder,
-            comm_backend=cb, refine=config.refine, **kw, **pass_kw)
+            comm_backend=cb, refine=config.refine,
+            reshard=config.reshard, pipeline_fetch=config.pipeline_fetch,
+            **kw, **pass_kw)
         comm_rounds += sum(r["comm_rounds"] for r in pstats)
         comm_fb += sum(r["comm_fallback_rounds"] for r in pstats)
         comm_bytes += sum(r["comm_bytes"] for r in pstats)
+        for r in pstats[1:]:   # coarse tiers only (row 0 is the fine pass)
+            coarse_e_max = max(coarse_e_max, r["e_per_shard"])
+        for r in pstats:
+            if r.get("reshard"):
+                reshard_passes += 1
+                reshard_bytes_total += r["reshard_bytes"]
+                b, a = (r["max_shard_load_frac_before"],
+                        r["max_shard_load_frac_after"])
+                load_frac_before = max(load_frac_before or 0.0, b)
+                load_frac_after = max(load_frac_after or 0.0, a)
         return gc, nc, pstats
 
     def _mem_from(global_comm, n_valid):
@@ -397,4 +436,9 @@ def louvain_dynamic_sharded(
         comm_rounds=comm_rounds,
         comm_fallback_rounds=comm_fb,
         bytes_on_wire=comm_bytes,
+        reshard_passes=reshard_passes,
+        reshard_bytes=reshard_bytes_total,
+        max_shard_load_frac_before=load_frac_before,
+        max_shard_load_frac_after=load_frac_after,
+        coarse_e_per_max=coarse_e_max,
     )

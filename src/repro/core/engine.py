@@ -303,14 +303,27 @@ def sanitize_outer(outer: jax.Array, n_valid: jax.Array,
         tier's sentinel) on a VALID slot falls back to the vertex's own
         singleton — never to another community's id.
 
+    ``n_valid`` is either the usual scalar (valid ids are the dense prefix
+    ``[0, n_valid)``) or a ``(cap,)`` bool LIVE MASK for gappy layouts (the
+    skew-resharded owner ranges, where valid ids are scattered blocks);
+    community labels are representative vertex ids, so label validity is
+    the same mask lookup.  The slot at ``sentinel`` is never valid.
+
     ``ConstrainedScanner`` applies this unconditionally, so the guarantee
     is engine-level, not per-driver.  ``assert_outer_sane`` is the eager
     companion for driver boundaries.
     """
     ids = jnp.arange(outer.shape[0], dtype=jnp.int32)
-    valid_slot = ids < n_valid
     lab = outer.astype(jnp.int32)
-    in_range = (lab >= 0) & (lab < n_valid)
+    nv = jnp.asarray(n_valid)
+    if nv.ndim == 0:
+        valid_slot = ids < nv
+        in_range = (lab >= 0) & (lab < nv)
+    else:
+        valid_slot = nv & (ids < sentinel)
+        safe_lab = jnp.clip(lab, 0, sentinel)
+        in_range = ((lab >= 0) & (lab < sentinel)
+                    & nv[safe_lab] & (safe_lab < sentinel))
     out = jnp.where(valid_slot & in_range, lab, ids)
     return jnp.where(valid_slot, out, sentinel)
 
@@ -319,13 +332,28 @@ def assert_outer_sane(outer, n_valid, sentinel: int) -> None:
     """Eager-mode guard: raise if a stale outer id would reach a constrained
     sweep.  No-op under tracing (jit), where ``sanitize_outer`` provides the
     in-graph guarantee; on concrete arrays this surfaces the driver bug
-    loudly instead of silently re-labelling."""
+    loudly instead of silently re-labelling.  ``n_valid`` accepts the same
+    scalar-or-live-mask forms as ``sanitize_outer``."""
     if isinstance(outer, jax.core.Tracer) or isinstance(n_valid, jax.core.Tracer):
         return
     import numpy as np
     outer = np.asarray(outer)
-    nv = int(n_valid)
     ids = np.arange(outer.shape[0])
+    nv_arr = np.asarray(n_valid)
+    if nv_arr.ndim > 0:
+        live = nv_arr.astype(bool) & (ids < sentinel)
+        safe = np.clip(outer, 0, sentinel)
+        lab_ok = (outer >= 0) & (outer < sentinel) & live[safe]
+        bad_valid = live & ~lab_ok
+        bad_pad = ~live & (outer != sentinel)
+        if bad_valid.any() or bad_pad.any():
+            where = np.flatnonzero(bad_valid | bad_pad)[:8]
+            raise ValueError(
+                f"stale outer-community ids in refinement seed: slots "
+                f"{where.tolist()} hold {outer[where].tolist()} "
+                f"(live mask, sentinel={sentinel})")
+        return
+    nv = int(n_valid)
     bad_valid = (ids < nv) & ((outer < 0) | (outer >= nv))
     bad_pad = (ids >= nv) & (outer != sentinel)
     if bad_valid.any() or bad_pad.any():

@@ -97,6 +97,21 @@ class LouvainConfig:
     #: sweep through the one wrapper — pinned bit-for-bit in
     #: tests/test_engine_equiv.py.
     refine: str = "none"
+    #: Skew-aware coarse re-sharding on the sharded paths ("none" |
+    #: "auto"): after each aggregation, measure per-coarse-vertex edge
+    #: load and, past configs.louvain_arch.RESHARD_IMBALANCE_THRESHOLD,
+    #: relabel the coarse ids onto contiguous load-balanced owner ranges
+    #: instead of inheriting the seed owner map (policy:
+    #: configs.louvain_arch.plan_reshard).  A no-op on one shard and on
+    #: balanced graphs; single-device drivers ignore it.  Default "none"
+    #: keeps every committed golden's layout history bit-for-bit.
+    reshard: str = "none"
+    #: Pipeline the sharded pass loop's host convergence fetch: dispatch
+    #: the next aggregation speculatively before reading this pass's
+    #: convergence scalars, overlapping device work with host control.
+    #: Dispatch order only — memberships are identical (pinned in
+    #: tests/test_engine_equiv.py); single-device drivers ignore it.
+    pipeline_fetch: bool = False
 
 
 @dataclasses.dataclass
@@ -260,10 +275,15 @@ def _leiden_warm_membership(comm_ren, outer_ren, n_valid, n_agg):
     through ``comm_ren`` is well defined; the returned membership labels
     each coarse vertex with the SMALLEST coarse id sharing its outer
     community (labels must live in coarse vertex-id space).
+
+    ``n_valid`` is the scalar live count for dense-prefix layouts or a
+    ``(cap + 1,)`` bool live mask for gappy (skew-resharded) sharded
+    layouts.
     """
     cap = comm_ren.shape[0] - 1
     idx = jnp.arange(cap + 1, dtype=jnp.int32)
-    valid = idx < n_valid
+    nv = jnp.asarray(n_valid)
+    valid = (nv & (idx < cap)) if nv.ndim else (idx < nv)
     tgt = jnp.where(valid, jnp.minimum(comm_ren, cap), cap)
     oc = jnp.full((cap + 1,), cap, jnp.int32).at[tgt].set(
         jnp.where(valid, outer_ren.astype(jnp.int32), cap))

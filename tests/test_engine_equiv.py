@@ -253,6 +253,40 @@ def test_sharded_dynamic_stream_delta_bit_for_bit(gold):
     assert res.bytes_on_wire > 0
 
 
+# -- the re-shard / pipelined-fetch matrix: skew-aware re-sharding moves
+# data, never labels, and the pipelined convergence fetch reorders host
+# syncs, never arithmetic — every combination must reproduce the committed
+# goldens element for element.  (A 1-shard mesh can never be imbalanced, so
+# reshard="auto" must also NEVER fire here; the multi-shard firing contract
+# lives in tests/test_reshard.py's forced-8-device subprocess.)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(reshard="auto"),
+    dict(reshard="none", pipeline_fetch=True),
+    dict(reshard="auto", pipeline_fetch=True),
+    dict(reshard="auto", pipeline_fetch=True, comm_backend="delta"),
+])
+def test_sharded_reshard_pipeline_static_bit_for_bit(gold, corpora, kw):
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, stats = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                        **kw)
+    assert np.array_equal(mem, gold["sharded__sbm"])
+    assert not any(r.get("reshard") for r in stats)
+
+
+def test_sharded_dynamic_stream_reshard_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    res = louvain_dynamic_sharded(
+        init, mesh, ("shard",), batches,
+        config=LouvainConfig(comm_backend="delta", reshard="auto",
+                             pipeline_fetch=True))
+    assert np.array_equal(res.membership,
+                          gold["sharded_dynamic__sbm_stream"])
+    assert res.reshard_passes == 0 and res.reshard_bytes == 0
+
+
 # -- the refinement matrix: refine="leiden" runs the constrained sweep
 # between local-moving and aggregation on EVERY backend through the one
 # ConstrainedScanner wrapper — each path is pinned to its own committed
