@@ -13,10 +13,13 @@ throughput metric regresses beyond the threshold:
     than ``threshold`` above the baseline.
 
 Rows or files present on only one side are reported but never fail the
-gate (PRs add new benchmarks; deletions show up in review).  Exit status:
-0 = no regressions, 1 = at least one regression, 2 = usage error.  CI runs
-this non-blocking on pull requests (timing noise on shared runners) and
-blocking on pushes to main.
+gate (PRs add new benchmarks; deletions show up in review) — UNLESS the
+gate was pointed at them by name: a ``--names`` entry missing from either
+directory (or unreadable) exits 2, so a typo'd or silently-skipped gate
+can never compare nothing and pass.  Exit status: 0 = no regressions,
+1 = at least one regression, 2 = usage error / named artifact missing.
+CI runs this non-blocking on pull requests (timing noise on shared
+runners) and blocking on pushes to main.
 """
 
 from __future__ import annotations
@@ -102,13 +105,28 @@ def load_bench(path: str) -> Optional[List[dict]]:
 
 def compare_dirs(baseline: str, fresh: str, threshold: float,
                  names: Optional[List[str]] = None):
-    """(regressions, compared_names, skipped_notes) across two artifact dirs."""
+    """(regressions, compared_names, notes, errors) across two artifact dirs.
+
+    Without ``names``, files present on only one side are notes (PRs add
+    benchmarks, deletions show up in review).  WITH ``names`` the caller
+    asked for those gates specifically, so a named artifact missing from
+    either side — or unreadable — is an ERROR, not a note: a typo'd or
+    skipped gate must never silently compare nothing and pass.
+    """
     def found(d):
         return {os.path.basename(p)[len("BENCH_"):-len(".json")]: p
                 for p in sorted(glob.glob(os.path.join(d, "BENCH_*.json")))}
 
     base_f, fresh_f = found(baseline), found(fresh)
+    errors = []
     if names:
+        for name in names:
+            if name not in base_f:
+                errors.append(f"{name}: named but no BENCH_{name}.json "
+                              f"under baseline {baseline!r}")
+            if name not in fresh_f:
+                errors.append(f"{name}: named but no BENCH_{name}.json "
+                              f"under fresh {fresh!r}")
         base_f = {k: v for k, v in base_f.items() if k in names}
         fresh_f = {k: v for k, v in fresh_f.items() if k in names}
     regressions, compared, notes = [], [], []
@@ -121,11 +139,15 @@ def compare_dirs(baseline: str, fresh: str, threshold: float,
             continue
         b, f = load_bench(base_f[name]), load_bench(fresh_f[name])
         if b is None or f is None:
-            notes.append(f"{name}: unreadable artifact, skipped")
+            msg = f"{name}: unreadable artifact"
+            if names:
+                errors.append(msg)
+            else:
+                notes.append(msg + ", skipped")
             continue
         compared.append(name)
         regressions += compare_rows(b, f, threshold, name)
-    return regressions, compared, notes
+    return regressions, compared, notes, errors
 
 
 def main() -> None:
@@ -147,10 +169,14 @@ def main() -> None:
         sys.exit(2)
     names = ([s.strip() for s in args.names.split(",") if s.strip()]
              if args.names else None)
-    regressions, compared, notes = compare_dirs(
+    regressions, compared, notes, errors = compare_dirs(
         args.baseline, args.fresh, args.threshold, names)
     for note in notes:
         print(f"note: {note}")
+    if errors:
+        for err in errors:
+            print(f"error: {err}", file=sys.stderr)
+        sys.exit(2)
     print(f"compared {len(compared)} benchmark(s): "
           f"{', '.join(compared) or '(none)'}")
     if not regressions:

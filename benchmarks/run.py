@@ -16,6 +16,8 @@ Sections:
             disconnected-community audit)
     distdyn  sharded streaming updates/sec vs cold sharded recompute
              (forced-8-device subprocess)
+    fleet  multi-tenant serving fleet (sharded x batched) vs sequential
+           per-tenant sharded serving (forced-8-device subprocess)
     roofline  achieved rates from the committed BENCH_*.json artifacts vs
               the paper's 560M edges/s headline
 
@@ -36,7 +38,7 @@ import time
 # from this list (a typo'd section silently running NOTHING is how perf
 # gates rot, so unknown names are a hard error).
 SECTIONS = ("fig3", "fig5", "fig6", "fig7", "fig8", "dynamic", "multistream",
-            "refine", "distdyn", "roofline")
+            "refine", "distdyn", "fleet", "roofline")
 
 
 def parse_only(spec: str | None) -> set[str] | None:
@@ -149,6 +151,23 @@ def main() -> None:
         proc = subprocess.run(cmd, env=env)
         if proc.returncode != 0:
             print(f"(distdyn subprocess failed with code {proc.returncode})")
+            failed = True
+        print()
+    if want("fleet"):
+        print("== fleet: multi-tenant serving fleet vs sequential "
+              "per-tenant sharded serving (8 forced host devices, "
+              "subprocess) ==")
+        # Forces the device count before JAX initializes, like distdyn
+        # (it emits BENCH_fleet.json itself).
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        cmd = [sys.executable, "-m", "benchmarks.bench_fleet"]
+        if not small:
+            cmd.append("--full")
+        proc = subprocess.run(cmd, env=env)
+        if proc.returncode != 0:
+            print(f"(fleet subprocess failed with code {proc.returncode})")
             failed = True
         print()
     if want("roofline"):

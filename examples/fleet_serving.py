@@ -1,0 +1,109 @@
+"""Multi-tenant serving fleet: shard every tenant, batch tenants per step.
+
+Four tenant graphs — three regular SBM streams and one "whale" whose insert
+stream outgrows its capacity envelope — are served through ONE
+``FleetRouter``: each tenant's graph is sharded across the device mesh,
+tenants sharing a capacity envelope ride the same ``jit(vmap(shard_map))``
+dispatch, every dispatch's convergence fetch is deferred one step, and the
+whale migrates to a bigger bucket mid-stream without recompiling anyone
+else.  The same streams are then re-served one tenant at a time through
+``louvain_dynamic_sharded`` to show the fleet speedup and the bit-for-bit
+per-tenant equality.
+
+    PYTHONPATH=src python examples/fleet_serving.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.compat import make_mesh
+from repro.core.delta import make_edge_batch
+from repro.core.distributed_dynamic import louvain_dynamic_sharded
+from repro.core.fleet import serve_fleet
+from repro.core.graph import build_csr
+from repro.core.louvain import louvain
+from repro.data import sbm_holdout_stream
+
+AXES = ("shard",)
+
+
+def make_stream(seed, n_steps=8, b_cap=4):
+    """One tenant: an SBM graph with held-out edges streamed back in."""
+    init, batches, _ = sbm_holdout_stream(
+        seed, n_cap=128, e_cap=4600, n_hold=32, n_steps=n_steps,
+        b_cap=b_cap)
+    return init, batches
+
+
+def make_whale(n=64, n_batches=8, k=12):
+    """A sparse ring with dense insert batches: its envelope overflows
+    mid-stream and the router migrates it to a bigger bucket."""
+    s = np.arange(n, dtype=np.int64)
+    d = (s + 1) % n
+    g = build_csr(np.concatenate([s, d]), np.concatenate([d, s]),
+                  np.ones(2 * n, np.float32), n, e_cap=2 * n + 4 * k)
+    rng = np.random.default_rng(7)
+    batches = []
+    for _ in range(n_batches):
+        bs = rng.integers(0, n, k)
+        bd = (bs + 2 + rng.integers(0, n - 3, k)) % n
+        batches.append(make_edge_batch(bs, bd, np.ones(k, np.float32),
+                                       g.n_cap, b_cap=k))
+    return g, batches
+
+
+def main():
+    mesh = make_mesh((1,), AXES)
+    graphs, streams = {}, {}
+    for t in range(3):
+        graphs[f"t{t}"], streams[f"t{t}"] = make_stream(100 + t)
+    graphs["whale"], streams["whale"] = make_whale()
+    prevs = {tid: louvain(g).membership for tid, g in graphs.items()}
+
+    print(f"fleet: {len(graphs)} tenants "
+          f"(3 SBM streams + 1 overflowing whale)")
+
+    # Warm both paths once (compile), then time.
+    serve_fleet(graphs, streams, mesh, AXES, prevs=prevs,
+                screening="community")
+    for tid in graphs:
+        louvain_dynamic_sharded(graphs[tid], mesh, AXES, streams[tid],
+                                prev=prevs[tid], screening="community")
+
+    t0 = time.perf_counter()
+    flt = serve_fleet(graphs, streams, mesh, AXES, prevs=prevs,
+                      screening="community")
+    t_fleet = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    solo = {tid: louvain_dynamic_sharded(graphs[tid], mesh, AXES,
+                                         streams[tid], prev=prevs[tid],
+                                         screening="community")
+            for tid in graphs}
+    t_seq = time.perf_counter() - t0
+
+    print(f"\nfleet     : {t_fleet:.3f}s "
+          f"({flt.n_dispatches} fused dispatches, "
+          f"{flt.bytes_per_dispatch:.0f} B/dispatch, "
+          f"{flt.n_migrations} migration(s), backend={flt.comm_backend})")
+    # With 3 buckets for 4 tenants plus a migration replay, the fleet's
+    # dispatch win here is modest — BENCH_fleet.json holds the scaled
+    # head-to-head (one shared bucket, 8 devices, 2-3x).
+    print(f"sequential: {t_seq:.3f}s "
+          f"({t_seq / t_fleet:.2f}x the fleet's wall time)")
+
+    print("\nbucket layout after the serve:")
+    for env, tids in flt.buckets.items():
+        print(f"  v/shard={env.v_per_shard:4d} e/shard={env.e_per_shard:5d} "
+              f"b_cap={env.b_cap}: {', '.join(tids)}")
+
+    print("\nper-tenant results (fleet == solo sharded, bit-for-bit):")
+    for tid in graphs:
+        same = np.array_equal(flt.membership[tid], solo[tid].membership)
+        print(f"  {tid:6s}: {flt.n_communities[tid]:2d} communities, "
+              f"equal = {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -328,6 +328,108 @@ def plan_reshard(counts: np.ndarray, n_shards: int, v_per_uniform: int, *,
                        frac_before, frac_after)
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant fleet admission policy (the ``core.fleet`` serving layer).
+#
+# The fleet combines the two scaling axes: every tenant graph is sharded
+# across the mesh (1-D vertex partition, like ``core.distributed``) AND
+# tenants are batched per dispatch (vmap over a tenant lane, like
+# ``core.multistream``).  A vmapped program needs ONE compiled shape per
+# bucket, so tenants are admitted into power-of-two capacity envelopes
+# ``(v_per_shard, e_per_shard, b_cap)`` — tenants sharing an envelope share
+# a bucket (one ``jit(vmap(step))`` program); a whale tenant outgrowing its
+# envelope MIGRATES to a bigger bucket (one recompile in the destination
+# bucket) instead of forcing a fleet-wide recompile.
+# ---------------------------------------------------------------------------
+
+#: Headroom multiplier on the worst shard's owned edge slots at admission —
+#: mirrors the sharded streaming driver's default 25% slack, so a tenant's
+#: first growth event needs genuinely new volume, not admission jitter.
+FLEET_E_SLACK = 1.25
+
+#: Per-shard vertex-block floor (tiny tenants keep a usable block).
+FLEET_MIN_V_PER = 8
+
+#: Per-shard edge-slot floor (keeps the per-shard sort non-trivial).
+FLEET_MIN_E_PER = 32
+
+#: Migration doubles capacity at least this factor — the same geometric
+#: growth the single-fleet ``multistream`` regrow and the sharded streaming
+#: ``_grow_to`` use, so a whale cannot thrash the bucket ladder.
+FLEET_GROW_FACTOR = 2
+
+
+class FleetEnvelope(NamedTuple):
+    """Power-of-two per-tenant capacity envelope of a fleet bucket.
+
+    Tenants with equal envelopes ride one compiled ``jit(vmap(...))``
+    program; the implied global capacities on an ``n_shards`` mesh are
+    ``v_cap = n_shards * v_per_shard`` (the padded vertex count / sentinel)
+    and ``e_cap = n_shards * e_per_shard`` directed edge slots.
+    """
+
+    v_per_shard: int
+    e_per_shard: int
+    b_cap: int           # per-step edge-batch capacity (stacked per lane)
+
+    def v_cap(self, n_shards: int) -> int:
+        return self.v_per_shard * n_shards
+
+    def e_cap(self, n_shards: int) -> int:
+        return self.e_per_shard * n_shards
+
+
+def fleet_v_per_shard(n_cap: int, n_shards: int) -> int:
+    """Power-of-two per-shard vertex block covering ``n_cap`` vertices."""
+    return max(_pow2_at_least(-(-int(n_cap) // max(int(n_shards), 1))),
+               FLEET_MIN_V_PER)
+
+
+def fleet_envelope(n_cap: int, owned_max: int, b_cap: int,
+                   n_shards: int) -> FleetEnvelope:
+    """Admission envelope for one tenant.
+
+    ``owned_max`` is the worst shard's owned live directed slots under the
+    ``fleet_v_per_shard`` owner map (the caller measures it host-side with
+    one bincount).  The edge tier reserves ``FLEET_E_SLACK`` headroom plus
+    room for one worst-case batch (a batch adds at most ``2 * b_cap``
+    directed slots to a single shard), then rounds up to a power of two —
+    so organically-near tenants coalesce into the same bucket.
+    """
+    b_cap = max(_pow2_at_least(int(b_cap)), 1)
+    e_need = int(int(owned_max) * FLEET_E_SLACK) + 2 * b_cap
+    e_per = max(_pow2_at_least(e_need), FLEET_MIN_E_PER)
+    return FleetEnvelope(fleet_v_per_shard(n_cap, n_shards), e_per, b_cap)
+
+
+def plan_fleet(sizings, n_shards: int) -> Dict[FleetEnvelope, list]:
+    """Group tenants into capacity buckets — the fleet admission policy.
+
+    ``sizings`` is a sequence of ``(n_cap, owned_max, b_cap)`` tuples (one
+    per tenant, in admission order); returns ``{envelope: [tenant_index]}``
+    with deterministic per-envelope ordering.  Pure policy: the router owns
+    the arrays, this owns the numbers.
+    """
+    buckets: Dict[FleetEnvelope, list] = {}
+    for i, (n_cap, owned_max, b_cap) in enumerate(sizings):
+        env = fleet_envelope(n_cap, owned_max, b_cap, n_shards)
+        buckets.setdefault(env, []).append(i)
+    return buckets
+
+
+def migrate_envelope(env: FleetEnvelope, e_need: int) -> FleetEnvelope:
+    """The envelope a whale tenant migrates into after an edge overflow.
+
+    ``e_need`` is the measured worst-shard slot requirement of the
+    overflowing step; growth is geometric (``FLEET_GROW_FACTOR``) and
+    power-of-two quantized, mirroring the sharded streaming driver's
+    ``_grow_to(max(2 * e_per, e_max))``.
+    """
+    e_per = _pow2_at_least(max(FLEET_GROW_FACTOR * env.e_per_shard,
+                               int(e_need)))
+    return env._replace(e_per_shard=e_per)
+
+
 def resolve_scan_backend(backend: str, *, use_ell_kernel: bool = False,
                          frontier_frac: float | None = None) -> str:
     """Map the ``scan_backend`` knob to a concrete scanner for ONE pass.

@@ -1256,3 +1256,19 @@ def replicated_renumber(comm: jax.Array, n_pad: int | None = None):
     n_comms = jnp.sum(present)
     new_id = new_id.at[n_pad].set(n_pad)
     return jnp.where(valid, new_id[cs], n_pad), n_comms
+
+
+def sentinel_forced_membership(global_comm, n_valid, n_pad: int):
+    """Replicated (n_pad + 1,) membership from a pass-loop fold.
+
+    Invalid slots are forced to the layout sentinel: with the coarse-pass
+    ladder they can carry stale SMALL sentinel values (a shrunk tier's
+    n_pad) which a later warm start would misread as real assignments.
+    Shared by the streaming driver (``distributed_dynamic``) and the
+    serving fleet (``repro.core.fleet``) so both produce bit-identical
+    resident state.  Works eagerly or inside a trace (``n_valid`` may be a
+    traced scalar).
+    """
+    gc = jnp.where(jnp.arange(n_pad) < n_valid, global_comm[:n_pad],
+                   jnp.int32(n_pad))
+    return jnp.concatenate([gc, jnp.full((1,), n_pad, jnp.int32)])

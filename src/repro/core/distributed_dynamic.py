@@ -58,6 +58,7 @@ from repro.core.distributed import (ShardedGraphSpec,
                                     make_distributed_move,
                                     make_tier_phases,
                                     partition_graph_host,
+                                    sentinel_forced_membership,
                                     sharded_louvain_passes,
                                     sharded_modularity)
 from repro.core.dynamic import BatchUpdateStats
@@ -132,7 +133,8 @@ def apply_batch_shard(spec: ShardedGraphSpec, shard_ix,
 def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
                              spec: ShardedGraphSpec,
                              n_limit: Optional[int] = None,
-                             backend: str = "xla"):
+                             backend: str = "xla",
+                             traced_n_limit: bool = False):
     """Build the jit'd sharded batch apply for a fixed mesh/layout.
 
     Returns fn(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid, n_valid)
@@ -141,16 +143,27 @@ def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
     (ONE all_gather of touched-owned slices), and ``e_max`` the worst
     shard's uncapped slot count (overflow signal).  ``backend`` picks the
     group-resolve implementation (``"xla"`` / ``"pallas"``).
+
+    With ``traced_n_limit`` the returned fn takes the logical vertex
+    capacity as one extra TRACED replicated operand (after ``n_valid``)
+    instead of baking it into the compiled body — ``apply_batch_shard``
+    only ever compares against it, so the math is identical.  The serving
+    fleet uses this to share one compiled apply across tenants whose
+    logical ``n_cap`` differ within a capacity bucket (and to vmap the
+    apply over tenant lanes with per-lane capacities).
     """
     edge_spec = P(axes)
     rep = P()
 
-    def apply_fn(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid, n_valid):
-        def body(src_l, dst_l, w_l, b_src, b_dst, b_w, b_valid, n_valid):
+    def apply_fn(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid, n_valid,
+                 n_limit_op=None):
+        def body(src_l, dst_l, w_l, b_src, b_dst, b_w, b_valid, n_valid,
+                 *lim_rest):
             shard_ix = _shard_index(axes)
+            lim = lim_rest[0] if lim_rest else n_limit
             src2, dst2, w2, touched_own, e_new = apply_batch_shard(
                 spec, shard_ix, src_l, dst_l, w_l, b_src, b_dst, b_w,
-                b_valid, n_limit, backend)
+                b_valid, lim, backend)
             touched = jax.lax.all_gather(touched_own, axes, tiled=True)
             touched = jnp.concatenate([touched, jnp.zeros((1,), bool)])
             e_max = jax.lax.pmax(e_new, axes)
@@ -159,16 +172,26 @@ def make_sharded_batch_apply(mesh: Mesh, axes: Tuple[str, ...],
             n_valid_new = jnp.maximum(n_valid, (mx + 1).astype(jnp.int32))
             return src2, dst2, w2, touched, e_max, n_valid_new
 
+        operands = (src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid, n_valid)
+        in_specs = (edge_spec, edge_spec, edge_spec, rep, rep, rep, rep, rep)
+        if traced_n_limit:
+            operands = operands + (n_limit_op,)
+            in_specs = in_specs + (rep,)
         fn = shard_map(
             body, mesh=mesh,
-            in_specs=(edge_spec, edge_spec, edge_spec, rep, rep, rep, rep,
-                      rep),
+            in_specs=in_specs,
             out_specs=(edge_spec, edge_spec, edge_spec, rep, rep, rep),
             check_rep=False,
         )
-        return fn(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid, n_valid)
+        return fn(*operands)
 
-    return jax.jit(apply_fn)
+    if not traced_n_limit:
+        def apply_static(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid,
+                         n_valid):
+            return apply_fn(src_g, dst_g, w_g, b_src, b_dst, b_w, b_valid,
+                            n_valid)
+        return jax.jit(apply_static)
+    return apply_fn
 
 
 def _rebucket_host(src_g, dst_g, w_g, spec: ShardedGraphSpec):
@@ -360,13 +383,9 @@ def louvain_dynamic_sharded(
         return gc, nc, pstats
 
     def _mem_from(global_comm, n_valid):
-        """Replicated membership from a pass-loop result.  Invalid slots are
-        forced to the sentinel: with the coarse-pass ladder they can carry
-        stale SMALL sentinel values (a shrunk tier's n_pad), which a later
-        warm start would misread as real community assignments."""
-        gc = jnp.where(jnp.arange(spec.n_pad) < n_valid, global_comm,
-                       jnp.int32(sent))
-        return jnp.concatenate([gc, jnp.asarray([sent], jnp.int32)])
+        """Replicated membership from a pass-loop result (shared with the
+        serving fleet — see ``distributed.sentinel_forced_membership``)."""
+        return sentinel_forced_membership(global_comm, n_valid, spec.n_pad)
 
     with mesh:
         if prev is None:

@@ -584,3 +584,32 @@ def normalize_screening(screening) -> Optional[str]:
         return screening
     raise ValueError(f"screening must be bool, 'community', 'vertex' or "
                      f"'auto'; got {screening!r}")
+
+
+def resolve_screening_host(mode: Optional[str],
+                           touched_frac: Optional[float]) -> Tuple[Optional[str], bool]:
+    """Host-side ``"auto"`` screening resolution for BATCHED (vmapped) traces.
+
+    ``affected_frontier``'s on-device ``"auto"`` is a ``jnp.where`` select:
+    correct under ``vmap``, but it EVALUATES BOTH granularities for every
+    lane every step — the community expansion's scatter/gather over the full
+    capacity is exactly the work the vertex mode exists to avoid, so inside
+    a combined vmap+shard_map program "auto" silently costs the full bill.
+    Batched drivers therefore resolve the mode HOST-SIDE from the last
+    validated dispatch's worst touched fraction (max over the lanes sharing
+    the compiled program, one step stale — no extra device syncs) and record
+    the choice in their ``PassStats``.
+
+    Returns ``(mode, downgraded)``: non-"auto" modes pass through
+    unchanged; ``"auto"`` resolves by the same |touched| <= n /
+    ``AUTO_SCREEN_TOUCHED_DENOM`` threshold the on-device select uses, and
+    falls back to the safe community granularity — flagged as a downgrade —
+    when no measurement exists yet (the first dispatch).
+    """
+    if mode != "auto":
+        return mode, False
+    if touched_frac is None:
+        return "community", True
+    if touched_frac * AUTO_SCREEN_TOUCHED_DENOM <= 1.0:
+        return "vertex", False
+    return "community", False

@@ -128,6 +128,18 @@ class PassStats:
     e_cap: Optional[int] = None          # (ladder tier when use_ladder)
     refine_iterations: Optional[int] = None  # constrained-sweep iterations
     n_refined: Optional[int] = None      # refined (aggregation) communities
+    #: Screening granularity the step actually ran with ("community" |
+    #: "vertex" | "auto" | None) — batched/fleet drivers resolve "auto"
+    #: host-side and record the concrete choice here.
+    screening: Optional[str] = None
+    #: Scanner backend the step actually ran with ("full" | "compact" |
+    #: "sharded") — the batched driver cannot honor scan_backend="auto"
+    #: under vmap and records the resolved backend here.
+    scan_backend: Optional[str] = None
+    #: True when a requested "auto" knob could not be honored as such and
+    #: was downgraded to a safe concrete choice (the explicit record the
+    #: batched drivers emit instead of silently staying on the full path).
+    downgraded: Optional[bool] = None
 
 
 @dataclasses.dataclass

@@ -48,9 +48,10 @@ from repro.configs.louvain_arch import (_pow2_at_least, compact_work_cap,
                                         resolve_coarse_capacity)
 from repro.core.aggregate import renumber_communities
 from repro.core.delta import EdgeBatch, _apply_edge_batch
-from repro.core.engine import affected_frontier, normalize_screening
+from repro.core.engine import (affected_frontier, normalize_screening,
+                               resolve_screening_host)
 from repro.core.graph import CSRGraph, rebucket_capacity
-from repro.core.louvain import (LouvainConfig, _aggregate_phase,
+from repro.core.louvain import (LouvainConfig, PassStats, _aggregate_phase,
                                 _leiden_warm_membership, _move_phase,
                                 _refine_phase, _renumber_and_fold,
                                 pad_membership, singleton_init, warm_init)
@@ -108,6 +109,11 @@ class BatchedDynamicResult:
     modularity: Optional[np.ndarray]  # (S,) final Q per stream (if tracked)
     total_seconds: float
     n_regrows: int = 0           # fleet-level capacity-growth re-buckets
+    #: One row per serving step with the knobs the step ACTUALLY ran with
+    #: (fleet-level maxima; ``screening``/``scan_backend`` record the
+    #: host-resolved choices, ``downgraded`` flags an "auto" request the
+    #: vmapped program could not honor as such).
+    pass_stats: List[PassStats] = dataclasses.field(default_factory=list)
 
     def stream_membership(self, s: int) -> np.ndarray:
         n = int(np.asarray(self.graphs.n_valid)[s])
@@ -152,7 +158,7 @@ def _fused_step(max_iterations: int, use_pruning: bool, gate_fraction: int,
             gate_fraction=gate_fraction, work_cap=work_cap)
         comm_ren, _ = renumber_communities(comm, g2.n_valid, n_cap)
         return (g2, comm_ren[:n_cap], frontier, iters, e_new,
-                jnp.sum(frontier))
+                jnp.sum(frontier), jnp.sum(touched.astype(jnp.int32)))
 
     return jax.jit(jax.vmap(one))
 
@@ -393,13 +399,34 @@ def louvain_dynamic_batched(
     if config.use_ell_kernel or config.scan_backend in ("ell", "ell_fused"):
         raise ValueError("louvain_dynamic_batched uses the sort-reduce "
                          "scanner; ELL bucketing is per-graph host work")
-    work_cap = (compact_work_cap(e_cap, config.compact_cap_frac)
-                if config.scan_backend == "compact"
-                and screen_mode is not None else 0)
-    fused = _fused_step(config.max_iterations, config.use_pruning,
-                        config.gate_fraction,
-                        float(config.initial_tolerance), screen_mode,
-                        apply_backend, work_cap)
+    # Scanner selection under vmap: "compact" is honored (bit-identical,
+    # though its overflow cond lowers to a both-branches select), but
+    # "auto" CANNOT be — the per-batch frontier-fraction resolution is a
+    # host decision the one-program-many-streams driver has no per-stream
+    # hook for, so it downgrades to the full scan and RECORDS the
+    # downgrade in ``pass_stats`` instead of silently staying full.
+    compact_on = (config.scan_backend == "compact"
+                  and screen_mode is not None)
+    scan_used = "compact" if compact_on else "full"
+    # (Without screening the auto resolution would pick the full scan
+    # anyway — only flag the downgrade when it could have differed.)
+    scan_down = config.scan_backend == "auto" and screen_mode is not None
+    # Screening "auto" is likewise resolved HOST-side, per fleet step, from
+    # the previous step's worst touched fraction (the on-device auto select
+    # evaluates BOTH granularities for every lane under vmap): the driver
+    # takes the per-step validated path, whose scalar fetch carries the
+    # touched counts for free.
+    auto_screen = screen_mode == "auto"
+
+    def _fused_for(mode: Optional[str]):
+        wc = (compact_work_cap(e_cap, config.compact_cap_frac)
+              if compact_on else 0)
+        return _fused_step(config.max_iterations, config.use_pruning,
+                           config.gate_fraction,
+                           float(config.initial_tolerance), mode,
+                           apply_backend, wc)
+
+    fused = _fused_for("community" if auto_screen else screen_mode)
 
     if prevs is None:
         mem = louvain_batched(gb, config).membership
@@ -415,20 +442,40 @@ def louvain_dynamic_batched(
            for step in range(n_steps)]
 
     n_regrows = 0
+    stats: List[PassStats] = []
+
+    def _step_stat(mode, mode_down, iters_max, fsize_max, nv_max):
+        return PassStats(
+            iterations=int(iters_max), n_communities=0, n_vertices=nv_max,
+            dq_sum=0.0, seconds=0.0, phase_seconds={},
+            frontier_size=int(fsize_max), n_cap=n_cap, e_cap=e_cap,
+            screening=mode, scan_backend=scan_used,
+            downgraded=bool(mode_down or scan_down))
 
     def serve_carefully(gb, mem):
         """Per-step validated loop: check overflow/convergence every step,
         routing overflowed steps through a fleet re-bucket + replay and
         non-converged steps through the general batched pass loop —
-        results stay exactly equal to the sequential driver."""
-        nonlocal e_cap, fused, n_regrows
+        results stay exactly equal to the sequential driver.  With
+        ``screening="auto"`` this is the ONLY path: the step's scalar
+        fetch carries the touched counts the next step's host-side mode
+        resolution needs."""
+        nonlocal e_cap, n_regrows
         frontier_sizes: List[jax.Array] = []
+        stats.clear()
+        touched_frac = None
         for step in range(n_steps):
+            mode, mode_down = resolve_screening_host(screen_mode,
+                                                     touched_frac)
+            fused_t = _fused_for(mode)
             while True:
-                gb_new, mem_new, frontier, iters, e_new, fsize = fused(
-                    gb, mem, bbs[step])
-                e_max, iters_max = jax.device_get(
-                    (jnp.max(e_new), jnp.max(iters)))
+                gb_new, mem_new, frontier, iters, e_new, fsize, tch = \
+                    fused_t(gb, mem, bbs[step])
+                e_max, iters_max, fsz_max, nv_max, frac = jax.device_get((
+                    jnp.max(e_new), jnp.max(iters), jnp.max(fsize),
+                    jnp.max(gb_new.n_valid),
+                    jnp.max(tch / jnp.maximum(gb_new.n_valid, 1)
+                            .astype(jnp.float32))))
                 if int(e_max) <= e_cap:
                     break
                 if not grow_capacity:
@@ -440,22 +487,19 @@ def louvain_dynamic_batched(
                 e_cap = _pow2_at_least(int(e_max))
                 gb = jax.vmap(lambda g: rebucket_capacity(
                     g, n_cap_new=n_cap, e_cap_new=e_cap))(gb)
-                wc = (compact_work_cap(e_cap, config.compact_cap_frac)
-                      if work_cap else 0)
-                fused = _fused_step(
-                    config.max_iterations, config.use_pruning,
-                    config.gate_fraction, float(config.initial_tolerance),
-                    screen_mode, apply_backend, wc)
+                fused_t = _fused_for(mode)
                 n_regrows += 1
+            touched_frac = float(frac)
             if int(iters_max) > 1:
                 res = louvain_batched(
                     gb_new, config, init_membership=mem,
-                    init_frontier=(frontier if screen_mode is not None
-                                   else None))
+                    init_frontier=(frontier if mode is not None else None))
                 mem_new = res.membership
             gb, mem = gb_new, mem_new
-            frontier_sizes.append(fsize if screen_mode is not None
-                                  else gb.n_valid)
+            frontier_sizes.append(fsize if mode is not None else gb.n_valid)
+            stats.append(_step_stat(mode, mode_down, iters_max,
+                                    fsz_max if mode is not None else nv_max,
+                                    int(nv_max)))
         return gb, mem, frontier_sizes
 
     # Optimistic pipelined pass: enqueue every fused step back-to-back with
@@ -463,25 +507,38 @@ def louvain_dynamic_batched(
     # once.  Warm serving updates virtually always satisfy both checks; a
     # violation redoes the stream through the per-step validated loop (so
     # overflow raises with its step index and non-converged steps get the
-    # full pass loop) — results are identical either way.
-    gb_t, mem_t = gb, mem
-    fsz_t: List[jax.Array] = []
-    its_t: List[jax.Array] = []
-    enew_t: List[jax.Array] = []
-    for step in range(n_steps):
-        gb_t, mem_t, _, iters, e_new, fsize = fused(gb_t, mem_t, bbs[step])
-        fsz_t.append(fsize if screen_mode is not None else gb_t.n_valid)
-        its_t.append(iters)
-        enew_t.append(e_new)
-    if n_steps == 0:
-        frontier_sizes = []          # idle fleet: warm membership unchanged
+    # full pass loop) — results are identical either way.  Host-resolved
+    # "auto" screening needs the per-step fetch, so it always takes the
+    # validated loop.
+    if auto_screen:
+        gb, mem, frontier_sizes = serve_carefully(gb, mem)
     else:
-        e_max, iters_max = jax.device_get(
-            (jnp.max(jnp.stack(enew_t)), jnp.max(jnp.stack(its_t))))
-        if int(e_max) > e_cap or int(iters_max) > 1:
-            gb, mem, frontier_sizes = serve_carefully(gb, mem)
+        gb_t, mem_t = gb, mem
+        fsz_t: List[jax.Array] = []
+        its_t: List[jax.Array] = []
+        enew_t: List[jax.Array] = []
+        nv_t: List[jax.Array] = []
+        for step in range(n_steps):
+            gb_t, mem_t, _, iters, e_new, fsize, _tch = fused(
+                gb_t, mem_t, bbs[step])
+            fsz_t.append(fsize if screen_mode is not None else gb_t.n_valid)
+            its_t.append(iters)
+            enew_t.append(e_new)
+            nv_t.append(gb_t.n_valid)
+        if n_steps == 0:
+            frontier_sizes = []      # idle fleet: warm membership unchanged
         else:
-            gb, mem, frontier_sizes = gb_t, mem_t, fsz_t
+            e_max, iters_max, its_all, fsz_all, nv_all = jax.device_get(
+                (jnp.max(jnp.stack(enew_t)), jnp.max(jnp.stack(its_t)),
+                 jnp.stack(its_t), jnp.stack(fsz_t), jnp.stack(nv_t)))
+            if int(e_max) > e_cap or int(iters_max) > 1:
+                gb, mem, frontier_sizes = serve_carefully(gb, mem)
+            else:
+                gb, mem, frontier_sizes = gb_t, mem_t, fsz_t
+                for step in range(n_steps):
+                    stats.append(_step_stat(
+                        screen_mode, False, its_all[step].max(),
+                        fsz_all[step].max(), int(nv_all[step].max())))
 
     q = None
     if track_modularity:
@@ -497,6 +554,7 @@ def louvain_dynamic_batched(
         modularity=q,
         total_seconds=time.perf_counter() - t_start,
         n_regrows=n_regrows,
+        pass_stats=list(stats),
     )
 
 

@@ -396,3 +396,33 @@ def test_batched_stream_compact_bit_for_bit(gold):
     seq = louvain_dynamic(init, batches, prev=prev,
                           config=LouvainConfig(scan_backend="compact"))
     assert np.array_equal(bat.stream_membership(0), seq.membership)
+
+
+# -- the serving-fleet matrix: the multi-tenant fleet's fused per-lane step
+# IS the solo sharded dynamic path (same apply, same move phase, same
+# renumber), so every tenant served through the fleet must land on the
+# committed sharded-dynamic golden element for element — alone AND batched
+# with a neighbor lane.
+
+
+def test_fleet_single_tenant_stream_bit_for_bit(gold):
+    from repro.core.fleet import serve_fleet
+
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    res = serve_fleet({"t0": init}, {"t0": batches}, mesh, ("shard",),
+                      screening="community")
+    assert np.array_equal(res.membership["t0"],
+                          gold["sharded_dynamic__sbm_stream"])
+
+
+def test_fleet_batched_tenants_bit_for_bit(gold):
+    init, batches = capture.dynamic_stream()
+    from repro.core.fleet import serve_fleet
+
+    mesh = make_mesh((1,), ("shard",))
+    res = serve_fleet({"a": init, "b": init}, {"a": batches, "b": batches},
+                      mesh, ("shard",), screening="community")
+    for tid in ("a", "b"):
+        assert np.array_equal(res.membership[tid],
+                              gold["sharded_dynamic__sbm_stream"]), tid

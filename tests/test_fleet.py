@@ -1,0 +1,256 @@
+"""Multi-tenant serving fleet (repro.core.fleet).
+
+The correctness bar: every tenant served through the fleet — batched with
+other tenants per dispatch, sharded per lane, convergence fetches deferred
+one dispatch — gets BIT-FOR-BIT the membership it would get from
+``louvain_dynamic_sharded`` alone, through every control path (fused
+accept, non-converged fallback replay, whale bucket migration).  Admission
+edge cases (zero tenants, one tenant, uneven streams, frozen source
+buckets) must degrade to the obvious behavior, never crash.
+
+All on a 1-shard mesh: the vmap-over-shard_map composition itself is what
+is under test; the multi-device contract rides the same sharded pass loop
+pinned by tests/test_distributed_dynamic.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.configs.louvain_arch import (FleetEnvelope, fleet_envelope,
+                                        migrate_envelope, plan_fleet)
+from repro.core.delta import make_edge_batch
+from repro.core.distributed_dynamic import louvain_dynamic_sharded
+from repro.core.fleet import FleetRouter, serve_fleet
+from repro.core.graph import build_csr
+from repro.core.louvain import LouvainConfig, louvain
+from repro.data import sbm_graph, sbm_holdout_stream
+
+AXES = ("shard",)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1,), AXES)
+
+
+def _case(seed, n_steps=3, b_cap=8):
+    init, batches, _ = sbm_holdout_stream(seed, n_cap=128, e_cap=1400,
+                                          n_hold=24, n_steps=n_steps,
+                                          b_cap=b_cap)
+    return init, batches
+
+
+def _ring_whale(n=64, n_batches=8, k=12):
+    """A sparse ring whose envelope is tight, plus dense insert batches
+    that blow through it: forces bucket migration mid-stream."""
+    s = np.arange(n, dtype=np.int64)
+    d = (s + 1) % n
+    g = build_csr(np.concatenate([s, d]), np.concatenate([d, s]),
+                  np.ones(2 * n, np.float32), n, e_cap=2 * n + 4 * k)
+    rng = np.random.default_rng(7)
+    batches = []
+    for _ in range(n_batches):
+        bs = rng.integers(0, n, k)
+        bd = (bs + 2 + rng.integers(0, n - 3, k)) % n
+        batches.append(make_edge_batch(bs, bd, np.ones(k, np.float32),
+                                       g.n_cap, b_cap=k))
+    return g, batches
+
+
+def _solo(graph, batches, mesh, config=LouvainConfig(), screening=True):
+    return louvain_dynamic_sharded(graph, mesh, AXES, batches,
+                                   config=config, screening=screening)
+
+
+# -- envelope policy units ---------------------------------------------------
+
+
+def test_fleet_envelope_is_power_of_two():
+    env = fleet_envelope(100, 300, 5, 2)
+    assert env.v_per_shard & (env.v_per_shard - 1) == 0
+    assert env.e_per_shard & (env.e_per_shard - 1) == 0
+    assert env.b_cap & (env.b_cap - 1) == 0
+    assert env.v_per_shard * 2 >= 100
+    assert env.e_per_shard >= 300 and env.b_cap >= 5
+
+
+def test_plan_fleet_buckets_same_size_tenants_together():
+    plan = plan_fleet([(100, 300, 4), (100, 290, 3), (100, 5000, 4)], 2)
+    pair = [env for env, idx in plan.items() if 0 in idx]
+    whale = [env for env, idx in plan.items() if 2 in idx]
+    assert plan[pair[0]] == [0, 1]         # one compile for the pair
+    assert whale[0].e_per_shard > pair[0].e_per_shard
+    assert whale[0].v_per_shard == pair[0].v_per_shard
+
+
+def test_migrate_envelope_doubles_edges_only():
+    env = FleetEnvelope(64, 256, 8)
+    big = migrate_envelope(env, 300)
+    assert big.e_per_shard == 512
+    assert big.v_per_shard == 64 and big.b_cap == 8
+    assert migrate_envelope(env, 2000).e_per_shard == 2048
+
+
+# -- admission edge cases ----------------------------------------------------
+
+
+def test_serve_zero_tenants(mesh):
+    res = FleetRouter(mesh, AXES).serve({})
+    assert res.membership == {} and res.n_dispatches == 0
+    assert res.bytes_on_wire == 0 and res.buckets == {}
+
+
+def test_refine_rejected(mesh):
+    with pytest.raises(ValueError, match="refine"):
+        FleetRouter(mesh, AXES, LouvainConfig(refine="leiden"))
+
+
+def test_double_admission_rejected(mesh):
+    init, batches = _case(20)
+    router = FleetRouter(mesh, AXES)
+    router.admit("a", init, b_cap=8)
+    with pytest.raises(ValueError, match="already admitted"):
+        router.admit("a", init, b_cap=8)
+
+
+def test_unadmitted_tenant_rejected(mesh):
+    with pytest.raises(ValueError, match="not admitted"):
+        FleetRouter(mesh, AXES).serve({"ghost": []})
+
+
+def test_oversized_batch_rejected(mesh):
+    init, batches = _case(21)
+    router = FleetRouter(mesh, AXES)
+    env = router.admit("a", init, b_cap=1)
+    big = make_edge_batch(np.array([0, 1]), np.array([2, 3]),
+                          np.ones(2, np.float32), init.n_cap,
+                          b_cap=4 * env.b_cap)
+    with pytest.raises(ValueError, match="exceeds"):
+        router.serve({"a": [big]})
+
+
+def test_single_tenant_empty_stream_keeps_admission_state(mesh):
+    init, _ = _case(22)
+    prev = louvain(init).membership
+    router = FleetRouter(mesh, AXES)
+    router.admit("a", init, prev=prev, b_cap=8)
+    res = router.serve({"a": []})
+    n = int(init.n_valid)
+    assert np.array_equal(res.membership["a"], np.asarray(prev)[:n])
+    assert res.n_dispatches == 0 and res.pass_stats["a"] == []
+
+
+# -- parity: fleet == solo sharded serving, per tenant -----------------------
+
+
+@pytest.mark.slow
+def test_fleet_parity_four_tenants(mesh):
+    cases = [_case(seed) for seed in (30, 31, 32, 33)]
+    res = serve_fleet({f"t{i}": c[0] for i, c in enumerate(cases)},
+                      {f"t{i}": c[1] for i, c in enumerate(cases)},
+                      mesh, AXES, screening="community")
+    # One fused dispatch per bucket per step — NOT per tenant per step.
+    assert res.n_dispatches == 3 * len(res.buckets) < 3 * len(cases)
+    assert res.bytes_on_wire > 0
+    for i, (init, batches) in enumerate(cases):
+        solo = _solo(init, batches, mesh, screening="community")
+        assert np.array_equal(res.membership[f"t{i}"], solo.membership), i
+        stats = res.pass_stats[f"t{i}"]
+        assert len(stats) == len(batches)
+        assert all(s.screening == "community" for s in stats)
+
+
+def test_fleet_parity_uneven_streams(mesh):
+    """Lanes whose stream already ended ride along as idle (b_valid=0)
+    without perturbing their resident state."""
+    a = _case(34, n_steps=3)
+    b = _case(35, n_steps=3)
+    res = serve_fleet({"a": a[0], "b": b[0]},
+                      {"a": a[1], "b": b[1][:1]},
+                      mesh, AXES, screening="community")
+    solo_a = _solo(a[0], a[1], mesh, screening="community")
+    solo_b = _solo(b[0], b[1][:1], mesh, screening="community")
+    assert np.array_equal(res.membership["a"], solo_a.membership)
+    assert np.array_equal(res.membership["b"], solo_b.membership)
+    assert len(res.pass_stats["b"]) == 1
+
+
+def test_fleet_fallback_replay_parity(mesh):
+    """A config whose lanes never satisfy the fused accept predicate
+    (aggregation always proceeds) exercises the solo-replay fallback; the
+    replay must be invisible in the results."""
+    cfg = LouvainConfig(aggregation_tolerance=1.0, initial_tolerance=0.0)
+    cases = [_case(36), _case(37)]
+    router = FleetRouter(mesh, AXES, cfg, screening="community")
+    for tid, (init, _) in zip("ab", cases):
+        # Singleton warm start: the first step cannot converge in one
+        # sweep, so its lane misses the fused accept predicate.
+        router.admit(tid, init, prev=np.arange(init.n_cap, dtype=np.int32),
+                     b_cap=8)
+    res = router.serve({"a": cases[0][1], "b": cases[1][1]})
+    assert res.n_fallbacks > 0
+    for tid, (init, batches) in zip("ab", cases):
+        solo = louvain_dynamic_sharded(
+            init, mesh, AXES, batches,
+            prev=np.arange(init.n_cap, dtype=np.int32),
+            config=cfg, screening="community")
+        assert np.array_equal(res.membership[tid], solo.membership), tid
+
+
+@pytest.mark.slow
+def test_fleet_auto_screening_parity_and_stats(mesh):
+    init, batches = _case(38)
+    res = serve_fleet({"a": init}, {"a": batches}, mesh, AXES,
+                      screening="auto")
+    stats = res.pass_stats["a"]
+    assert stats[0].screening == "community" and stats[0].downgraded
+    assert all(s.screening in ("community", "vertex") for s in stats)
+    # Replaying the recorded modes through the solo path reproduces it:
+    # "auto" is host-side routing over concrete modes, never new semantics.
+    from repro.core.delta import apply_edge_batch
+
+    g = init
+    cur = louvain_dynamic_sharded(g, mesh, AXES, []).membership
+    for t, s in enumerate(stats):
+        solo = louvain_dynamic_sharded(
+            g, mesh, AXES, batches[t:t + 1], prev=cur,
+            screening=s.screening if s.screening else False)
+        cur = solo.membership
+        g, _ = apply_edge_batch(g, batches[t])
+    assert np.array_equal(res.membership["a"], cur)
+
+
+# -- whale migration ---------------------------------------------------------
+
+
+def test_whale_migrates_without_perturbing_buddy(mesh):
+    """The whale's insert stream overflows its envelope mid-stream: it must
+    migrate to a bigger bucket (its old lane freezes — possibly leaving an
+    all-frozen source bucket) and finish correctly, while a buddy tenant in
+    a DIFFERENT bucket sails through bit-for-bit untouched."""
+    whale_g, whale_b = _ring_whale()
+    buddy_g, buddy_b = _case(39, n_steps=len(whale_b), b_cap=8)
+    res = serve_fleet({"whale": whale_g, "buddy": buddy_g},
+                      {"whale": whale_b, "buddy": buddy_b},
+                      mesh, AXES, screening="community")
+    assert res.n_migrations >= 1
+    solo_w = _solo(whale_g, whale_b, mesh, screening="community")
+    solo_b = _solo(buddy_g, buddy_b, mesh, screening="community")
+    assert np.array_equal(res.membership["whale"], solo_w.membership)
+    assert np.array_equal(res.membership["buddy"], solo_b.membership)
+    # The whale landed in exactly one live bucket, in a bigger envelope.
+    homes = [env for env, tids in res.buckets.items() if "whale" in tids]
+    assert len(homes) == 1
+    assert homes[0].e_per_shard > 2 * whale_g.n_valid
+
+
+def test_whale_alone_migrates(mesh):
+    """One tenant, migrating mid-stream: the source bucket goes all-frozen
+    and later dispatches must still drain the remaining steps."""
+    whale_g, whale_b = _ring_whale()
+    res = serve_fleet({"w": whale_g}, {"w": whale_b}, mesh, AXES,
+                      screening="community")
+    assert res.n_migrations >= 1
+    solo = _solo(whale_g, whale_b, mesh, screening="community")
+    assert np.array_equal(res.membership["w"], solo.membership)

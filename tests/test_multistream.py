@@ -8,6 +8,7 @@ typed FleetCapacityOverflow when growth is off).
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -200,3 +201,95 @@ def test_batched_ladder_membership_padding_is_sentinel():
         for s, g in enumerate((g1, g2)):
             n = int(g.n_valid)
             assert np.all(mem[s, n:] == n_cap), (ladder, s)
+
+
+def test_batched_auto_screening_resolves_host_side(fleet):
+    """screening="auto" under vmap must NOT silently evaluate both
+    granularities on device: the driver resolves the mode host-side per
+    step from the previous step's worst touched fraction, records the
+    concrete choice (plus the first-step downgrade) in pass_stats, and the
+    result equals chaining the recorded modes explicitly."""
+    graphs, streams = fleet
+    prevs = [louvain(g).membership for g in graphs]
+    res = louvain_dynamic_batched(graphs, streams, prevs=prevs,
+                                  screening="auto")
+    modes = [s.screening for s in res.pass_stats]
+    assert len(modes) == len(streams[0])
+    assert all(m in ("community", "vertex") for m in modes)  # concrete
+    # First dispatch has no measurement: safe community mode, flagged.
+    assert modes[0] == "community"
+    assert res.pass_stats[0].downgraded
+    # Replaying the stream with the RECORDED mode per step must reproduce
+    # the auto run bit-for-bit (auto is routing, never results).
+    cur = list(graphs)
+    mems = list(prevs)
+    for t, mode in enumerate(modes):
+        step = louvain_dynamic_batched(
+            cur, [s[t:t + 1] for s in streams], prevs=mems, screening=mode)
+        mems = [step.membership[s] for s in range(len(cur))]
+        cur = [jax.tree.map(lambda x, s=s: x[s], step.graphs)
+               for s in range(len(cur))]
+    assert np.array_equal(res.membership, np.stack(mems))
+
+
+def test_batched_scan_auto_downgrade_is_explicit(fleet):
+    """scan_backend="auto" cannot be honored per-batch under vmap; the
+    driver must record the downgrade to the full scan instead of silently
+    keeping it, and results must equal the explicit full scan."""
+    graphs, streams = fleet
+    res_auto = louvain_dynamic_batched(
+        graphs, streams, config=LouvainConfig(scan_backend="auto"),
+        screening="community")
+    assert all(s.scan_backend == "full" for s in res_auto.pass_stats)
+    assert all(s.downgraded for s in res_auto.pass_stats)
+    res_full = louvain_dynamic_batched(
+        graphs, streams, config=LouvainConfig(scan_backend="full"),
+        screening="community")
+    assert not any(s.downgraded for s in res_full.pass_stats)
+    assert np.array_equal(res_auto.membership, res_full.membership)
+
+
+def _live_edge_multiset(gb, s, n_cap):
+    src = np.asarray(gb.src[s]); dst = np.asarray(gb.indices[s])
+    w = np.asarray(gb.weights[s])
+    live = src < n_cap
+    rows = np.stack([src[live], dst[live], w[live].astype(np.float64)])
+    return rows[:, np.lexsort(rows[::-1])]
+
+
+def test_midstream_overflow_replay_matches_oneshot_bitforbit():
+    """A batch overflowing MID-stream (earlier steps already committed,
+    step 0 even forced through the general pass loop by a bad warm start)
+    regrows the fleet and replays from the PRE-apply state: the partially
+    applied overflow batch must never be applied twice.  Pinned by
+    bit-for-bit equality of memberships AND live edge content against the
+    same stream served with ample capacity up front."""
+    full, _ = sbm_graph(n_communities=4, size=8, p_in=0.5, p_out=0.05,
+                        seed=5)
+    e = int(full.e_valid)
+    n = int(full.n_valid)
+    g = build_csr(np.asarray(full.src)[:e], np.asarray(full.indices)[:e],
+                  np.asarray(full.weights)[:e], n, e_cap=e + 6)
+
+    def batch(k, seed):
+        r = np.random.default_rng(seed)
+        s = r.integers(0, n, k)
+        d = (s + 1 + r.integers(0, n - 1, k)) % n
+        return make_edge_batch(s, d, np.ones(k, np.float32), g.n_cap,
+                               b_cap=8)
+
+    streams = [[batch(2, 1), batch(8, 2), batch(2, 3)],
+               [batch(2, 4), batch(8, 5), batch(2, 6)]]
+    prevs = [np.arange(n, dtype=np.int32)] * 2   # singletons: step 0 redoes
+    grown = louvain_dynamic_batched([g, g], streams, prevs=prevs)
+    assert grown.n_regrows >= 1
+
+    ample = build_csr(np.asarray(g.src)[:e], np.asarray(g.indices)[:e],
+                      np.asarray(g.weights)[:e], n,
+                      e_cap=int(grown.graphs.indices.shape[1]))
+    ref = louvain_dynamic_batched([ample, ample], streams, prevs=prevs)
+    assert ref.n_regrows == 0
+    assert np.array_equal(grown.membership, ref.membership)
+    for s in range(2):
+        assert np.array_equal(_live_edge_multiset(grown.graphs, s, g.n_cap),
+                              _live_edge_multiset(ref.graphs, s, g.n_cap)), s

@@ -225,9 +225,30 @@ def test_compare_dirs_end_to_end(tmp_path):
     bad = {"bench": "x", "rows": _rows(50, 1000)}
     (freshdir / "BENCH_x.json").write_text(json.dumps(bad))
     (freshdir / "BENCH_new.json").write_text(json.dumps(doc))  # new: ungated
-    regs, compared, notes = compare_dirs(str(basedir), str(freshdir), 0.25)
+    regs, compared, notes, errors = compare_dirs(str(basedir),
+                                                 str(freshdir), 0.25)
     assert compared == ["x"] and len(regs) == 1
     assert any("new" in n for n in notes)
+    assert errors == []
+
+
+def test_compare_dirs_named_but_missing_is_an_error(tmp_path):
+    """A --names entry with no artifact on either side must surface as an
+    error (exit 2 in main), never compare nothing and pass."""
+    basedir, freshdir = tmp_path / "base", tmp_path / "fresh"
+    basedir.mkdir(), freshdir.mkdir()
+    doc = {"bench": "x", "rows": _rows(100, 1000)}
+    (basedir / "BENCH_x.json").write_text(json.dumps(doc))
+    (freshdir / "BENCH_x.json").write_text(json.dumps(doc))
+    regs, compared, notes, errors = compare_dirs(
+        str(basedir), str(freshdir), 0.25, names=["x", "fleeet"])
+    assert compared == ["x"] and regs == []
+    assert len(errors) == 2 and all("fleeet" in e for e in errors)
+    # Unreadable named artifacts are errors too.
+    (freshdir / "BENCH_x.json").write_text("not json")
+    _, _, _, errors = compare_dirs(str(basedir), str(freshdir), 0.25,
+                                   names=["x"])
+    assert any("unreadable" in e for e in errors)
 
 
 # ----------------------------- forced-8-device acceptance (subprocess)
