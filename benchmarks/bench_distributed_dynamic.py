@@ -9,7 +9,11 @@ under BOTH communication backends (replicated ``gather`` round-trips vs the
 delta exchange of packed moved labels + top-k Sigma deltas), so the rows
 report edge updates/sec, speedup over cold recompute, mean delta-screened
 frontier fraction, the modularity gap on the final graph, and the measured
-bytes-on-wire per engine round per backend.
+bytes-on-wire per engine round per backend.  A third configuration per
+batch size runs gather under ``state_layout="hybrid"`` (owner-partitioned
+working state; rows carry ``state_layout`` / ``halo_bytes_per_round`` /
+``boundary_frac`` and measured ``pass_seconds_total``) — the acceptance
+contrast is its ``bytes_per_round`` against the replicated gather row.
 
 Every row also carries the skew-aware re-shard counters (``reshard_passes``,
 ``reshard_bytes``, ``max_shard_load_frac_before`` / ``_after`` — None when no
@@ -157,10 +161,17 @@ def run(small: bool = True, repeats: int = 3,
         t_cold, (g_end, mem_cold) = time_fn(recompute, repeats=repeats)
         q_cold = membership_modularity(g_end, mem_cold)
 
-        for backend in ("gather", "delta"):
+        # Both comm backends under the replicated layout, plus the hybrid
+        # owner-partitioned layout under gather — the combination where
+        # partitioning the working state pays (the delta wire's Sigma f32
+        # lanes make delta x hybrid a premium, documented in the README).
+        for backend, layout in (("gather", "replicated"),
+                                ("delta", "replicated"),
+                                ("gather", "hybrid")):
             t_dyn, dyn = time_fn(louvain_dynamic_sharded, init, mesh, axes,
                                  batches, prev=prev,
-                                 config=LouvainConfig(comm_backend=backend),
+                                 config=LouvainConfig(comm_backend=backend,
+                                                      state_layout=layout),
                                  repeats=repeats)
             q_dyn = membership_modularity(g_end, dyn.membership)
             fr = [s.frontier_fraction for s in dyn.batch_stats]
@@ -168,13 +179,18 @@ def run(small: bool = True, repeats: int = 3,
                 "graph": "sbm_holdout", "reshard": "none",
                 "batch_size": bs, "n_batches": n_batches,
                 "comm_backend": dyn.comm_backend,
+                "state_layout": dyn.state_layout,
                 "updates_per_s_dynamic": round(used / t_dyn, 1),
                 "updates_per_s_recompute": round(used / t_cold, 1),
                 "speedup": round(t_cold / t_dyn, 2),
                 "bytes_per_round": round(dyn.bytes_per_round, 1),
                 "bytes_on_wire": int(dyn.bytes_on_wire),
+                "halo_bytes_per_round": round(dyn.halo_bytes_per_round, 1),
+                "boundary_frac": (None if dyn.boundary_frac is None
+                                  else round(dyn.boundary_frac, 4)),
                 "comm_rounds": int(dyn.comm_rounds),
                 "comm_fallback_rounds": int(dyn.comm_fallback_rounds),
+                "pass_seconds_total": round(dyn.pass_seconds_total, 4),
                 "frontier_frac_mean": round(float(np.mean(fr)), 4),
                 "q_dynamic": round(q_dyn, 4),
                 "q_recompute": round(q_cold, 4),
@@ -201,11 +217,18 @@ def run(small: bool = True, repeats: int = 3,
             "graph": "skewed_clique", "reshard": mode,
             "batch_size": sbs, "n_batches": len(sk_batches),
             "comm_backend": dyn.comm_backend,
+            "state_layout": dyn.state_layout,
             "updates_per_s_dynamic": round(len(ss) / t_dyn, 1),
             "bytes_per_round": round(dyn.bytes_per_round, 1),
             "bytes_on_wire": int(dyn.bytes_on_wire),
+            "halo_bytes_per_round": round(dyn.halo_bytes_per_round, 1),
+            "boundary_frac": (None if dyn.boundary_frac is None
+                              else round(dyn.boundary_frac, 4)),
             "comm_rounds": int(dyn.comm_rounds),
             "comm_fallback_rounds": int(dyn.comm_fallback_rounds),
+            # Measured pass wall-clock: the number reshard="auto"'s priced
+            # tier win must actually show up in (none vs auto row).
+            "pass_seconds_total": round(dyn.pass_seconds_total, 4),
             "q_dynamic": round(membership_modularity(
                 sk_end, dyn.membership), 4),
             **_reshard_cols(dyn),
@@ -217,9 +240,11 @@ def run(small: bool = True, repeats: int = 3,
     print(f"skewed_clique coarse tier: none={e_none} auto={e_auto} "
           f"({'LOWER' if e_auto < e_none else 'not lower'})")
     emit_csv(rows, ["graph", "reshard", "batch_size", "n_batches",
-                    "comm_backend", "updates_per_s_dynamic",
-                    "updates_per_s_recompute", "speedup", "bytes_per_round",
-                    "bytes_on_wire", "comm_rounds", "comm_fallback_rounds",
+                    "comm_backend", "state_layout",
+                    "updates_per_s_dynamic", "updates_per_s_recompute",
+                    "speedup", "bytes_per_round", "bytes_on_wire",
+                    "halo_bytes_per_round", "boundary_frac", "comm_rounds",
+                    "comm_fallback_rounds", "pass_seconds_total",
                     "frontier_frac_mean", "q_dynamic", "q_recompute",
                     "reshard_passes", "reshard_bytes",
                     "max_shard_load_frac_before", "max_shard_load_frac_after",

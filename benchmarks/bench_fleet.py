@@ -19,7 +19,11 @@ dispatch, and a bit-for-bit parity flag against the sequential results
 is pinned by tests/test_fleet.py and the golden rows in
 tests/test_engine_equiv.py).  The acceptance row is ``n_tenants >= 4``:
 fleet must beat sequential (``speedup > 1``) — recorded machine-readably
-in ``BENCH_fleet.json``.
+in ``BENCH_fleet.json``.  A trailing ``kind="layout_head_to_head"`` pair
+serves the same T=4 tenants under the gather backend with the replicated
+vs hybrid state layout: identical memberships, lower ``bytes_per_dispatch``
+on the hybrid row (rows carry ``state_layout`` / ``halo_bytes_per_round``
+/ ``boundary_frac``).
 
 Executed as a script it forces 8 host devices (it must own the process
 before JAX initializes, which is why ``benchmarks.run`` launches it as a
@@ -42,7 +46,7 @@ import numpy as np
 from benchmarks.common import emit_csv, time_fn
 from repro.core.distributed_dynamic import louvain_dynamic_sharded
 from repro.core.fleet import serve_fleet
-from repro.core.louvain import louvain
+from repro.core.louvain import LouvainConfig, louvain
 from repro.data import sbm_holdout_stream
 
 
@@ -112,15 +116,64 @@ def run(small: bool = True, repeats: int = 3,
             "n_migrations": int(flt.n_migrations),
             "bytes_per_dispatch": round(flt.bytes_per_dispatch, 1),
             "bytes_on_wire": int(flt.bytes_on_wire),
+            "halo_bytes_per_round": round(flt.halo_bytes_per_round, 1),
+            "boundary_frac": (None if flt.boundary_frac is None
+                              else round(flt.boundary_frac, 4)),
             "comm_backend": flt.comm_backend,
+            "state_layout": flt.state_layout,
             "parity": parity,
         })
-    emit_csv(rows, ["n_tenants", "n_steps", "edges_streamed",
+
+    # State-layout head-to-head under the gather backend (hybrid's winning
+    # combination — the delta wire already ships labels sparse, so hybrid's
+    # per-community Sigma lanes only pay off against gather's dense psums).
+    # Same T=4 tenant set both ways: memberships must agree bit-for-bit and
+    # the hybrid dispatch wire must be the smaller one.
+    T = 4
+    cases = [_tenant(200 + t, small) for t in range(T)]
+    graphs = {f"t{t}": cases[t][0] for t in range(T)}
+    streams = {f"t{t}": cases[t][1] for t in range(T)}
+    prevs = {tid: louvain(g).membership for tid, g in graphs.items()}
+    edges = sum(c[2] for c in cases)
+    lay_out = {}
+    for layout in ("replicated", "hybrid"):
+        cfg = LouvainConfig(comm_backend="gather", state_layout=layout)
+        t_flt, flt = time_fn(serve_fleet, graphs, streams, mesh, axes,
+                             prevs=prevs, config=cfg,
+                             screening="community", repeats=repeats)
+        lay_out[layout] = flt
+        rows.append({
+            "n_tenants": T, "kind": "layout_head_to_head",
+            "n_steps": max(len(s) for s in streams.values()),
+            "edges_streamed": edges,
+            "t_fleet_s": round(t_flt, 4),
+            "updates_per_s_fleet": round(edges / t_flt, 1),
+            "n_buckets": len(flt.buckets),
+            "n_dispatches": int(flt.n_dispatches),
+            "n_fallbacks": int(flt.n_fallbacks),
+            "n_migrations": int(flt.n_migrations),
+            "bytes_per_dispatch": round(flt.bytes_per_dispatch, 1),
+            "bytes_on_wire": int(flt.bytes_on_wire),
+            "halo_bytes_per_round": round(flt.halo_bytes_per_round, 1),
+            "boundary_frac": (None if flt.boundary_frac is None
+                              else round(flt.boundary_frac, 4)),
+            "comm_backend": flt.comm_backend,
+            "state_layout": flt.state_layout,
+            "parity": all(np.array_equal(flt.membership[t],
+                                         lay_out["replicated"].membership[t])
+                          for t in graphs),
+        })
+    hb = rows[-1]["bytes_per_dispatch"]
+    rb = rows[-2]["bytes_per_dispatch"]
+    print(f"gather layout head-to-head bytes/dispatch: replicated={rb} "
+          f"hybrid={hb} ({'LOWER' if hb < rb else 'not lower'})")
+    emit_csv(rows, ["n_tenants", "kind", "n_steps", "edges_streamed",
                     "t_sequential_s", "t_fleet_s",
                     "updates_per_s_sequential", "updates_per_s_fleet",
                     "speedup", "n_buckets", "n_dispatches", "n_fallbacks",
                     "n_migrations", "bytes_per_dispatch", "bytes_on_wire",
-                    "comm_backend", "parity"])
+                    "halo_bytes_per_round", "boundary_frac", "comm_backend",
+                    "state_layout", "parity"])
     return rows
 
 

@@ -11,6 +11,9 @@ throughput metric regresses beyond the threshold:
     than ``threshold`` (default 25%) below the baseline.
   * ``bytes_per_round``  — lower is better; fail when fresh grows more
     than ``threshold`` above the baseline.
+  * ``bytes_per_dispatch`` — lower is better (the fleet analogue: fleet
+    rows have no ``bytes_per_round``, so without this a PR could inflate
+    the batched dispatch wire unnoticed).
 
 Rows or files present on only one side are reported but never fail the
 gate (PRs add new benchmarks; deletions show up in review) — UNLESS the
@@ -35,13 +38,13 @@ from typing import Dict, List, Optional, Tuple
 # match key is the subset present in the row, in this order.
 IDENTITY_FIELDS = (
     "graph", "kind", "metric", "artifact", "config", "comm_backend",
-    "agg_backend", "ladder", "reshard", "batch_size", "n_batches",
-    "n_streams", "n_steps", "pass", "work_cap",
+    "state_layout", "agg_backend", "ladder", "reshard", "batch_size",
+    "n_batches", "n_streams", "n_steps", "n_tenants", "pass", "work_cap",
 )
 
 # (prefix-match?, field, higher_is_better)
 HIGHER_BETTER_PREFIX = "updates_per_s_"
-LOWER_BETTER_FIELDS = ("bytes_per_round",)
+LOWER_BETTER_FIELDS = ("bytes_per_round", "bytes_per_dispatch")
 
 
 def row_key(row: dict) -> Tuple:

@@ -94,9 +94,19 @@ def main():
           f"({t_seq / t_fleet:.2f}x the fleet's wall time)")
 
     print("\nbucket layout after the serve:")
+    # Each bucket also resolves its own STATE layout (LouvainConfig.
+    # state_layout, default "replicated"): under "auto"/"hybrid" the
+    # router keeps working state owner-partitioned when the worst
+    # admitted tenant's measured boundary fraction is small enough,
+    # trading dense per-round psums for boundary-mover halo lanes.
     for env, tids in flt.buckets.items():
+        lay = flt.bucket_layouts.get(env, flt.state_layout)
         print(f"  v/shard={env.v_per_shard:4d} e/shard={env.e_per_shard:5d} "
-              f"b_cap={env.b_cap}: {', '.join(tids)}")
+              f"b_cap={env.b_cap} state={lay}: {', '.join(tids)}")
+    frac = ("n/a" if flt.boundary_frac is None
+            else f"{flt.boundary_frac:.2f}")
+    print(f"  summary layout={flt.state_layout}  halo bytes="
+          f"{flt.halo_bytes}  worst boundary frac={frac}")
 
     print("\nper-tenant results (fleet == solo sharded, bit-for-bit):")
     for tid in graphs:

@@ -143,6 +143,74 @@ def resolve_comm_backend(backend: str, n_shards: int) -> str:
 
 
 # ---------------------------------------------------------------------------
+# State-layout policy (the ``LouvainConfig.state_layout`` knob).
+#
+# The sharded move round has two STATE layouts, orthogonal to the comm
+# backend (both pinned bit-for-bit against the committed goldens):
+#   "replicated" — every shard holds (and keeps fresh) the full replicated
+#                  membership / Sigma / sizes / K arrays; reconstruction
+#                  and per-lane memory traffic scale with n_pad.
+#   "hybrid"     — the P3 hybrid-parallel layout: topology stays sharded,
+#                  per-vertex working state is OWNER-PARTITIONED, and only
+#                  the boundary/halo labels (owned vertices with a live
+#                  remote neighbour, ``comm.boundary_mask``) plus
+#                  aggregated touched-community (Sigma, size) deltas are
+#                  exchanged per round, so per-round payload scales with
+#                  |boundary movers| + |touched communities| instead of n.
+#                  One owned-membership all_gather per PHASE re-replicates
+#                  the output for the unchanged downstream consumers.
+# ---------------------------------------------------------------------------
+
+#: Accepted values of ``LouvainConfig.state_layout``.
+STATE_LAYOUTS = ("auto", "replicated", "hybrid")
+
+#: ``"auto"`` engages the hybrid layout only when the measured boundary
+#: fraction (boundary vertices / live vertices, measured host-side at
+#: partition time) is at most this threshold: a mostly-interior partition
+#: is where shipping boundary labels beats shipping dense state.  Above
+#: it, nearly every vertex publishes anyway and replicated reconstruction
+#: is the simpler bargain.
+HYBRID_BOUNDARY_FRAC_MAX = 0.5
+
+#: Touched-community lane capacity as a multiple of the mover cap: each
+#: mover touches at most two communities (the one it leaves and the one it
+#: joins), so 2x the mover cap never under-provisions a within-cap round.
+HYBRID_TOUCHED_CAP_FRAC = 2
+
+
+def hybrid_touched_cap(v_per: int) -> int:
+    """Static touched-community lane capacity for a hybrid-DELTA round.
+
+    Sized off the same mover cap as the delta exchange (every mover touches
+    <= 2 communities); a round whose touched set overflows it takes the
+    dense resync fallback, exactly like a mover overflow.
+    """
+    return HYBRID_TOUCHED_CAP_FRAC * delta_move_cap(v_per)
+
+
+def resolve_state_layout(layout: str, n_shards: int,
+                         boundary_frac: Optional[float] = None) -> str:
+    """Map the ``state_layout`` knob to a concrete layout for a mesh.
+
+    ``"auto"`` engages ``"hybrid"`` on real multi-shard meshes whose
+    MEASURED boundary fraction is at most ``HYBRID_BOUNDARY_FRAC_MAX``
+    (``None`` — no measurement available — stays replicated), mirroring
+    ``resolve_comm_backend``'s shape.  Explicit values pass through
+    (``"hybrid"`` on one shard has an empty boundary and collapses to the
+    shard-local arithmetic — that is how the golden matrix pins it).
+    """
+    if layout not in STATE_LAYOUTS:
+        raise ValueError(f"state_layout must be one of {STATE_LAYOUTS}; "
+                         f"got {layout!r}")
+    if layout == "auto":
+        if (n_shards > 1 and boundary_frac is not None
+                and boundary_frac <= HYBRID_BOUNDARY_FRAC_MAX):
+            return "hybrid"
+        return "replicated"
+    return layout
+
+
+# ---------------------------------------------------------------------------
 # Coarse-pass capacity ladder (the ``LouvainConfig.use_ladder`` knob).
 #
 # Aggregation shrinks the live graph 10-100x, but buffers keep their original

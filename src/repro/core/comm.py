@@ -20,9 +20,15 @@ what changed, built from the pure, mesh-free primitives in this module:
     shipping primitive for per-community payloads a receiver CANNOT
     reconstruct (e.g. Sigma deltas on topologies that do not replicate
     vertex weights).
+  * ``boundary_mask`` — the halo-set constructor of the HYBRID state
+    layout: which owned vertices have a live remote neighbour and must
+    therefore publish their membership label each round.  Everything else
+    an owned vertex does stays shard-local under hybrid.
   * ``comm_plan`` / ``phase_bytes`` — host-side bytes-on-wire accounting
     from static shapes + measured round counts (the ``BENCH_distdyn.json``
-    ``bytes_per_round`` column).
+    ``bytes_per_round`` column), including the hybrid layout's
+    boundary-mover and touched-community lanes and its one-per-phase
+    membership resync fold.
 
 Everything here is plain jnp on one shard's arrays — no collectives — so the
 whole layer is property-testable without a mesh (tests/test_comm_delta.py).
@@ -139,6 +145,38 @@ def topk_touched_deltas(delta: jax.Array, touched: jax.Array, cap: int,
     return c_buf, d_buf, jnp.sum(live.astype(jnp.int32))
 
 
+def boundary_mask(src_l: jax.Array, dst_l: jax.Array, v0, v_per: int,
+                  sent: int) -> jax.Array:
+    """Owned vertices with at least one live remote neighbour — the halo
+    publishers of the hybrid state layout.
+
+    ``src_l`` / ``dst_l`` are ONE shard's directed slot arrays (sentinel =
+    ``sent`` marks dead slots), ``v0`` its first owned vertex id.  Returns a
+    ``(v_per,)`` bool mask: ``mask[i]`` iff vertex ``v0 + i`` owns a live
+    slot whose dst lies outside ``[v0, v0 + v_per)``.  Because the
+    partition places slot ``(u, v)`` on owner(u) AND ``(v, u)`` on
+    owner(v), any remote dst a shard reads is, by this same construction
+    on its owner, a boundary vertex there — so per-round label exchange
+    restricted to boundary movers keeps every cross-shard read fresh.
+    Pure jnp on one shard's arrays; property-tested without a mesh.
+    """
+    live = (src_l < sent) & (dst_l < sent)
+    remote = live & ((dst_l < v0) | (dst_l >= v0 + v_per))
+    loc = jnp.clip(jnp.where(remote, src_l - v0, v_per), 0, v_per)
+    return (jnp.zeros((v_per + 1,), bool).at[loc].set(True)[:v_per]
+            & (jnp.arange(v_per) + v0 < sent))
+
+
+def size_delta_width(v_per: int) -> int:
+    """Lane width for a per-community SIZE delta under the hybrid layout.
+
+    One round's size delta at a community is bounded by the shard's owned
+    movers, so it lives in ``[-v_per, v_per]`` and ships offset-encoded as
+    ``delta + v_per`` in ``label_bits(2 * v_per + 1)`` bits.
+    """
+    return label_bits(2 * int(v_per) + 1)
+
+
 class CommPlan(NamedTuple):
     """Static bytes-on-wire accounting for ONE engine round.
 
@@ -158,32 +196,85 @@ class CommPlan(NamedTuple):
     lab_width: int
     round_bytes: int
     fallback_bytes: int
+    #: State layout the plan prices ("replicated" | "hybrid").  Hybrid
+    #: replaces the dense per-round state exchange with boundary-mover
+    #: label pairs plus aggregated touched-community (Sigma, size) delta
+    #: lanes, and adds ONE owned-membership resync fold per phase.
+    state_layout: str = "replicated"
+    #: Touched-community lane capacity of a hybrid round (0 otherwise).
+    touched_cap: int = 0
+    #: Per-round share spent on the boundary-mover label lanes (all
+    #: shards) — the BENCH ``halo_bytes_per_round`` column.
+    halo_round_bytes: int = 0
+    #: One-per-phase fixed cost (the hybrid end-of-phase membership
+    #: resync all_gather); ``phase_bytes`` adds it once per phase.
+    phase_fixed_bytes: int = 0
 
 
 def comm_plan(backend: str, n_shards: int, v_per: int, n_pad: int,
-              move_cap: int = 0) -> CommPlan:
+              move_cap: int = 0, *, state_layout: str = "replicated",
+              touched_cap: int = 0) -> CommPlan:
     """Price one engine round for a layout under ``backend``.
 
-    Per shard per round the gather backend ships its owned membership slice
-    (int32) + moved mask (bool) + two dense O(n_pad) psums (Sigma f32 and
-    community sizes int32) + the dq scalar; the delta backend replaces all
-    of that with ONE fused wire word — the mover count + the local dq +
-    the bit-packed mover lanes (fused (index, label) pairs when they fit
-    an int32).  Sigma and community sizes are reconstructed locally from
-    the replicated vertex weights and membership, and the moved mask is a
-    label compare, so no per-community payload travels at all.  On
-    overflow the wire has already travelled, then the dense comm + Sigma
-    exchange runs on top.
+    REPLICATED layout: per shard per round the gather backend ships its
+    owned membership slice (int32) + moved mask (bool) + two dense O(n_pad)
+    psums (Sigma f32 and community sizes int32) + the dq scalar; the delta
+    backend replaces all of that with ONE fused wire word — the mover count
+    + the local dq + the bit-packed mover lanes (fused (index, label) pairs
+    when they fit an int32).  Sigma and community sizes are reconstructed
+    locally from the replicated vertex weights and membership, and the
+    moved mask is a label compare, so no per-community payload travels at
+    all.  On overflow the wire has already travelled, then the dense comm
+    + Sigma exchange runs on top.
+
+    HYBRID layout (``state_layout="hybrid"``): per-vertex working state
+    stays owner-partitioned (K_i is never replicated), so every round ships
+    exactly one fused word of (a) bit-packed BOUNDARY-mover (index, label)
+    pairs — capacity ``move_cap`` — and (b) aggregated touched-community
+    Sigma/size delta lanes — capacity ``touched_cap`` — plus a 12-byte
+    header (two counts + dq).  Under the gather backend the caps are the
+    worst case (``v_per`` / ``2 * v_per``) so a hybrid-gather round can
+    never overflow; under delta they are the policy caps and overflow takes
+    a dense resync fallback (owned comm slice + moved mask + two dense
+    psums on top of the wire).  ``phase_fixed_bytes`` prices the one
+    end-of-phase owned-membership all_gather that re-replicates the phase
+    output for the (unchanged) renumber/aggregation consumers.
     """
     rep = n_pad + 1
+    if state_layout not in ("replicated", "hybrid"):
+        raise ValueError(f"comm_plan state_layout must be 'replicated' or "
+                         f"'hybrid'; got {state_layout!r}")
+    if backend not in ("gather", "delta"):
+        raise ValueError(f"comm_plan backend must be 'gather' or 'delta'; "
+                         f"got {backend!r}")
+    if state_layout == "hybrid":
+        iw = label_bits(v_per + 1)
+        lw = label_bits(n_pad + 1)
+        if backend == "gather":      # worst-case caps: overflow-free
+            move_cap, touched_cap = v_per, 2 * v_per
+        if iw + lw <= 31:
+            mover_lanes = packed_lanes(move_cap, iw + lw)
+        else:
+            mover_lanes = (packed_lanes(move_cap, iw)
+                           + packed_lanes(move_cap, lw))
+        tid_lanes = packed_lanes(touched_cap, lw)
+        siz_lanes = packed_lanes(touched_cap, size_delta_width(v_per))
+        round_b = 12 + 4 * (mover_lanes + tid_lanes + touched_cap
+                            + siz_lanes)
+        if backend == "gather":
+            fallback = round_b
+        else:
+            fallback = round_b + v_per * 4 + v_per + 2 * rep * 4
+        return CommPlan(backend, n_shards, move_cap, iw, lw,
+                        n_shards * round_b, n_shards * fallback,
+                        state_layout="hybrid", touched_cap=touched_cap,
+                        halo_round_bytes=n_shards * 4 * mover_lanes,
+                        phase_fixed_bytes=n_shards * v_per * 4)
     if backend == "gather":
         per_shard = (v_per * 4 + v_per * 1 + rep * 4 + 4   # comm+moved+
                      + rep * 4)                            # Sigma+dq+sizes
         return CommPlan("gather", n_shards, 0, 0, 0,
                         n_shards * per_shard, n_shards * per_shard)
-    if backend != "delta":
-        raise ValueError(f"comm_plan backend must be 'gather' or 'delta'; "
-                         f"got {backend!r}")
     iw = label_bits(v_per + 1)
     lw = label_bits(n_pad + 1)
     if iw + lw <= 31:
@@ -215,7 +306,10 @@ def phase_bytes(plan: CommPlan, rounds: int, fallback_rounds: int = 0,
     """Total bytes on the wire for a move phase of ``rounds`` rounds, of
     which ``fallback_rounds`` overflowed the delta caps.  ``reshard_cost``
     adds the one-time pass-boundary re-shard bytes (``reshard_bytes``)
-    when the pass re-balanced its owner ranges."""
+    when the pass re-balanced its owner ranges.  A hybrid plan's
+    ``phase_fixed_bytes`` (the end-of-phase membership resync fold) is
+    added once whenever the phase ran at least one round."""
     fb = min(int(fallback_rounds), int(rounds))
+    fixed = plan.phase_fixed_bytes if int(rounds) > 0 else 0
     return ((int(rounds) - fb) * plan.round_bytes + fb * plan.fallback_bytes
-            + int(reshard_cost))
+            + int(reshard_cost) + fixed)

@@ -30,6 +30,7 @@ launch/dryrun.py.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple, Tuple
 
 import jax
@@ -40,9 +41,10 @@ from jax.experimental.shard_map import shard_map
 
 from repro import compat
 
-from repro.core.comm import (CommPlan, comm_plan, compact_movers, label_bits,
-                             pack_bits, packed_lanes, phase_bytes,
-                             unpack_bits)
+from repro.core.comm import (CommPlan, boundary_mask, comm_plan,
+                             compact_movers, label_bits, pack_bits,
+                             packed_lanes, phase_bytes, size_delta_width,
+                             topk_touched_deltas, unpack_bits)
 from repro.core.engine import (ConstrainedScanner, EngineConfig, MoveEngine,
                                MoveState, mask_cross_outer_slots,
                                sanitize_outer)
@@ -425,18 +427,280 @@ class DeltaShardedScanner(ShardedScanner):
                 over.astype(jnp.int32), dq)
 
 
+class HybridShardedScanner(DeltaShardedScanner):
+    """Owner-partitioned working state, replicated topology (P3 hybrid).
+
+    The replicated-state scanners above rebuild the FULL ``(n_pad + 1,)``
+    membership on every shard every round, so per-round payload and
+    per-lane working state both scale with n.  This backend keeps
+    membership fresh only where scanning actually reads it —
+
+      * the shard's OWN ``v_per_shard`` block (``comm_local`` slices), and
+      * each remote shard's BOUNDARY set: vertices with at least one
+        cross-shard edge (``repro.core.comm.boundary_mask``).  Symmetric
+        slot placement guarantees every remote ``dst_l`` a shard reads is
+        in its owner's boundary, so publishing boundary movers keeps all
+        cross-shard reads fresh; remote INTERIOR labels go stale and are
+        provably never read mid-phase.
+
+    K_i stays fully partitioned (only ``k_local`` is ever indexed), so
+    receivers cannot rebuild Sigma from mover ids the way the delta
+    backend does.  Instead each sender folds its OWN movers (interior and
+    boundary alike) into per-community (Sigma, size) deltas locally and
+    ships the compacted touched-community triples — ids, f32 Sigma deltas,
+    offset-encoded size deltas (``size_delta_width``) — alongside the
+    boundary movers, all fused into the backend's single uint32 wire word
+    per round.  Replicated Sigma/sizes then advance by scatter-adds of the
+    gathered deltas: identical f32 ops at touched communities and
+    untouched slots left byte-identical (the dense paths add +0.0 there),
+    so one-shard runs reproduce the committed goldens bit for bit and
+    multi-shard runs match on integer-weight graphs.
+
+    The phase ends with ONE owned-slice ``all_gather`` (``resync_comm``,
+    priced as the plan's ``phase_fixed_bytes``) that re-replicates the
+    final membership, so renumbering, aggregation, refinement's outer
+    fold, warm restarts and fleet replay all run unchanged downstream —
+    hybrid joins the golden matrix, never forks it.
+
+    Flavors: the delta flavor (this class) keeps the policy mover cap and
+    ``hybrid_touched_cap`` with the dense-resync ``lax.cond`` fallback;
+    the gather flavor (`HybridGatherScanner`) prices worst-case caps
+    (every vertex a boundary mover, every community touched) so it is
+    overflow-free and skips the branch entirely — still far below the
+    replicated gather backend's five dense O(n_pad) collectives.
+    """
+
+    can_overflow = True     # delta flavor: policy caps + dense fallback
+
+    def __init__(self, axes, spec: ShardedGraphSpec, src_l, dst_l, w_l,
+                 k, m):
+        super().__init__(axes, spec, src_l, dst_l, w_l, k, m)
+        from repro.configs.louvain_arch import hybrid_touched_cap
+        v_per, sent = spec.v_per_shard, spec.sentinel
+        if self.can_overflow:
+            self.touched_cap = hybrid_touched_cap(v_per)
+        else:
+            # Worst-case caps: every owned vertex a boundary mover, each
+            # touching a distinct old + new community.  Mover lane widths
+            # recomputed to match (DeltaShardedScanner sized them for the
+            # policy cap).
+            self.move_cap = v_per
+            self.touched_cap = 2 * v_per
+            if self.pair_width is not None:
+                self.mover_lanes = packed_lanes(self.move_cap,
+                                                self.pair_width)
+            else:
+                self.mover_lanes = (
+                    packed_lanes(self.move_cap, self.idx_width)
+                    + packed_lanes(self.move_cap, self.lab_width))
+        self.siz_width = size_delta_width(v_per)
+        # The halo set: computed ONCE per phase from the sharded topology
+        # (scanner construction), which also re-derives it at aggregation
+        # and re-shard boundaries for free — those rebuild the scanner.
+        self.bnd_own = boundary_mask(src_l, dst_l, self.v0, v_per, sent)
+
+    def resync_comm(self, comm):
+        """Phase-end re-replication: ONE all_gather of the fresh owned
+        slices (stale remote-interior labels overwritten), so everything
+        downstream of the move phase sees replicated state again."""
+        return self.gather_comm(self.comm_local(comm))
+
+    def exchange_round(self, comm, sigma, sizes, comm_l, do_move, best_c,
+                       dq_local):
+        axes, spec = self.axes, self.spec
+        v_per, sent = spec.v_per_shard, self.sentinel
+        S, mcap, tcap = spec.n_shards, self.move_cap, self.touched_cap
+        lab_w = self.lab_width
+
+        # Own movers — ALL of them, interior included — apply locally.
+        comm_own_new = jnp.where(do_move, best_c, comm_l)
+
+        # Sender-side per-community fold from the PARTITIONED K_i: only
+        # k_local is read, in the same segment-sum order the dense paths
+        # use, so the shipped deltas reproduce their arithmetic exactly.
+        moved_k = jnp.where(do_move, self.k_local, 0.0)
+        tgt = jnp.where(do_move, best_c, sent)
+        old = jnp.where(do_move, comm_l, sent)
+        add = jax.ops.segment_sum(moved_k, tgt, num_segments=sent + 1)
+        sub = jax.ops.segment_sum(moved_k, old, num_segments=sent + 1)
+        cnt_add = jax.ops.segment_sum(do_move.astype(jnp.int32), tgt,
+                                      num_segments=sent + 1)
+        cnt_sub = jax.ops.segment_sum(do_move.astype(jnp.int32), old,
+                                      num_segments=sent + 1)
+        touched = (cnt_add > 0) | (cnt_sub > 0)
+        # Same compaction for both delta kinds (identical c_buf order).
+        c_buf, ds_buf, n_t = topk_touched_deltas(add - sub, touched, tcap,
+                                                 sent)
+        _, dz_buf, _ = topk_touched_deltas(cnt_add - cnt_sub, touched,
+                                           tcap, sent)
+
+        # Only BOUNDARY movers travel; receivers rebuild global ids from
+        # the sender's row index, so no id lists ever cross the wire.
+        bnd_move = do_move & self.bnd_own
+        if self.pair_width is not None:
+            pv = (jnp.arange(v_per, dtype=jnp.int32)
+                  | (best_c << self.idx_width))
+            _, pair_buf, n_bnd = compact_movers(
+                bnd_move, pv, mcap, jnp.int32(v_per))
+            mover_lanes = pack_bits(pair_buf, self.pair_width)
+        else:
+            idx_buf, lab_buf, n_bnd = compact_movers(
+                bnd_move, best_c, mcap, jnp.int32(sent))
+            mover_lanes = jnp.concatenate([
+                pack_bits(idx_buf, self.idx_width),
+                pack_bits(lab_buf, self.lab_width)])
+
+        # ONE fused collective: [boundary-mover count, touched count, dq]
+        # header + boundary movers + touched ids + Sigma f32 deltas +
+        # offset-encoded size deltas (delta + v_per, always nonnegative).
+        wire = jnp.concatenate([
+            jnp.stack([n_bnd.astype(jnp.uint32), n_t.astype(jnp.uint32),
+                       jax.lax.bitcast_convert_type(
+                           dq_local.astype(jnp.float32), jnp.uint32)]),
+            mover_lanes,
+            pack_bits(c_buf, lab_w),
+            jax.lax.bitcast_convert_type(ds_buf, jnp.uint32),
+            pack_bits(dz_buf + v_per, self.siz_width),
+        ])
+        g = jax.lax.all_gather(wire, axes)                  # (S, W)
+        dq = jnp.sum(jax.lax.bitcast_convert_type(g[:, 2], jnp.float32))
+        L_m, L_t = self.mover_lanes, packed_lanes(tcap, lab_w)
+        g_mov = g[:, 3:3 + L_m]
+        g_tid = g[:, 3 + L_m:3 + L_m + L_t]
+        g_sig = g[:, 3 + L_m + L_t:3 + L_m + L_t + tcap]
+        g_siz = g[:, 3 + L_m + L_t + tcap:]
+
+        def apply_deltas(_):
+            # Membership: own block from the local update, remote boundary
+            # movers scattered in (dead buffer slots route out of bounds
+            # and drop); remote interior stays stale — never read.
+            comm_base = jax.lax.dynamic_update_slice(comm, comm_own_new,
+                                                     (self.v0,))
+            if self.pair_width is not None:
+                pairs = jax.vmap(
+                    lambda r: unpack_bits(r, self.pair_width, mcap))(g_mov)
+                idxs = pairs & ((1 << self.idx_width) - 1)
+                labs = pairs >> self.idx_width
+            else:
+                li = packed_lanes(mcap, self.idx_width)
+                idxs = jax.vmap(lambda r: unpack_bits(
+                    r, self.idx_width, mcap))(g_mov[:, :li])
+                labs = jax.vmap(lambda r: unpack_bits(
+                    r, self.lab_width, mcap))(g_mov[:, li:])
+            live = idxs < v_per
+            base = jnp.arange(S, dtype=jnp.int32)[:, None] * v_per
+            gid = jnp.where(live, base + idxs, sent + 1)
+            lab = jnp.minimum(labs, sent)
+            comm_new = comm_base.at[gid.reshape(-1)].set(lab.reshape(-1))
+
+            # Sigma / sizes: scatter-add every shard's touched deltas.
+            # Empty buffer slots carry (id = sent, delta = 0) — adding
+            # +0.0 / +0 there is byte-safe (Sigma holds sums of
+            # nonnegative K_i, never -0.0).
+            cs = jnp.minimum(jax.vmap(
+                lambda r: unpack_bits(r, lab_w, tcap))(g_tid),
+                sent).reshape(-1)
+            sig_d = jax.lax.bitcast_convert_type(
+                g_sig, jnp.float32).reshape(-1)
+            siz_d = (jax.vmap(lambda r: unpack_bits(
+                r, self.siz_width, tcap))(g_siz) - v_per).reshape(-1)
+            sigma_new = sigma.at[cs].add(sig_d)
+            sizes_new = sizes.at[cs].add(siz_d)
+
+            # Fresh everywhere this mask is read: own block and remote
+            # boundary (symmetric placement routes every ``dst_l`` there);
+            # stale interior compares equal -> False, which is correct
+            # for the LOCAL frontier mark.
+            moved_g = comm_new != comm
+            return comm_new, sigma_new, sizes_new, moved_g
+
+        if not self.can_overflow:
+            # Gather flavor: worst-case caps -> no overflow branch at all.
+            comm_new, sigma_new, sizes_new, moved_g = apply_deltas(0)
+            over = jnp.zeros((), bool)
+        else:
+            # Counts are gathered, so the branch choice is replicated.
+            over = ((jnp.max(g[:, 0].astype(jnp.int32)) > mcap)
+                    | (jnp.max(g[:, 1].astype(jnp.int32)) > tcap))
+
+            def dense(_):
+                # Full resync: owned slices are fresh by construction, so
+                # one gather rebuilds replicated state exactly.  The moved
+                # mask must come from do_move — the stale pre-round comm
+                # makes the label compare unsound here.
+                comm_full = self.gather_comm(comm_own_new)
+                sigma_full = self.combine_sigma(sigma, add, sub)
+                sizes_full = sizes + self.psum(cnt_add - cnt_sub)
+                return (comm_full, sigma_full, sizes_full,
+                        self.gather_mask(do_move))
+
+            comm_new, sigma_new, sizes_new, moved_g = jax.lax.cond(
+                over, dense, apply_deltas, 0)
+        return (comm_new, sigma_new, sizes_new, moved_g,
+                over.astype(jnp.int32), dq)
+
+
+class HybridGatherScanner(HybridShardedScanner):
+    """Hybrid state layout over the gather comm backend: worst-case caps
+    (every owned vertex a boundary mover, ``2 * v_per`` touched
+    communities) make the exchange overflow-free, so the round is still
+    ONE fused collective — ~4-5x fewer bytes than replicated gather's
+    five dense O(n_pad) collectives at the bench layout."""
+
+    can_overflow = False
+
+
 #: comm_backend -> engine scanner class (concrete backends only; "auto"
 #: resolves through repro.configs.louvain_arch.resolve_comm_backend).
 COMM_SCANNERS = {"gather": ShardedScanner, "delta": DeltaShardedScanner}
 
+#: comm_backend -> scanner under the HYBRID state layout ("auto" resolves
+#: through repro.configs.louvain_arch.resolve_state_layout).
+HYBRID_SCANNERS = {"gather": HybridGatherScanner,
+                   "delta": HybridShardedScanner}
 
-def sharded_comm_plan(spec: ShardedGraphSpec, backend: str) -> CommPlan:
+
+def _scanner_cls(backend: str, state_layout: str):
+    """Engine scanner for a (comm backend, state layout) pair — concrete
+    values only; policies resolve in the drivers."""
+    table = HYBRID_SCANNERS if state_layout == "hybrid" else COMM_SCANNERS
+    return table[backend]
+
+
+def sharded_comm_plan(spec: ShardedGraphSpec, backend: str,
+                      state_layout: str = "replicated") -> CommPlan:
     """Bytes-on-wire plan for one engine round of ``spec`` under
-    ``backend`` (policy caps applied — ONE home for the accounting the
-    pass-loop stats and the distdyn benchmark report)."""
-    from repro.configs.louvain_arch import delta_move_cap
+    ``backend`` x ``state_layout`` (policy caps applied — ONE home for the
+    accounting the pass-loop stats and the distdyn benchmark report)."""
+    from repro.configs.louvain_arch import (delta_move_cap,
+                                            hybrid_touched_cap)
     return comm_plan(backend, spec.n_shards, spec.v_per_shard, spec.n_pad,
-                     delta_move_cap(spec.v_per_shard))
+                     delta_move_cap(spec.v_per_shard),
+                     state_layout=state_layout,
+                     touched_cap=hybrid_touched_cap(spec.v_per_shard))
+
+
+def measure_boundary_frac(src_g, dst_g, spec: ShardedGraphSpec,
+                          n_live: int | None = None) -> float:
+    """Host-side boundary fraction of a partitioned layout: the share of
+    live (edge-owning) vertices with at least one cross-shard slot.
+
+    This is the measurement the ``state_layout="auto"`` policy consumes
+    (``repro.configs.louvain_arch.resolve_state_layout``), mirroring how
+    the measured mesh size drives ``resolve_comm_backend`` — hybrid only
+    engages when the halo the layout would replicate is small.  ``n_live``
+    overrides the denominator with the caller's live-vertex count;
+    otherwise vertices owning no live slot are excluded from both sides.
+    """
+    src = np.asarray(src_g).ravel()
+    dst = np.asarray(dst_g).ravel()
+    sent, v_per = spec.sentinel, spec.v_per_shard
+    live = (src < sent) & (dst < sent)
+    if n_live is None:
+        n_live = int(np.unique(src[live]).size)
+    remote = live & (src // v_per != dst // v_per)
+    n_bnd = int(np.unique(src[remote]).size)
+    return n_bnd / max(int(n_live), 1)
 
 
 def _round_body(axes, spec, src_l, dst_l, w_l, comm, sigma, k,
@@ -466,6 +730,7 @@ def make_distributed_move(
     gate_fraction: int = 2,
     use_pruning: bool = True,
     comm_backend: str = "gather",
+    state_layout: str = "replicated",
 ):
     """Build the jit'd distributed local-moving phase for a fixed mesh/layout.
 
@@ -478,15 +743,21 @@ def make_distributed_move(
     ``frontier_g`` is a replicated (n_pad + 1,) seed-frontier mask — all-ones
     for the static start, the delta-screened set for warm streaming starts
     (each shard slices its owned v_per entries).  ``comm_backend`` picks the
-    per-round exchange (``COMM_SCANNERS``; "auto" resolves per mesh).
+    per-round exchange (``COMM_SCANNERS``; "auto" resolves per mesh) and
+    ``state_layout`` the working-state placement (``HYBRID_SCANNERS`` under
+    "hybrid"; "auto" without a measured boundary fraction stays
+    replicated).  Hybrid phases resync the membership once before
+    returning, so outputs are replicated under every layout.
     """
-    from repro.configs.louvain_arch import resolve_comm_backend
+    from repro.configs.louvain_arch import (resolve_comm_backend,
+                                            resolve_state_layout)
 
     edge_spec = P(axes)      # edge arrays: sharded along dim 0 over all axes
     rep = P()                # replicated state
 
-    scanner_cls = COMM_SCANNERS[
-        resolve_comm_backend(comm_backend, spec.n_shards)]
+    scanner_cls = _scanner_cls(
+        resolve_comm_backend(comm_backend, spec.n_shards),
+        resolve_state_layout(state_layout, spec.n_shards))
     config = EngineConfig(max_iterations=max_iterations,
                           use_pruning=use_pruning,
                           gate_fraction=gate_fraction)
@@ -500,7 +771,9 @@ def make_distributed_move(
             ) & scanner.frontier_valid
             st = MoveEngine(scanner, config).run(comm, sigma, frontier0,
                                                  tolerance)
-            return (st.comm, st.sigma, st.iters, st.dq_sum,
+            resync = getattr(scanner, "resync_comm", None)
+            comm_out = st.comm if resync is None else resync(st.comm)
+            return (comm_out, st.sigma, st.iters, st.dq_sum,
                     st.iters * jnp.int32(gate_fraction), st.comm_fb)
 
         fn = shard_map(
@@ -525,6 +798,7 @@ def make_distributed_refine(
     gate_fraction: int = 2,
     use_pruning: bool = True,
     comm_backend: str = "gather",
+    state_layout: str = "replicated",
 ):
     """Build the jit'd distributed Leiden REFINEMENT phase.
 
@@ -543,13 +817,15 @@ def make_distributed_refine(
     replicated ``(n_pad + 1,)`` bool live mask for gappy (skew-resharded)
     layouts — ``sanitize_outer`` and the singleton seed accept both.
     """
-    from repro.configs.louvain_arch import resolve_comm_backend
+    from repro.configs.louvain_arch import (resolve_comm_backend,
+                                            resolve_state_layout)
 
     edge_spec = P(axes)
     rep = P()
     sent = spec.sentinel
-    scanner_cls = COMM_SCANNERS[
-        resolve_comm_backend(comm_backend, spec.n_shards)]
+    scanner_cls = _scanner_cls(
+        resolve_comm_backend(comm_backend, spec.n_shards),
+        resolve_state_layout(state_layout, spec.n_shards))
     config = EngineConfig(max_iterations=max_iterations,
                           use_pruning=use_pruning,
                           gate_fraction=gate_fraction)
@@ -570,7 +846,9 @@ def make_distributed_refine(
                 jnp.minimum(scanner.local_ids, sent)]
             st = MoveEngine(scanner, config).run(comm0, k, frontier0,
                                                  tolerance)
-            return (st.comm, st.iters, st.dq_sum,
+            resync = getattr(scanner, "resync_comm", None)
+            comm_out = st.comm if resync is None else resync(st.comm)
+            return (comm_out, st.iters, st.dq_sum,
                     st.iters * jnp.int32(gate_fraction), st.comm_fb)
 
         fn = shard_map(
@@ -589,7 +867,7 @@ def make_distributed_refine(
 def make_tier_phases(mesh: Mesh, axes: Tuple[str, ...], *,
                      max_iterations: int = 20, gate_fraction: int = 2,
                      use_pruning: bool = True, comm_backend: str = "gather",
-                     refine: str = "none"):
+                     state_layout: str = "replicated", refine: str = "none"):
     """The capacity-ladder phase factory: ``spec -> (move, agg, refine_move)``,
     cached so every tier's phases compile once and are reused across
     passes/batches (static and streaming drivers share this ONE builder).
@@ -605,12 +883,12 @@ def make_tier_phases(mesh: Mesh, axes: Tuple[str, ...], *,
         return (make_distributed_move(
                     mesh, axes, spec_, max_iterations=max_iterations,
                     gate_fraction=gate_fraction, use_pruning=use_pruning,
-                    comm_backend=comm_backend),
+                    comm_backend=comm_backend, state_layout=state_layout),
                 make_distributed_aggregate(mesh, axes, spec_),
                 (make_distributed_refine(
                      mesh, axes, spec_, max_iterations=max_iterations,
                      gate_fraction=gate_fraction, use_pruning=use_pruning,
-                     comm_backend=comm_backend)
+                     comm_backend=comm_backend, state_layout=state_layout)
                  if refine == "leiden" else None))
 
     return phases_for
@@ -821,6 +1099,7 @@ def sharded_louvain_passes(
     phases_for=None,
     use_ladder: bool = False,
     comm_backend: str = "gather",
+    state_layout: str = "replicated",
     refine: str = "none",
     refine_move=None,
     reshard: str = "none",
@@ -852,9 +1131,10 @@ def sharded_louvain_passes(
     ownership across all shards — and only then does ``e_per_shard`` grow.
     Without a phase factory the overflow raises ``AggregationOverflow``.
 
-    ``comm_backend`` must be a CONCRETE exchange backend ("gather" |
-    "delta") matching what ``move``/``phases_for`` were built with — it is
-    used for the per-pass bytes-on-wire stats, not for routing.
+    ``comm_backend`` / ``state_layout`` must be the CONCRETE exchange
+    backend ("gather" | "delta") and state layout ("replicated" |
+    "hybrid") matching what ``move``/``phases_for`` were built with —
+    they are used for the per-pass bytes-on-wire stats, not for routing.
 
     With ``refine="leiden"`` every pass runs the constrained refinement
     sweep (``refine_move``, from ``make_distributed_refine`` /
@@ -889,9 +1169,13 @@ def sharded_louvain_passes(
     refinement it is the outer fold, not the refined dendrogram chain).
     Each stats row carries the comm-plan columns (``comm_backend``,
     ``comm_rounds``, ``comm_fallback_rounds``, ``comm_bytes``) from the
-    measured round counters + static shapes, plus the re-shard columns
-    (``reshard``, ``reshard_bytes``, ``max_shard_load_frac_before`` /
-    ``_after``) when the pass boundary re-balanced ownership.
+    measured round counters + static shapes, the state-layout columns
+    (``state_layout``, ``halo_bytes`` — the boundary-mover share of the
+    wire, ``boundary_frac`` — measured under hybrid, else None), the
+    measured pass wall-clock ``seconds`` (aggregation and re-bucket
+    included), plus the re-shard columns (``reshard``, ``reshard_bytes``,
+    ``max_shard_load_frac_before`` / ``_after``) when the pass boundary
+    re-balanced ownership.
     """
     from repro.configs.louvain_arch import (LADDER_SLACK, _pow2_at_least,
                                             plan_reshard,
@@ -925,6 +1209,7 @@ def sharded_louvain_passes(
     leiden_warm = None
     live_np = None       # None = dense prefix [0, n_live); ndarray = gappy
     for p in range(max_passes):
+        t_pass0 = time.perf_counter()
         # The live-vertex operand of the mask-aware paths: the scalar count
         # for dense-prefix layouts, the replicated bool mask after a
         # skew-aware re-shard made the layout gappy.
@@ -981,7 +1266,7 @@ def sharded_louvain_passes(
         iters_i, n_comms_i = int(iters), int(n_comms)
         rounds_i = int(rounds) + rounds_extra
         fb_i = int(fallbacks) + fb_extra
-        plan = sharded_comm_plan(spec, comm_backend)
+        plan = sharded_comm_plan(spec, comm_backend, state_layout)
         stats.append({"iterations": iters_i, "n_communities": n_report,
                       "n_vertices": n_live, "n_pad": sent,
                       "e_per_shard": spec.e_per_shard,
@@ -990,6 +1275,12 @@ def sharded_louvain_passes(
                       "comm_rounds": rounds_i,
                       "comm_fallback_rounds": fb_i,
                       "comm_bytes": phase_bytes(plan, rounds_i, fb_i),
+                      "state_layout": state_layout,
+                      "halo_bytes": plan.halo_round_bytes * rounds_i,
+                      "boundary_frac": (
+                          measure_boundary_frac(src_g, dst_g, spec, n_live)
+                          if state_layout == "hybrid" else None),
+                      "seconds": time.perf_counter() - t_pass0,
                       "refine_iterations": refine_iters_i,
                       "n_refined": n_comms_i if refine_on else None,
                       "reshard": False, "reshard_bytes": 0,
@@ -1156,6 +1447,10 @@ def sharded_louvain_passes(
             # a re-shard already wrote the LUT-remapped warm start above.
             leiden_warm = jnp.asarray(pad_membership(warm_flat, spec.n_pad))
         n_live = n_comms_i
+        # Restamp with the FULL pass wall-clock — aggregation, ladder
+        # re-buckets and skew re-shards included — so reshard="auto" can
+        # be judged against measured time, not slot counts alone.
+        stats[-1]["seconds"] = time.perf_counter() - t_pass0
         tol /= tolerance_drop
     return report_comm, n_report, stats
 
@@ -1177,6 +1472,7 @@ def distributed_louvain(
     e_per_shard: int | None = None,
     use_ladder: bool = True,
     comm_backend: str = "auto",
+    state_layout: str = "replicated",
     refine: str = "none",
     reshard: str = "none",
     pipeline_fetch: bool = False,
@@ -1193,7 +1489,12 @@ def distributed_louvain(
     (memberships unchanged; per-tier phases are built once and cached for
     the call).  ``comm_backend`` picks the per-round exchange ("gather" |
     "delta" | "auto"; auto resolves per mesh) — memberships are invariant
-    to it.  ``refine="leiden"`` enables the constrained refinement sweep
+    to it.  So is ``state_layout`` ("replicated" | "hybrid" | "auto"):
+    auto measures the partitioned layout's boundary fraction
+    (``measure_boundary_frac``) and engages the hybrid
+    partitioned-state scanners when it clears the
+    ``configs.louvain_arch`` threshold on a multi-shard mesh.
+    ``refine="leiden"`` enables the constrained refinement sweep
     between local-moving and aggregation (see ``sharded_louvain_passes``).
     ``reshard="auto"`` re-balances the coarse owner ranges by measured load
     after each aggregation (skew-aware re-sharding; a no-op on one shard
@@ -1203,18 +1504,24 @@ def distributed_louvain(
 
     Returns (membership (n,), n_communities, pass_stats list).
     """
-    from repro.configs.louvain_arch import resolve_comm_backend
+    from repro.configs.louvain_arch import (resolve_comm_backend,
+                                            resolve_state_layout)
 
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     cb = resolve_comm_backend(comm_backend, n_shards)
     src_g, dst_g, w_g, spec = partition_graph_host(
         graph, n_shards, e_per_shard=e_per_shard)
     n = int(graph.n_valid)
+    sl = resolve_state_layout(
+        state_layout, n_shards,
+        boundary_frac=(measure_boundary_frac(src_g, dst_g, spec, n)
+                       if state_layout == "auto" and n_shards > 1
+                       else None))
 
     phases_for = make_tier_phases(
         mesh, axes, max_iterations=max_iterations,
         gate_fraction=gate_fraction, use_pruning=use_pruning,
-        comm_backend=cb, refine=refine)
+        comm_backend=cb, state_layout=sl, refine=refine)
     move, agg, _ = phases_for(spec)
 
     from repro.core.louvain import pad_membership
@@ -1238,7 +1545,8 @@ def distributed_louvain(
             tolerance_drop=tolerance_drop,
             aggregation_tolerance=aggregation_tolerance,
             phases_for=phases_for, use_ladder=use_ladder, comm_backend=cb,
-            refine=refine, reshard=reshard, pipeline_fetch=pipeline_fetch)
+            state_layout=sl, refine=refine, reshard=reshard,
+            pipeline_fetch=pipeline_fetch)
     membership = np.asarray(global_comm[:n])
     return membership, int(len(np.unique(membership))), stats
 

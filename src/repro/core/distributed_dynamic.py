@@ -210,11 +210,12 @@ def _rebucket_host(src_g, dst_g, w_g, spec: ShardedGraphSpec):
 
 def _build_phases(mesh, axes, spec, config: LouvainConfig,
                   n_limit: Optional[int] = None, backend: str = "xla",
-                  comm_backend: str = "gather"):
+                  comm_backend: str = "gather",
+                  state_layout: str = "replicated"):
     move = make_distributed_move(
         mesh, axes, spec, max_iterations=config.max_iterations,
         gate_fraction=config.gate_fraction, use_pruning=config.use_pruning,
-        comm_backend=comm_backend)
+        comm_backend=comm_backend, state_layout=state_layout)
     agg = make_distributed_aggregate(mesh, axes, spec)
     apply_fn = make_sharded_batch_apply(mesh, axes, spec, n_limit, backend)
     return move, agg, apply_fn
@@ -241,6 +242,16 @@ class ShardedDynamicResult:
     #: Largest per-shard COARSE edge tier any pass ran at — the capacity
     #: tier the skew check is trying to keep down.
     coarse_e_per_max: int = 0
+    #: Resolved working-state layout ("replicated" | "hybrid") and its
+    #: accounting: boundary-mover bytes across the stream and the measured
+    #: boundary fraction of the fine partition (None under replicated).
+    state_layout: str = "replicated"
+    halo_bytes: int = 0
+    boundary_frac: Optional[float] = None
+    #: Summed per-pass wall-clock across every batch's pass loop (the
+    #: measured-time signal the reshard="auto" policy is validated
+    #: against; aggregation and re-buckets included).
+    pass_seconds_total: float = 0.0
 
     @property
     def updates_per_second(self) -> float:
@@ -250,6 +261,10 @@ class ShardedDynamicResult:
     @property
     def bytes_per_round(self) -> float:
         return self.bytes_on_wire / max(self.comm_rounds, 1)
+
+    @property
+    def halo_bytes_per_round(self) -> float:
+        return self.halo_bytes / max(self.comm_rounds, 1)
 
 
 def louvain_dynamic_sharded(
@@ -287,6 +302,11 @@ def louvain_dynamic_sharded(
     ``config.comm_backend`` the per-round exchange ("gather" | "delta" |
     "auto") — memberships are invariant to it, and the result carries the
     stream's bytes-on-wire accounting (``bytes_per_round``).
+    ``config.state_layout`` picks the working-state placement
+    ("replicated" | "hybrid" | "auto"; auto measures the fine partition's
+    boundary fraction once — memberships are invariant to this too, and
+    the result carries ``state_layout`` / ``halo_bytes_per_round`` /
+    ``boundary_frac``).
     ``config.refine="leiden"`` runs the constrained refinement sweep inside
     every batch's pass loop (see ``sharded_louvain_passes``).
     ``config.reshard="auto"`` re-balances the coarse owner ranges by
@@ -294,7 +314,9 @@ def louvain_dynamic_sharded(
     overlaps the pass loop's host convergence decision with the next
     aggregation — both change work placement, never memberships.
     """
-    from repro.configs.louvain_arch import resolve_comm_backend
+    from repro.configs.louvain_arch import (resolve_comm_backend,
+                                            resolve_state_layout)
+    from repro.core.distributed import measure_boundary_frac
 
     t_start = time.perf_counter()
     screen_mode = normalize_screening(screening)
@@ -302,6 +324,10 @@ def louvain_dynamic_sharded(
     cb = resolve_comm_backend(config.comm_backend, n_shards)
     src_g, dst_g, w_g, spec = partition_graph_host(
         graph, n_shards, n_target=graph.n_cap)
+    bfrac = (measure_boundary_frac(src_g, dst_g, spec, int(graph.n_valid))
+             if n_shards > 1 and config.state_layout != "replicated"
+             else None)
+    sl = resolve_state_layout(config.state_layout, n_shards, bfrac)
     if e_per_shard is None:
         # Default headroom: 25% slack + room for one worst-case batch (each
         # batch adds at most 2 * b_cap directed slots to a single shard).
@@ -312,7 +338,7 @@ def louvain_dynamic_sharded(
         src_g, dst_g, w_g = _rebucket_host(src_g, dst_g, w_g, spec)
     n_limit = graph.n_cap   # logical vertex capacity (n_pad may exceed it)
     move, agg, apply_fn = _build_phases(mesh, axes, spec, config, n_limit,
-                                        apply_backend, cb)
+                                        apply_backend, cb, sl)
     sent = spec.sentinel
 
     # Coarse-pass ladder phases: one (move, agg) per tier layout, cached so
@@ -325,7 +351,7 @@ def louvain_dynamic_sharded(
         mesh, axes, max_iterations=config.max_iterations,
         gate_fraction=config.gate_fraction,
         use_pruning=config.use_pruning, comm_backend=cb,
-        refine=config.refine)
+        state_layout=sl, refine=config.refine)
 
     pass_kw = dict(
         max_passes=config.max_passes,
@@ -338,9 +364,10 @@ def louvain_dynamic_sharded(
     touched_counts: List[jax.Array] = []
     frontier_sizes: List[jax.Array] = []
     n_regrows = 0
-    comm_rounds = comm_fb = comm_bytes = 0
+    comm_rounds = comm_fb = comm_bytes = halo_bytes = 0
     reshard_passes = reshard_bytes_total = coarse_e_max = 0
     load_frac_before = load_frac_after = None
+    pass_seconds = 0.0
 
     def _grow_to(e_per_new: int):
         """Re-bucket the resident fine arrays into grown capacity and
@@ -349,7 +376,7 @@ def louvain_dynamic_sharded(
         spec = spec._replace(e_per_shard=int(e_per_new))
         src_g, dst_g, w_g = _rebucket_host(src_g, dst_g, w_g, spec)
         move, agg, apply_fn = _build_phases(mesh, axes, spec, config,
-                                            n_limit, apply_backend, cb)
+                                            n_limit, apply_backend, cb, sl)
         n_regrows += 1
 
     def _run_passes(n_live_, **kw):
@@ -360,16 +387,18 @@ def louvain_dynamic_sharded(
         locally in-flight — the resident fine arrays are untouched."""
         nonlocal comm_rounds, comm_fb, comm_bytes, reshard_passes, \
             reshard_bytes_total, coarse_e_max, load_frac_before, \
-            load_frac_after
+            load_frac_after, halo_bytes, pass_seconds
         gc, nc, pstats = sharded_louvain_passes(
             src_g, dst_g, w_g, spec, move, agg, n_live_,
             phases_for=phases_for, use_ladder=config.use_ladder,
-            comm_backend=cb, refine=config.refine,
+            comm_backend=cb, state_layout=sl, refine=config.refine,
             reshard=config.reshard, pipeline_fetch=config.pipeline_fetch,
             **kw, **pass_kw)
         comm_rounds += sum(r["comm_rounds"] for r in pstats)
         comm_fb += sum(r["comm_fallback_rounds"] for r in pstats)
         comm_bytes += sum(r["comm_bytes"] for r in pstats)
+        halo_bytes += sum(r.get("halo_bytes", 0) for r in pstats)
+        pass_seconds += sum(r.get("seconds", 0.0) for r in pstats)
         for r in pstats[1:]:   # coarse tiers only (row 0 is the fine pass)
             coarse_e_max = max(coarse_e_max, r["e_per_shard"])
         for r in pstats:
@@ -460,4 +489,8 @@ def louvain_dynamic_sharded(
         max_shard_load_frac_before=load_frac_before,
         max_shard_load_frac_after=load_frac_after,
         coarse_e_per_max=coarse_e_max,
+        state_layout=sl,
+        halo_bytes=halo_bytes,
+        boundary_frac=bfrac,
+        pass_seconds_total=pass_seconds,
     )

@@ -427,7 +427,7 @@ class ConstrainedScanner:
         self._outer_l = self.outer[jnp.minimum(self.local_ids, self.sentinel)]
         # Backends with their own exchange keep it: the engine probes via
         # getattr, so only mirror the hooks the inner actually has.
-        for hook in ("community_sizes", "exchange_round"):
+        for hook in ("community_sizes", "exchange_round", "resync_comm"):
             fn = getattr(inner, hook, None)
             if fn is not None:
                 setattr(self, hook, fn)

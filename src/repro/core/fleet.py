@@ -68,11 +68,13 @@ from jax.sharding import Mesh
 
 from repro.configs.louvain_arch import (FleetEnvelope, fleet_envelope,
                                         fleet_v_per_shard, migrate_envelope,
-                                        resolve_comm_backend)
+                                        resolve_comm_backend,
+                                        resolve_state_layout)
 from repro.core.delta import EdgeBatch
 from repro.core.distributed import (ShardedGraphSpec, _rebucket_live_host,
                                     _vertex_k, _warm_comm_sigma,
                                     make_distributed_move, make_tier_phases,
+                                    measure_boundary_frac,
                                     partition_graph_host, replicated_renumber,
                                     sentinel_forced_membership,
                                     sharded_comm_plan, sharded_louvain_passes)
@@ -95,7 +97,7 @@ def _make_fleet_step(mesh: Mesh, axes: Tuple[str, ...],
                      screen_mode: Optional[str], tolerance: float,
                      max_iterations: int, gate_fraction: int,
                      use_pruning: bool, comm_backend: str,
-                     apply_backend: str):
+                     apply_backend: str, state_layout: str = "replicated"):
     """Build the fused per-bucket step: ``jit(vmap(`` solo pass 0 ``))``.
 
     Lane signature (vmapped over axis 0 of every operand)::
@@ -122,7 +124,7 @@ def _make_fleet_step(mesh: Mesh, axes: Tuple[str, ...],
     move = make_distributed_move(
         mesh, axes, spec, max_iterations=max_iterations,
         gate_fraction=gate_fraction, use_pruning=use_pruning,
-        comm_backend=comm_backend)
+        comm_backend=comm_backend, state_layout=state_layout)
     tol = jnp.float32(tolerance)
 
     def lane(src_g, dst_g, w_g, mem, n_valid, n_limit,
@@ -173,18 +175,23 @@ class _Tenant:
     stats: List[PassStats] = dataclasses.field(default_factory=list)
     migrations: List[dict] = dataclasses.field(default_factory=list)
     n_fallbacks: int = 0
+    #: Boundary fraction of the admitted partition — drives the per-bucket
+    #: state_layout="auto" resolution (worst lane wins).
+    boundary_frac: Optional[float] = None
 
 
 class _Bucket:
     """One capacity envelope's stacked lanes during a serve call."""
 
     def __init__(self, env: FleetEnvelope, spec: ShardedGraphSpec,
-                 tenants: List[_Tenant]):
+                 tenants: List[_Tenant],
+                 state_layout: str = "replicated"):
         self.env = env
         self.spec = spec
         self.lanes: List[_Tenant] = list(tenants)
         self.frozen: set = set()     # lane indices migrated away
         self.touched_frac: Optional[float] = None   # last validated max
+        self.state_layout = state_layout   # resolved for this bucket
         self.state = (
             jnp.stack([t.src for t in self.lanes]),
             jnp.stack([t.dst for t in self.lanes]),
@@ -242,10 +249,22 @@ class FleetResult:
     #: Envelope -> tenant ids, the bucket layout at the END of the serve.
     buckets: Dict[FleetEnvelope, List[str]] = dataclasses.field(
         default_factory=dict)
+    #: Per-bucket resolved working-state layout; ``state_layout`` is the
+    #: fleet-level summary ("mixed" when buckets disagree under "auto").
+    bucket_layouts: Dict[FleetEnvelope, str] = dataclasses.field(
+        default_factory=dict)
+    state_layout: str = "replicated"
+    halo_bytes: int = 0         # boundary-mover share of bytes_on_wire
+    #: Worst admitted boundary fraction across the served tenants.
+    boundary_frac: Optional[float] = None
 
     @property
     def bytes_per_dispatch(self) -> float:
         return self.bytes_on_wire / max(self.n_dispatches, 1)
+
+    @property
+    def halo_bytes_per_round(self) -> float:
+        return self.halo_bytes / max(self.comm_rounds, 1)
 
 
 class FleetRouter:
@@ -280,11 +299,19 @@ class FleetRouter:
                                                  self.n_shards)
         self.apply_backend = apply_backend
         self.tenants: Dict[str, _Tenant] = {}
-        self._tier_factory = make_tier_phases(
-            mesh, self.axes, max_iterations=config.max_iterations,
-            gate_fraction=config.gate_fraction,
-            use_pruning=config.use_pruning, comm_backend=self.comm_backend,
-            refine="none")
+
+        # Tier factories per working-state layout: layouts resolve PER
+        # BUCKET (config "auto" + each bucket's worst admitted boundary
+        # fraction), and make_tier_phases is cached, so asking for both
+        # layouts costs nothing until a bucket actually uses one.
+        def _tiers(state_layout: str):
+            return make_tier_phases(
+                mesh, self.axes, max_iterations=config.max_iterations,
+                gate_fraction=config.gate_fraction,
+                use_pruning=config.use_pruning,
+                comm_backend=self.comm_backend,
+                state_layout=state_layout, refine="none")
+        self._tiers = _tiers
         self._pass_kw = dict(
             max_passes=config.max_passes,
             initial_tolerance=config.initial_tolerance,
@@ -322,31 +349,40 @@ class FleetRouter:
             e_per_shard=env.e_per_shard)
         assert spec2 == spec, (spec2, spec)
         n_live = int(graph.n_valid)
+        bfrac = measure_boundary_frac(src_g, dst_g, spec, n_live)
         if prev is None:
             with self.mesh:
-                mem, _, _ = self._run_solo_passes(spec, src_g, dst_g, w_g,
-                                                  n_live)
+                mem, _, _ = self._run_solo_passes(
+                    spec, src_g, dst_g, w_g, n_live,
+                    state_layout=resolve_state_layout(
+                        self.config.state_layout, self.n_shards, bfrac))
         else:
             mem = jnp.asarray(pad_membership(
                 np.asarray(prev, np.int32)[: spec.n_pad], spec.n_pad))
         self.tenants[tid] = _Tenant(tid=tid, n_cap=graph.n_cap, env=env,
                                     src=src_g, dst=dst_g, w=w_g, mem=mem,
-                                    n_valid=n_live)
+                                    n_valid=n_live, boundary_frac=bfrac)
         return env
 
     def _run_solo_passes(self, spec, src_g, dst_g, w_g, n_live,
-                         init_membership=None, init_frontier=None):
+                         init_membership=None, init_frontier=None,
+                         state_layout: Optional[str] = None):
         """The solo pass loop at this router's knobs — admission cold
         starts, non-converged-lane fallbacks and migration replays all go
         through here so they are the SAME computation the solo driver
-        runs."""
-        move, agg, _ = self._tier_factory(spec)
+        runs.  ``state_layout`` is the caller's resolved per-bucket (or
+        per-admission) layout; memberships are invariant to it."""
+        layout = (state_layout if state_layout is not None
+                  else resolve_state_layout(self.config.state_layout,
+                                            self.n_shards))
+        tiers = self._tiers(layout)
+        move, agg, _ = tiers(spec)
         gc, nc, pstats = sharded_louvain_passes(
             src_g, dst_g, w_g, spec, move, agg, n_live,
             init_membership=init_membership, init_frontier=init_frontier,
-            phases_for=self._tier_factory, use_ladder=self.config.use_ladder,
-            comm_backend=self.comm_backend, refine="none",
-            reshard=self.config.reshard,
+            phases_for=tiers, use_ladder=self.config.use_ladder,
+            comm_backend=self.comm_backend, state_layout=layout,
+            refine="none", reshard=self.config.reshard,
             pipeline_fetch=self.config.pipeline_fetch, **self._pass_kw)
         return sentinel_forced_membership(gc, n_live, spec.n_pad), nc, pstats
 
@@ -362,13 +398,21 @@ class FleetRouter:
         n_steps = max((len(s) for s in streams.values()), default=0)
 
         self._n_dispatches = self._n_fallbacks = self._n_migrations = 0
-        self._bytes = self._rounds = 0
+        self._bytes = self._rounds = self._halo = 0
         by_env: Dict[FleetEnvelope, List[_Tenant]] = {}
         for tid in streams:
             ten = self.tenants[tid]
             by_env.setdefault(ten.env, []).append(ten)
+        # Layout per bucket: "auto" takes the WORST admitted boundary
+        # fraction over the bucket's lanes, so hybrid engages only when
+        # every cohabitant tenant is interior-dominated.
         self._buckets = [
-            _Bucket(env, _fleet_spec(env, self.n_shards), tenants)
+            _Bucket(env, _fleet_spec(env, self.n_shards), tenants,
+                    resolve_state_layout(
+                        self.config.state_layout, self.n_shards,
+                        max((t.boundary_frac for t in tenants
+                             if t.boundary_frac is not None),
+                            default=None)))
             for env, tenants in by_env.items()]
 
         with self.mesh:
@@ -401,6 +445,15 @@ class FleetRouter:
         buckets_out = {B.env: [t.tid for i, t in enumerate(B.lanes)
                                if i not in B.frozen]
                        for B in self._buckets}
+        layouts_out = {B.env: B.state_layout for B in self._buckets
+                       if buckets_out.get(B.env)}
+        layout_set = set(layouts_out.values())
+        summary_layout = (layout_set.pop() if len(layout_set) == 1
+                          else "mixed" if layout_set
+                          else resolve_state_layout(
+                              self.config.state_layout, self.n_shards))
+        fracs = [self.tenants[tid].boundary_frac for tid in streams
+                 if self.tenants[tid].boundary_frac is not None]
         self._buckets = []
         return FleetResult(
             membership=membership,
@@ -414,6 +467,10 @@ class FleetRouter:
             comm_rounds=self._rounds,
             comm_backend=self.comm_backend,
             buckets={env: tids for env, tids in buckets_out.items() if tids},
+            bucket_layouts=layouts_out,
+            state_layout=summary_layout,
+            halo_bytes=self._halo,
+            boundary_frac=max(fracs) if fracs else None,
         )
 
     def _dispatch(self, B: _Bucket, t: int, streams) -> _Pending:
@@ -447,7 +504,7 @@ class FleetRouter:
             self.mesh, self.axes, B.spec, bc, mode,
             float(cfg.initial_tolerance), cfg.max_iterations,
             cfg.gate_fraction, cfg.use_pruning, self.comm_backend,
-            self.apply_backend)
+            self.apply_backend, B.state_layout)
         t0 = time.perf_counter()
         pre = B.state
         state, frontier, scalars = fused(
@@ -485,10 +542,12 @@ class FleetRouter:
             # Comm accounting: the batched collectives ship EVERY lane's
             # payload for the max rounds any lane ran (converged lanes ride
             # along) — price the true wire cost, not the per-lane solo sum.
-            plan = sharded_comm_plan(spec, self.comm_backend)
+            plan = sharded_comm_plan(spec, self.comm_backend,
+                                     B.state_layout)
             r_exec = max(int(rounds[i]) for i in active)
             fb_exec = max(int(fallbacks[i]) for i in active)
             self._bytes += len(B.lanes) * phase_bytes(plan, r_exec, fb_exec)
+            self._halo += len(B.lanes) * plan.halo_round_bytes * r_exec
             self._rounds += r_exec
             # Worst touched fraction over the bucket: drives the NEXT
             # dispatch's host-side "auto" screening resolution.
@@ -532,12 +591,15 @@ class FleetRouter:
                 frontier_i = (p.frontier[i] if p.mode is not None else None)
                 mem_i, nc_i, pstats = self._run_solo_passes(
                     spec, p.post[0][i], p.post[1][i], p.post[2][i], nv_i,
-                    init_membership=p.pre[3][i], init_frontier=frontier_i)
+                    init_membership=p.pre[3][i], init_frontier=frontier_i,
+                    state_layout=B.state_layout)
                 patched[3] = patched[3].at[i].set(mem_i)
                 ten.n_fallbacks += 1
                 self._n_fallbacks += 1
                 self._rounds += sum(r["comm_rounds"] for r in pstats[1:])
                 self._bytes += sum(r["comm_bytes"] for r in pstats[1:])
+                self._halo += sum(r.get("halo_bytes", 0)
+                                  for r in pstats[1:])
                 stat = dataclasses.replace(
                     stat, iterations=sum(r["iterations"] for r in pstats),
                     n_communities=nc_i)
@@ -599,9 +661,11 @@ class FleetRouter:
         n_live = int(nv2)
         mem2, nc, pstats = self._run_solo_passes(
             spec_new, src2, dst2, w2, n_live,
-            init_membership=mem_pre, init_frontier=frontier)
+            init_membership=mem_pre, init_frontier=frontier,
+            state_layout=B.state_layout)
         self._rounds += sum(r["comm_rounds"] for r in pstats)
         self._bytes += sum(r["comm_bytes"] for r in pstats)
+        self._halo += sum(r.get("halo_bytes", 0) for r in pstats)
         ten.stats.append(PassStats(
             iterations=sum(r["iterations"] for r in pstats),
             n_communities=nc, n_vertices=n_live,
@@ -638,6 +702,7 @@ class FleetRouter:
         dest.lanes = [ten]
         dest.frozen = set()
         dest.touched_frac = B.touched_frac
+        dest.state_layout = B.state_layout
         dest.state = (jnp.stack([src2]), jnp.stack([dst2]),
                       jnp.stack([w2]), jnp.stack([mem2]),
                       jnp.asarray([n_live], jnp.int32))

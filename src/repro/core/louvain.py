@@ -112,6 +112,20 @@ class LouvainConfig:
     #: Dispatch order only — memberships are identical (pinned in
     #: tests/test_engine_equiv.py); single-device drivers ignore it.
     pipeline_fetch: bool = False
+    #: Sharded working-state placement ("replicated" | "hybrid" | "auto"):
+    #: replicated keeps the full (n_pad + 1,) membership/Sigma/sizes on
+    #: every shard; hybrid keeps per-vertex state OWNER-PARTITIONED and
+    #: exchanges only boundary-mover labels + touched-community deltas
+    #: per round (repro.core.distributed.HybridShardedScanner), with one
+    #: membership resync per phase.  "auto" measures the partitioned
+    #: layout's boundary fraction and engages hybrid below the
+    #: configs.louvain_arch.HYBRID_BOUNDARY_FRAC_MAX threshold on
+    #: multi-shard meshes.  Single-device drivers ignore it; memberships
+    #: are invariant to it (pinned bit-for-bit in
+    #: tests/test_engine_equiv.py).  Default "replicated" keeps every
+    #: committed golden/bench artifact's comm history bit-for-bit.
+    #: Policy: configs.louvain_arch.resolve_state_layout.
+    state_layout: str = "replicated"
 
 
 @dataclasses.dataclass

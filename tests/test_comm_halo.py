@@ -1,0 +1,257 @@
+"""Property tests for the hybrid state-layout halo primitives.
+
+The hybrid layout (state_layout="hybrid") keeps per-vertex working state
+owner-partitioned and exchanges only boundary-mover labels plus aggregated
+touched-community deltas per round.  Everything it stands on is pure jnp /
+numpy on one shard's arrays, so — like tests/test_comm_delta.py — the whole
+layer is testable without a mesh: the boundary (halo) mask over empty, full
+and padded layouts; the symmetric-placement freshness invariant the
+exchange's soundness rests on; invariance of the boundary structure under
+the monotone re-shard relabel; and exact byte accounting of the hybrid
+CommPlan against phase_bytes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.comm import (boundary_mask, comm_plan, label_bits,
+                             packed_lanes, phase_bytes, size_delta_width)
+from repro.core.distributed import (ShardedGraphSpec, _reshard_relabel,
+                                    measure_boundary_frac,
+                                    sharded_comm_plan)
+
+
+def _shard_slots(src, dst, s, v_per, sent, e_per):
+    """One shard's directed slot arrays under symmetric placement: every
+    edge (u, v) yields slot (u, v) on owner(u) AND (v, u) on owner(v)."""
+    su = np.concatenate([src, dst])
+    sv = np.concatenate([dst, src])
+    own = su // v_per == s
+    sl_s = np.full(e_per, sent, np.int32)
+    sl_d = np.full(e_per, sent, np.int32)
+    k = int(own.sum())
+    sl_s[:k], sl_d[:k] = su[own], sv[own]
+    return jnp.asarray(sl_s), jnp.asarray(sl_d)
+
+
+# -- boundary mask: empty / full / padded ------------------------------------
+
+
+def test_boundary_mask_empty_all_local():
+    """A shard whose every live slot stays inside its owner range has an
+    empty halo — nothing to publish, zero per-round label bytes."""
+    v_per, sent = 8, 32
+    src = jnp.asarray([0, 1, 2, 5], jnp.int32)
+    dst = jnp.asarray([1, 0, 5, 2], jnp.int32)
+    m = boundary_mask(src, dst, 0, v_per, sent)
+    assert m.shape == (v_per,)
+    assert not bool(m.any())
+
+
+def test_boundary_mask_empty_all_dead():
+    """All-sentinel slots (a fully padded shard) publish nothing."""
+    v_per, sent = 8, 32
+    s = jnp.full((6,), sent, jnp.int32)
+    assert not bool(boundary_mask(s, s, 8, v_per, sent).any())
+
+
+def test_boundary_mask_full():
+    """Every owned vertex with a live remote slot is boundary — a shard
+    whose every vertex talks across the cut replicates its whole slice."""
+    v_per, sent = 4, 16
+    v0 = 4
+    src = jnp.asarray([4, 5, 6, 7], jnp.int32)
+    dst = jnp.asarray([0, 6, 12, 1], jnp.int32)   # 6 is local; rest remote
+    m = np.asarray(boundary_mask(src, dst, v0, v_per, sent))
+    assert np.array_equal(m, [True, False, True, True])
+
+
+def test_boundary_mask_excludes_padding_and_dead_slots():
+    """Vertices at or beyond the sentinel never enter the halo, and a dead
+    slot (src or dst == sent) never flags its vertex."""
+    v_per, sent = 4, 6                      # owned range [4, 8) but sent=6
+    src = jnp.asarray([4, 5, 5, sent], jnp.int32)
+    dst = jnp.asarray([0, sent, 1, 0], jnp.int32)
+    m = np.asarray(boundary_mask(src, dst, 4, v_per, sent))
+    # 4 remote-live -> True; 5's only live slot is remote -> True; 6, 7 are
+    # padding (>= sent) -> False regardless.
+    assert np.array_equal(m, [True, True, False, False])
+
+
+def test_boundary_mask_matches_measured_fraction():
+    """boundary_mask (device, per shard) and measure_boundary_frac (host,
+    global) count the same vertices on a random symmetric layout."""
+    rng = np.random.default_rng(5)
+    S, v_per = 4, 16
+    n = S * v_per
+    spec = ShardedGraphSpec(S, v_per, 256, n)
+    src = rng.integers(0, n, 80).astype(np.int32)
+    dst = ((src + 1 + rng.integers(0, n - 1, 80)) % n).astype(np.int32)
+    n_bnd = 0
+    for s in range(S):
+        sl_s, sl_d = _shard_slots(src, dst, s, v_per, spec.sentinel, 256)
+        n_bnd += int(np.asarray(
+            boundary_mask(sl_s, sl_d, s * v_per, v_per,
+                          spec.sentinel)).sum())
+    su = np.concatenate([src, dst])
+    n_live = int(np.unique(su).size)
+    got = measure_boundary_frac(
+        jnp.concatenate([jnp.asarray(src), jnp.asarray(dst)]),
+        jnp.concatenate([jnp.asarray(dst), jnp.asarray(src)]), spec)
+    assert got == pytest.approx(n_bnd / n_live)
+
+
+def test_symmetric_placement_freshness_invariant():
+    """The soundness keystone of the hybrid exchange: any remote dst some
+    shard reads is flagged boundary by its OWNER's mask — so publishing
+    only boundary movers keeps every cross-shard read fresh."""
+    rng = np.random.default_rng(11)
+    S, v_per = 4, 16
+    n = S * v_per
+    sent = n
+    src = rng.integers(0, n, 120).astype(np.int32)
+    dst = ((src + 1 + rng.integers(0, n - 1, 120)) % n).astype(np.int32)
+    masks = [np.asarray(boundary_mask(
+        *_shard_slots(src, dst, s, v_per, sent, 300), s * v_per, v_per,
+        sent)) for s in range(S)]
+    for s in range(S):
+        sl_s, sl_d = (np.asarray(a) for a in
+                      _shard_slots(src, dst, s, v_per, sent, 300))
+        live = (sl_s < sent) & (sl_d < sent)
+        for d in np.unique(sl_d[live & (sl_d // v_per != s)]):
+            o = d // v_per
+            assert masks[o][d - o * v_per], (s, int(d))
+
+
+# -- invariance under the monotone re-shard relabel --------------------------
+
+
+def test_reshard_relabel_identity_bounds_preserve_boundary():
+    """Uniform bounds (the layout the pass already has) produce the
+    identity LUT on live ids — the halo mask is bit-identical through it."""
+    rng = np.random.default_rng(3)
+    S, v_per = 4, 8
+    n = S * v_per
+    bounds = np.arange(S + 1) * v_per
+    lut = _reshard_relabel(bounds, v_per, n, n)
+    assert np.array_equal(lut[:n], np.arange(n))
+    src = rng.integers(0, n, 40).astype(np.int32)
+    dst = ((src + 1 + rng.integers(0, n - 1, 40)) % n).astype(np.int32)
+    for s in range(S):
+        sl_s, sl_d = _shard_slots(src, dst, s, v_per, n, 100)
+        a = boundary_mask(sl_s, sl_d, s * v_per, v_per, n)
+        b = boundary_mask(jnp.asarray(lut)[sl_s], jnp.asarray(lut)[sl_d],
+                          s * v_per, v_per, n)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reshard_relabel_boundary_consistent_with_plan_owners():
+    """A skewed split moves ids, never edges: after relabelling both
+    endpoints through the monotone LUT, the per-shard halo masks flag
+    EXACTLY the vertices whose plan owner differs from some neighbour's —
+    the boundary structure is derivable from the bounds alone."""
+    rng = np.random.default_rng(7)
+    n_live, v_per = 24, 16
+    bounds = np.asarray([0, 5, 14, 24])           # 3 skewed owner ranges
+    S = len(bounds) - 1
+    n_pad = S * v_per
+    lut = _reshard_relabel(bounds, v_per, n_pad, n_live)
+    assert np.all(np.diff(lut[:n_live]) > 0)      # strictly increasing
+    src = rng.integers(0, n_live, 60).astype(np.int32)
+    dst = ((src + 1 + rng.integers(0, n_live - 1, 60)) % n_live
+           ).astype(np.int32)
+    owner = np.searchsorted(bounds, np.arange(n_live), side="right") - 1
+    expect = set()
+    for u, v in zip(src, dst):
+        if owner[u] != owner[v]:
+            expect.add(int(lut[u]))
+            expect.add(int(lut[v]))
+    rs, rd = lut[src].astype(np.int32), lut[dst].astype(np.int32)
+    got = set()
+    for s in range(S):
+        sl_s, sl_d = _shard_slots(rs, rd, s, v_per, n_pad, 200)
+        m = np.asarray(boundary_mask(sl_s, sl_d, s * v_per, v_per, n_pad))
+        got |= {s * v_per + i for i in np.flatnonzero(m)}
+    assert got == expect
+
+
+# -- exact byte accounting ---------------------------------------------------
+
+
+def _hybrid_lanes(v_per, n_pad, move_cap, touched_cap):
+    iw, lw = label_bits(v_per + 1), label_bits(n_pad + 1)
+    if iw + lw <= 31:
+        mover = packed_lanes(move_cap, iw + lw)
+    else:
+        mover = packed_lanes(move_cap, iw) + packed_lanes(move_cap, lw)
+    tid = packed_lanes(touched_cap, lw)
+    siz = packed_lanes(touched_cap, size_delta_width(v_per))
+    return mover, tid, siz
+
+
+def test_hybrid_plan_prices_exact_wire_lanes():
+    """The hybrid round price is EXACTLY the wire the scanner builds:
+    a 12-byte header + 4 bytes per packed mover/tid/Sigma/size lane,
+    summed over shards — recomputed here lane by lane from the public
+    packing primitives."""
+    S, v_per, n_pad, mcap, tcap = 8, 64, 512, 16, 32
+    p = comm_plan("delta", S, v_per, n_pad, mcap, state_layout="hybrid",
+                  touched_cap=tcap)
+    mover, tid, siz = _hybrid_lanes(v_per, n_pad, mcap, tcap)
+    assert p.round_bytes == S * (12 + 4 * (mover + tid + tcap + siz))
+    assert p.halo_round_bytes == S * 4 * mover
+    assert p.phase_fixed_bytes == S * v_per * 4
+    # delta-flavor fallback: the wire has travelled, then the dense resync
+    # (owned comm slice + moved mask + two dense psums) rides on top.
+    assert p.fallback_bytes == (p.round_bytes
+                                + S * (v_per * 4 + v_per
+                                       + 2 * (n_pad + 1) * 4))
+
+
+def test_hybrid_gather_flavor_is_overflow_free():
+    """Under the gather backend the caps are the worst case (v_per /
+    2*v_per): no round can overflow, so fallback == round."""
+    S, v_per, n_pad = 4, 32, 128
+    p = comm_plan("gather", S, v_per, n_pad, 5, state_layout="hybrid",
+                  touched_cap=7)                  # caps are overridden
+    assert (p.move_cap, p.touched_cap) == (v_per, 2 * v_per)
+    assert p.fallback_bytes == p.round_bytes
+    mover, tid, siz = _hybrid_lanes(v_per, n_pad, v_per, 2 * v_per)
+    assert p.round_bytes == S * (12 + 4 * (mover + tid + 2 * v_per + siz))
+
+
+def test_phase_bytes_adds_hybrid_resync_once_per_phase():
+    """The end-of-phase membership resync is priced ONCE per phase that
+    ran at least one round — never per round, never on an empty phase."""
+    p = comm_plan("delta", 2, 16, 32, 4, state_layout="hybrid",
+                  touched_cap=8)
+    assert p.phase_fixed_bytes > 0
+    assert phase_bytes(p, 0) == 0
+    assert phase_bytes(p, 1) == p.round_bytes + p.phase_fixed_bytes
+    assert (phase_bytes(p, 5, 2)
+            == 3 * p.round_bytes + 2 * p.fallback_bytes
+            + p.phase_fixed_bytes)
+    # replicated plans have no fixed term — the accounting is unchanged.
+    r = comm_plan("delta", 2, 16, 32, 4)
+    assert r.phase_fixed_bytes == 0
+    assert phase_bytes(r, 5, 2) == 3 * r.round_bytes + 2 * r.fallback_bytes
+
+
+def test_sharded_hybrid_plan_beats_replicated_gather_at_8_shards():
+    """The acceptance ratio at plan level, mirroring the delta-vs-gather
+    pin in test_comm_delta.py: on an 8-shard layout a hybrid-gather round
+    (worst-case caps!) plus its amortised resync is still far below a
+    replicated gather round's dense O(n_pad) psums."""
+    spec = ShardedGraphSpec(8, 64, 256, 512)
+    rep = sharded_comm_plan(spec, "gather")
+    hyb = sharded_comm_plan(spec, "gather", "hybrid")
+    assert hyb.state_layout == "hybrid" and rep.state_layout == "replicated"
+    assert rep.round_bytes >= 2 * hyb.round_bytes
+    # even a one-round phase (fixed resync fully unamortised) wins.
+    assert phase_bytes(rep, 1) > phase_bytes(hyb, 1)
+
+
+def test_comm_plan_rejects_unknown_layout():
+    with pytest.raises(ValueError):
+        comm_plan("gather", 2, 16, 32, state_layout="partitioned")

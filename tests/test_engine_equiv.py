@@ -253,6 +253,91 @@ def test_sharded_dynamic_stream_delta_bit_for_bit(gold):
     assert res.bytes_on_wire > 0
 
 
+# -- the state-layout matrix: the hybrid owner-partitioned layout is a
+# data-placement optimization, not a semantics change.
+#
+# On one shard every vertex is owned, the boundary set is empty, and the
+# hybrid exchange reduces to the shard-local arithmetic of the replicated
+# path (identical segment sums at touched communities, untouched slots
+# unchanged), so every committed sharded golden must be reproduced element
+# for element under BOTH comm backends — static, laddered, streaming, and
+# refined.  The multi-shard parity/bytes contract lives in
+# tests/test_distributed_dynamic.py (forced-8-device subprocess).
+
+
+@pytest.mark.parametrize("backend", ["gather", "delta"])
+def test_sharded_hybrid_static_bit_for_bit(gold, corpora, backend):
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, stats = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                        comm_backend=backend,
+                                        state_layout="hybrid")
+    assert np.array_equal(mem, gold["sharded__sbm"])
+    assert all(r["state_layout"] == "hybrid" for r in stats)
+
+
+@pytest.mark.parametrize("ladder", [True, pytest.param(False, marks=_slow)])
+def test_sharded_hybrid_ladder_bit_for_bit(gold, corpora, ladder):
+    """The hybrid exchange composes with the coarse-pass capacity ladder:
+    per-tier caps, lane widths and boundary masks change, memberships must
+    not."""
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                    use_ladder=ladder, comm_backend="gather",
+                                    state_layout="hybrid")
+    assert np.array_equal(mem, gold["sharded__sbm"])
+
+
+def test_sharded_static_auto_layout_bit_for_bit(gold, corpora):
+    """state_layout="auto" on one shard must resolve to replicated (no
+    boundary measurement can justify partitioning a 1-shard mesh) and stay
+    on the goldens."""
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, stats = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                        state_layout="auto")
+    assert np.array_equal(mem, gold["sharded__sbm"])
+    assert all(r["state_layout"] == "replicated" for r in stats)
+
+
+@pytest.mark.parametrize("backend", ["gather", pytest.param(
+    "delta", marks=_slow)])
+def test_sharded_dynamic_stream_hybrid_bit_for_bit(gold, backend):
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    res = louvain_dynamic_sharded(
+        init, mesh, ("shard",), batches,
+        config=LouvainConfig(comm_backend=backend, state_layout="hybrid"))
+    assert np.array_equal(res.membership,
+                          gold["sharded_dynamic__sbm_stream"])
+    assert res.state_layout == "hybrid"
+    assert res.halo_bytes > 0 and res.comm_rounds > 0
+
+
+def test_sharded_hybrid_leiden_bit_for_bit(gold, corpora):
+    """Refinement composes with the hybrid layout — the constrained sweep
+    mirrors resync_comm through the same scanner protocol."""
+    mesh = make_mesh((1,), ("shard",))
+    mem, _, _ = distributed_louvain(corpora["sbm"], mesh, ("shard",),
+                                    refine="leiden", state_layout="hybrid")
+    assert np.array_equal(mem, gold["sharded_leiden__sbm"])
+
+
+def test_fleet_hybrid_tenants_bit_for_bit(gold):
+    """Fleet tenants served under the hybrid layout land on the committed
+    sharded-dynamic golden — the per-bucket layout changes data placement,
+    never results."""
+    from repro.core.fleet import serve_fleet
+
+    init, batches = capture.dynamic_stream()
+    mesh = make_mesh((1,), ("shard",))
+    res = serve_fleet({"a": init, "b": init}, {"a": batches, "b": batches},
+                      mesh, ("shard",), screening="community",
+                      config=LouvainConfig(state_layout="hybrid"))
+    for tid in ("a", "b"):
+        assert np.array_equal(res.membership[tid],
+                              gold["sharded_dynamic__sbm_stream"]), tid
+    assert res.state_layout == "hybrid" and res.halo_bytes > 0
+
+
 # -- the re-shard / pipelined-fetch matrix: skew-aware re-sharding moves
 # data, never labels, and the pipelined convergence fetch reorders host
 # syncs, never arithmetic — every combination must reproduce the committed
